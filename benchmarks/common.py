@@ -1,0 +1,58 @@
+"""Benchmark harness helpers.  Every benchmark prints CSV rows:
+
+    name,us_per_call,derived
+
+where ``us_per_call`` is the mean wall-time per FL round (or per kernel
+call) in microseconds and ``derived`` is the figure's headline quantity
+(final test accuracy for the paper figures; bandwidth for kernels).
+
+Scale via env:
+  REPRO_BENCH_ROUNDS  (default 30)  — FL rounds per run
+  REPRO_BENCH_FAST=1               — cut the grid to a representative slice
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "20"))
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def run_fl(name: str, **kw):
+    """Run one FL experiment and emit its CSV rows.
+
+    Two rows per run: final accuracy, and accuracy at the FIRST eval
+    point (``@early``) — the paper's headline claims are about
+    convergence *speed*, which the early-round accuracy captures even
+    when every algorithm saturates by the final round.
+    """
+    from repro.fl import ExperimentConfig, run_experiment
+
+    exp = ExperimentConfig(rounds=ROUNDS, eval_every=max(ROUNDS // 3, 1), **kw)
+    t0 = time.time()
+    hist = run_experiment(exp)
+    wall = time.time() - t0
+    emit(name, wall / max(exp.rounds, 1) * 1e6, f"{hist['final_accuracy']:.4f}")
+    if hist["accuracy"]:
+        emit(name + "@early", 0.0, f"{hist['accuracy'][0]:.4f}")
+    return hist
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 10) -> float:
+    """Returns mean seconds per call (after block_until_ready)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters

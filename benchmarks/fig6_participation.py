@@ -1,0 +1,24 @@
+"""Paper Fig. 6: DRAG under different participation levels S in
+{5, 15, 25, 35} of M=40 workers (CIFAR-10)."""
+from __future__ import annotations
+
+from benchmarks.common import FAST, run_fl
+
+
+def run() -> None:
+    s_values = [5, 25] if FAST else [5, 15, 25, 35]
+    for s in s_values:
+        run_fl(
+            f"fig6/cifar10/S{s}",
+            dataset="cifar10",
+            model="cifar10_cnn",
+            beta=0.1,
+            algorithm="drag",
+            c=0.25,
+            n_selected=s,
+            seed=7,
+        )
+
+
+if __name__ == "__main__":
+    run()

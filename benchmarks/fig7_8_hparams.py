@@ -1,0 +1,29 @@
+"""Paper Figs. 7-8: sensitivity of DRAG to alpha (reference-EMA weight)
+and c (DoD coefficient) on CIFAR-10."""
+from __future__ import annotations
+
+from benchmarks.common import FAST, run_fl
+
+ALPHAS = [0.01, 0.1, 0.25, 0.5]
+CS = [0.01, 0.1, 0.25, 0.75]
+
+
+def run() -> None:
+    alphas = [0.01, 0.25] if FAST else ALPHAS
+    cs = [0.01, 0.25] if FAST else CS
+    for a in alphas:
+        run_fl(
+            f"fig7/alpha{a}",
+            dataset="cifar10", model="cifar10_cnn", beta=0.1,
+            algorithm="drag", alpha=a, c=0.25, seed=7,
+        )
+    for c in cs:
+        run_fl(
+            f"fig8/c{c}",
+            dataset="cifar10", model="cifar10_cnn", beta=0.1,
+            algorithm="drag", alpha=0.25, c=c, seed=7,
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks: fused DRAG calibration vs the unfused jnp
+reference across (S, d) scales.  On CPU the Pallas kernels run in
+interpret mode (correctness harness); the *reference* timings measure
+the XLA-fused jnp path, and the derived column reports achieved GB/s on
+the 2-pass traffic model — the quantity the TPU kernel targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, timeit
+from repro.kernels import ref
+
+SIZES = [(8, 1 << 16), (16, 1 << 18), (32, 1 << 20)]
+
+
+def run() -> None:
+    sizes = SIZES[:2] if FAST else SIZES
+    key = jax.random.PRNGKey(0)
+    for s, d in sizes:
+        g = jax.random.normal(key, (s, d), jnp.float32)
+        r = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+
+        for mode in ("drag", "br_drag"):
+            fused = jax.jit(lambda g, r: ref.drag_calibrate_ref(g, r, 0.3, mode))
+            sec = timeit(fused, g, r, iters=5)
+            bytes_moved = 2 * g.size * 4  # two passes over G (read + write)
+            emit(f"kernels/calibrate_{mode}/S{s}_d{d}", sec * 1e6,
+                 f"{bytes_moved / sec / 1e9:.2f}GB/s")
+
+        gm = jax.jit(lambda g: ref.weiszfeld_step_ref(g, jnp.mean(g, 0)))
+        sec = timeit(gm, g, iters=5)
+        emit(f"kernels/weiszfeld_step/S{s}_d{d}", sec * 1e6,
+             f"{2 * g.size * 4 / sec / 1e9:.2f}GB/s")
+
+        tm = jax.jit(lambda g: ref.trimmed_mean_ref(g, max(s // 8, 1)))
+        sec = timeit(tm, g, iters=5)
+        emit(f"kernels/trimmed_mean/S{s}_d{d}", sec * 1e6,
+             f"{g.size * 4 / sec / 1e9:.2f}GB/s")
+
+    # --- model hot-spot kernels (oracle timings + analytic kernel I/O)
+    from repro.kernels import flash_attention as fak
+    from repro.kernels import linear_recurrence as lrk
+    from repro.kernels import selective_scan as ssk
+
+    b, h, hkv, sl, dh = 1, 8, 2, (512 if FAST else 2048), 128
+    q = jax.random.normal(key, (b, h, sl, dh), jnp.bfloat16)
+    k2 = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, sl, dh), jnp.bfloat16)
+    v2 = jax.random.normal(jax.random.fold_in(key, 3), (b, hkv, sl, dh), jnp.bfloat16)
+    att = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    sec = timeit(att, q, k2, v2, iters=3)
+    naive = 4 * b * h * sl * sl  # one f32 score materialisation
+    kio = fak.io_bytes(b, h, hkv, sl, sl, dh)
+    emit(f"kernels/attention_ref/S{sl}", sec * 1e6,
+         f"score-chain>={naive/1e6:.0f}MB vs kernel-io {kio/1e6:.0f}MB")
+
+    bs, di, ds = 1, (256 if FAST else 1024), 16
+    dt = jax.nn.softplus(jax.random.normal(key, (bs, sl, di))) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 4), (bs, sl, di))
+    bm = jax.random.normal(jax.random.fold_in(key, 5), (bs, sl, ds))
+    cm = jax.random.normal(jax.random.fold_in(key, 6), (bs, sl, ds))
+    a = -jnp.exp(jnp.zeros((di, ds)))
+    scan = jax.jit(lambda *t: ref.selective_scan_ref(*t))
+    sec = timeit(scan, dt, x, bm, cm, a, iters=3)
+    emit(f"kernels/selective_scan_ref/S{sl}_di{di}", sec * 1e6,
+         f"kernel-io {ssk.io_bytes(bs, sl, di, ds)/1e6:.0f}MB")
+
+    aa = jax.nn.sigmoid(jax.random.normal(key, (bs, sl, di)))
+    gg = jax.random.normal(jax.random.fold_in(key, 7), (bs, sl, di))
+    lrec = jax.jit(ref.linear_recurrence_ref)
+    sec = timeit(lrec, aa, gg, iters=3)
+    emit(f"kernels/linear_recurrence_ref/S{sl}_w{di}", sec * 1e6,
+         f"kernel-io {lrk.io_bytes(bs, sl, di)/1e6:.0f}MB")
+
+    # interpret-mode Pallas validation timing (correctness path, not perf)
+    from repro.kernels import ops
+
+    g = jax.random.normal(key, (8, 1 << 14), jnp.float32)
+    r = jax.random.normal(key, (1 << 14,), jnp.float32)
+    sec = timeit(lambda: ops.drag_calibrate(g, r, 0.3, "drag", interpret=True), iters=2)
+    emit("kernels/pallas_interpret/calibrate_S8_d16k", sec * 1e6, "interpret-mode")
+    sec = timeit(
+        lambda: ops.flash_attention(
+            q[:, :, :256], k2[:, :, :256], v2[:, :, :256],
+            causal=True, block_q=128, block_k=128, interpret=True,
+        ),
+        iters=2,
+    )
+    emit("kernels/pallas_interpret/flash_S256", sec * 1e6, "interpret-mode")
+
+
+if __name__ == "__main__":
+    run()

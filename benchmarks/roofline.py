@@ -1,0 +1,48 @@
+"""Roofline summary (assignment deliverable (g)): reads the dry-run JSON
+artifacts in runs/dryrun/ and emits one CSV row per (arch x shape x
+mesh): the three terms, the dominant bottleneck, and the MODEL_FLOPS /
+HLO_FLOPs utilisation ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RUNS_DIR = os.environ.get("REPRO_DRYRUN_DIR", "runs/dryrun")
+
+
+def load_records(runs_dir: str = RUNS_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(runs_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline/no_dryrun_artifacts", 0.0, "run repro.launch.dryrun first")
+        return
+    for r in recs:
+        key = f"roofline/{r.get('arch')}/{r.get('shape')}/{r.get('mesh_name','?')}"
+        if "skipped" in r:
+            emit(key, 0.0, f"SKIP:{r['skipped']}")
+            continue
+        if "error" in r:
+            emit(key, 0.0, f"ERROR:{r['error'][:60]}")
+            continue
+        t = r["roofline"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        emit(
+            key,
+            step_s * 1e6,
+            f"dom={t['dominant']};c={t['compute_s']:.3f};m={t['memory_s']:.3f};"
+            f"x={t['collective_s']:.3f};mf_ratio={r.get('model_flops_ratio', 0):.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,152 @@
+"""Validate the paper's headline claims against benchmark output.
+
+    PYTHONPATH=src python -m benchmarks.validate bench_output.txt
+
+Reads the CSV rows emitted by ``benchmarks.run`` and checks the ordinal
+claims of the paper (§VI), printing a markdown section for
+EXPERIMENTS.md §Paper-validation.  Claims are checked on the EARLY
+accuracy (first eval point) where the paper's claim is about
+convergence *speed*, and on final accuracy where it is about
+robustness.
+"""
+from __future__ import annotations
+
+import sys
+from collections import defaultdict
+
+DRAG_BASELINES = ["fedavg", "fedprox", "scaffold", "fedexp", "fedacg"]
+BYZ_BASELINES = ["fedavg", "fltrust", "rfa", "raga"]
+
+
+def load(path):
+    final, early = {}, {}
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",")
+        if len(parts) != 3:
+            continue
+        name, _, derived = parts
+        try:
+            val = float(derived)
+        except ValueError:
+            continue
+        if name.endswith("@early"):
+            early[name[: -len("@early")]] = val
+        else:
+            final[name] = val
+    return final, early
+
+
+def check(desc, ok):
+    print(f"- {'PASS' if ok else '**CHECK**'}: {desc}")
+    return ok
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_output.txt"
+    final, early = load(path)
+
+    print("### Claim-by-claim validation (from `%s`)\n" % path)
+
+    # ---- Claim 1 (Figs. 3-5): DRAG converges faster than all baselines
+    print("**C1 — DRAG vs baselines (Figs. 3-5: accuracy-at-round; early "
+          "eval = convergence speed):**\n")
+    n_pass = n_tot = 0
+    for ds in ("emnist", "cifar10", "cifar100"):
+        for beta in ("0.1", "0.5"):
+            key = f"fig3_5/{ds}/beta{beta}"
+            src = early if f"{key}/drag" in early else final
+            if f"{key}/drag" not in src:
+                continue
+            d = src[f"{key}/drag"]
+            worse = [b for b in DRAG_BASELINES if src.get(f"{key}/{b}", 1.0) > d + 1e-4]
+            n_tot += 1
+            n_pass += check(
+                f"{ds} beta={beta}: DRAG early-acc {d:.3f} vs "
+                + ", ".join(f"{b} {src.get(f'{key}/{b}', float('nan')):.3f}" for b in DRAG_BASELINES)
+                + (f" — beaten by {worse}" if worse else ""),
+                not worse,
+            )
+    print(f"\n  -> {n_pass}/{n_tot} settings with DRAG fastest.\n")
+
+    # ---- Claim 2: heterogeneity gap (beta=0.1 vs 0.5, DRAG - FedAvg)
+    print("**C2 — DRAG's advantage over FedAvg grows with heterogeneity "
+          "(beta 0.5 -> 0.1):**\n")
+    for ds in ("emnist", "cifar10", "cifar100"):
+        gaps = {}
+        for beta in ("0.1", "0.5"):
+            key = f"fig3_5/{ds}/beta{beta}"
+            if f"{key}/drag" in early and f"{key}/fedavg" in early:
+                gaps[beta] = early[f"{key}/drag"] - early[f"{key}/fedavg"]
+        if len(gaps) == 2:
+            check(
+                f"{ds}: gap(beta=0.1) {gaps['0.1']:+.3f} >= gap(beta=0.5) {gaps['0.5']:+.3f}",
+                gaps["0.1"] >= gaps["0.5"] - 1e-3,
+            )
+    print()
+
+    # ---- Claim 3 (Fig. 6): more participation -> faster convergence
+    print("**C3 — participation (Fig. 6): early accuracy non-decreasing in S:**\n")
+    ss = [(int(k.split("/S")[-1]), v) for k, v in early.items() if k.startswith("fig6/")]
+    ss.sort()
+    if ss:
+        mono = all(b[1] >= a[1] - 0.05 for a, b in zip(ss, ss[1:]))
+        check("S->" + ", ".join(f"S={s}: {v:.3f}" for s, v in ss), mono)
+    print()
+
+    # ---- Claim 4 (Figs. 7-8): extreme alpha / c hurt
+    for fig, mid in (("fig7/alpha", ("0.1", "0.25")), ("fig8/c", ("0.1", "0.25"))):
+        vals = {k.split(fig)[-1]: v for k, v in early.items() if k.startswith(fig)}
+        if vals:
+            lo, hi = min(vals), max(vals)
+            best_mid = max(vals.get(m, 0.0) for m in mid)
+            print(f"**C4 — {fig}* sweep:** "
+                  + ", ".join(f"{k}={v:.3f}" for k, v in sorted(vals.items())))
+            check(
+                f"mid settings ({'/'.join(mid)}) >= extremes ({lo}, {hi})",
+                best_mid >= max(vals[lo], vals[hi]) - 1e-3,
+            )
+            print()
+
+    # ---- Claim 5 (Figs. 9-17): BR-DRAG robust at 30% and 60%
+    print("**C5 — Byzantine robustness (Figs. 9-17, final accuracy):**\n")
+    groups = defaultdict(dict)
+    for k, v in final.items():
+        if k.startswith("fig9_17/"):
+            _, ds, attack, mal, alg = k.split("/")
+            groups[(ds, attack, mal)][alg] = v
+    n_pass = n_tot = 0
+    for (ds, attack, mal), algs in sorted(groups.items()):
+        if "br_drag" not in algs:
+            continue
+        bd = algs["br_drag"]
+        beaten_by = [b for b in BYZ_BASELINES if algs.get(b, 0.0) > bd + 1e-3]
+        n_tot += 1
+        n_pass += check(
+            f"{ds}/{attack}/{mal}: BR-DRAG {bd:.3f} vs "
+            + ", ".join(f"{b} {algs.get(b, float('nan')):.3f}" for b in BYZ_BASELINES)
+            + (f" — beaten by {beaten_by}" if beaten_by else ""),
+            not beaten_by,
+        )
+    print(f"\n  -> {n_pass}/{n_tot} attack settings with BR-DRAG best-or-tied.\n")
+
+    # ---- Claim 6: BR-DRAG survives 60% (> 50% breakdown point)
+    print("**C6 — BR-DRAG tolerates >50% malicious workers (the paper's "
+          "distinctive claim):**\n")
+    for (ds, attack, mal), algs in sorted(groups.items()):
+        if mal != "mal60" or "br_drag" not in algs:
+            continue
+        bd = algs["br_drag"]
+        med_fail = min(algs.get("rfa", 1.0), algs.get("raga", 1.0))
+        check(
+            f"{ds}/{attack}@60%: BR-DRAG {bd:.3f} (GeoMed-family min {med_fail:.3f}, "
+            f"FedAvg {algs.get('fedavg', float('nan')):.3f})",
+            bd >= 0.8 * max(v for k, v in algs.items()),
+        )
+    print()
+
+
+if __name__ == "__main__":
+    main()

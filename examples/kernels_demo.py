@@ -1,0 +1,93 @@
+"""Pallas kernel showcase — runs every kernel in interpret mode on CPU
+and checks it against its jnp oracle.
+
+    PYTHONPATH=src python examples/kernels_demo.py
+
+On a real TPU the same `repro.kernels.ops` calls compile to Mosaic; the
+analytic HBM-traffic numbers printed here are the §Roofline terms the
+kernels are accountable to (BlockSpec I/O, not fusion-dependent).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import linear_recurrence as lr
+from repro.kernels import selective_scan as ssk
+
+
+def banner(s):
+    print(f"\n=== {s} " + "=" * max(8, 60 - len(s)))
+
+
+def check(name, got, want, tol=1e-4):
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+    print(f"  {name:<42s} max|err| = {err:.2e}  {'OK' if err < tol else 'FAIL'}")
+    assert err < tol, name
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    banner("DRAG fused calibration (eqs. 10+11 / 15)")
+    g = jax.random.normal(key, (8, 4096))
+    r = jax.random.normal(jax.random.fold_in(key, 1), (4096,))
+    for mode in ("drag", "br_drag"):
+        v, lam, delta = ops.drag_calibrate(g, r, 0.25, mode)
+        v_ref, lam_ref = ref.drag_calibrate_ref(g, r, 0.25, mode)
+        check(f"drag_calibrate[{mode}] v", v, v_ref)
+        check(f"drag_calibrate[{mode}] lambda", lam, lam_ref)
+    print("  one HBM pass for dots/norms + one for the blend (vs 4 naive)")
+
+    banner("Weiszfeld geometric median (RFA/RAGA)")
+    z = ops.geometric_median(g, iters=8)
+    z_ref = g.astype(jnp.float32)
+    zz = jnp.mean(z_ref, 0)
+    for _ in range(8):
+        w = 1.0 / jnp.maximum(jnp.linalg.norm(z_ref - zz, axis=1), 1e-8)
+        zz = (w @ z_ref) / jnp.sum(w)
+    check("geometric_median (8 iters)", z, zz, tol=1e-3)
+
+    banner("Trimmed mean")
+    tm = ops.trimmed_mean(g, trim=2)
+    check("trimmed_mean", tm, ref.trimmed_mean_ref(g, 2))
+
+    banner("Flash attention (online softmax, GQA)")
+    b, h, hkv, s, dh = 2, 8, 2, 512, 64
+    q = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, dh), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 3), (b, hkv, s, dh), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 4), (b, hkv, s, dh), jnp.bfloat16)
+    o = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    check("flash_attention causal GQA-4", o, o_ref, tol=3e-2)
+    naive = 4 * b * h * s * s  # f32 score bytes, one materialisation
+    print(f"  kernel I/O {fa.io_bytes(b, h, hkv, s, s, dh)/1e6:.1f} MB  "
+          f"vs naive score-chain >= {naive/1e6:.1f} MB")
+
+    banner("Mamba selective scan (VMEM-resident state)")
+    bs, sl, di, ds = 1, 256, 256, 16
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 5), (bs, sl, di))) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 6), (bs, sl, di))
+    bm = jax.random.normal(jax.random.fold_in(key, 7), (bs, sl, ds))
+    cm = jax.random.normal(jax.random.fold_in(key, 8), (bs, sl, ds))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 9), (di, ds)) * 0.3)
+    y = ops.selective_scan(dt, x, bm, cm, a, block_di=128, chunk=64)
+    check("selective_scan", y, ref.selective_scan_ref(dt, x, bm, cm, a))
+    print(f"  kernel I/O {ssk.io_bytes(bs, sl, di, ds)/1e6:.2f} MB "
+          f"(independent of d_state and scan depth)")
+
+    banner("RG-LRU linear recurrence")
+    aa = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 10), (1, 256, 256)))
+    gg = jax.random.normal(jax.random.fold_in(key, 11), (1, 256, 256)) * 0.5
+    hh = ops.linear_recurrence(aa, gg, block_w=128, chunk=64)
+    check("linear_recurrence", hh, ref.linear_recurrence_ref(aa, gg), tol=1e-4)
+    print(f"  kernel I/O {lr.io_bytes(1, 256, 256)/1e6:.2f} MB (3 passes of [B,S,w])")
+
+    print("\nall kernels match their oracles.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: 30 rounds of DRAG vs FedAvg on heterogeneous synthetic
+EMNIST (Dirichlet beta=0.1, 20 workers, 8 selected/round, U=5).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.fl import ExperimentConfig, run_experiment
+
+
+def main() -> None:
+    common = dict(
+        dataset="emnist",
+        model="emnist_cnn",
+        n_workers=20,
+        n_selected=8,
+        rounds=30,
+        beta=0.1,
+        eval_every=10,
+        seed=0,
+    )
+    print("== FedAvg baseline ==")
+    h_avg = run_experiment(
+        ExperimentConfig(algorithm="fedavg", **common),
+        progress=lambda m: print(f"  round {m['round']:3d}  acc={m['accuracy']:.3f}"),
+    )
+    print("== DRAG (this paper) ==")
+    h_drag = run_experiment(
+        ExperimentConfig(algorithm="drag", c=0.25, alpha=0.25, **common),
+        progress=lambda m: print(
+            f"  round {m['round']:3d}  acc={m['accuracy']:.3f}  DoD={m['dod_mean']:.3f}"
+        ),
+    )
+    print(f"\nfinal accuracy: fedavg={h_avg['final_accuracy']:.3f} "
+          f"drag={h_drag['final_accuracy']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

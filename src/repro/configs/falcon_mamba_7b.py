@@ -1,0 +1,40 @@
+"""Falcon-Mamba-7B — pure Mamba-1 SSM, attention-free. [arXiv:2410.05355]
+
+64L, d_model=4096, d_ff=0 (the Mamba block replaces attention+MLP),
+vocab=65024, d_state=16, expand=2 (d_inner=8192), conv=4.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b",
+    arch_type="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab=65024,
+    head_dim=1,
+    use_rope=False,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=256),
+    tied_embeddings=False,
+    source="arXiv:2410.05355",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="falcon-mamba-smoke",
+        arch_type="ssm",
+        n_layers=2,
+        d_model=128,
+        n_heads=1,
+        n_kv_heads=1,
+        d_ff=0,
+        vocab=512,
+        head_dim=1,
+        use_rope=False,
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2, chunk=32),
+        tied_embeddings=False,
+        source="reduced falcon-mamba family",
+    )

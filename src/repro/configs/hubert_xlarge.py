@@ -1,0 +1,53 @@
+"""HuBERT-XLarge — encoder-only audio model (wav2vec2 backbone arch).
+[arXiv:2106.07447]
+
+48L, d_model=1280, 16H (kv=16, i.e. full MHA), d_ff=5120, vocab=504
+(masked-prediction cluster codebook).  The mel/conv feature extractor is
+a STUB per the assignment carve-out: ``input_specs`` provides frame
+embeddings [B, T, 512] which the framework projects into the encoder.
+Deviation note: the conv positional embedding is replaced with RoPE
+(positional content must come from somewhere once the conv frontend is
+stubbed); recorded in DESIGN.md hardware-adaptation notes.
+Encoder-only => no decode shapes (skip decode_32k / long_500k).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    head_dim=80,
+    use_rope=True,
+    norm="layernorm",
+    mlp="gelu",
+    attn_kind="full",
+    frontend_dim=512,
+    tied_embeddings=False,
+    source="arXiv:2106.07447",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-smoke",
+        arch_type="audio",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab=64,
+        head_dim=32,
+        norm="layernorm",
+        mlp="gelu",
+        attn_kind="full",
+        q_block=64,
+        frontend_dim=32,
+        tied_embeddings=False,
+        source="reduced hubert family",
+    )

@@ -1,0 +1,46 @@
+"""InternVL2-26B — VLM: InternViT frontend (STUB) + InternLM2-20B decoder.
+[arXiv:2404.16821]
+
+Decoder backbone: 48L, d_model=6144, 48H (kv=8), d_ff=16384, vocab=92553.
+Per the assignment carve-out, the vision tower is a stub: ``input_specs``
+provides precomputed patch embeddings [B, n_patches, 3200] (InternViT-6B
+hidden size); the framework implements the MLP projector + the language
+decoder that consumes them.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    head_dim=128,
+    rope_theta=1000000.0,
+    attn_kind="causal",
+    frontend_dim=3200,
+    n_patches=1024,
+    source="arXiv:2404.16821",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-smoke",
+        arch_type="vlm",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        attn_kind="causal",
+        q_block=64,
+        frontend_dim=64,
+        n_patches=16,
+        source="reduced internvl2 family",
+    )

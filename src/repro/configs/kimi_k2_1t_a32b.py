@@ -1,0 +1,40 @@
+"""Kimi-K2 — trillion-parameter MoE (paper-table entry). [arXiv:2501.kimi2]
+
+61L, d_model=7168, 64H (GQA kv=8, head_dim=112), expert d_ff=2048,
+vocab=163840, 384 experts top-8 + 1 shared expert.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    head_dim=112,
+    rope_theta=50000.0,
+    attn_kind="causal",
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff_expert=2048, n_shared_experts=1),
+    source="arXiv:2501.kimi2",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-smoke",
+        arch_type="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=64,
+        vocab=512,
+        head_dim=32,
+        attn_kind="causal",
+        q_block=64,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64, n_shared_experts=1),
+        source="reduced kimi-k2 family",
+    )

@@ -1,0 +1,46 @@
+"""Llama-4-Scout-17B-16E — MoE, early fusion, iRoPE chunked local attention.
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+
+48L, d_model=5120, 40 heads (GQA kv=8), expert d_ff=8192, vocab=202048,
+16 experts top-1 + 1 shared expert; 3 of 4 layers use chunk-local
+attention (8192) with RoPE, every 4th layer is global full-causal NoPE.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    head_dim=128,
+    rope_theta=500000.0,
+    attn_kind="chunk",
+    window=8192,
+    global_every=4,
+    moe=MoEConfig(n_experts=16, top_k=1, d_ff_expert=8192, n_shared_experts=1),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-smoke",
+        arch_type="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        attn_kind="chunk",
+        window=32,
+        global_every=2,
+        q_block=64,
+        moe=MoEConfig(n_experts=4, top_k=1, d_ff_expert=256, n_shared_experts=1),
+        source="reduced llama4-scout family",
+    )

@@ -1,0 +1,40 @@
+"""Mistral-Nemo-Base-2407 (12B) — dense GQA, 128k context.
+[hf:mistralai/Mistral-Nemo-Base-2407]
+
+40L, d_model=5120, 32H (kv=8), d_ff=14336, vocab=131072, head_dim=128,
+RMSNorm + SwiGLU, rope theta 1M. Full causal attention (no window) —
+long_500k is skipped for this arch (noted in DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,
+    rope_theta=1000000.0,
+    attn_kind="causal",
+    source="hf:mistralai/Mistral-Nemo-Base-2407",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="mistral-nemo-smoke",
+        arch_type="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        attn_kind="causal",
+        q_block=64,
+        source="reduced mistral-nemo family",
+    )

@@ -1,0 +1,51 @@
+"""The paper's own §VI experiment configurations (EMNIST / CIFAR-10 /
+CIFAR-100 CNNs under the FL protocol), reproduced with synthetic
+stand-in datasets of matching shape (offline container; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperFLConfig:
+    name: str
+    model: str  # key into repro.models.cnn.MODELS
+    input_shape: tuple
+    n_classes: int
+    n_workers: int = 40
+    n_selected: int = 10  # S
+    local_steps: int = 5  # U
+    batch_size: int = 10  # B
+    lr: float = 0.01  # eta
+    dirichlet_beta: float = 0.1
+    # DRAG hyper-parameters (paper §VI-A)
+    alpha: float = 0.25
+    c: float = 0.25  # 0.25 for strong heterogeneity, 0.1 moderate
+    # BR-DRAG (paper §VI-B)
+    c_br: float = 0.5
+    root_samples: int = 3000
+
+
+EMNIST = PaperFLConfig(
+    name="paper-emnist",
+    model="emnist_cnn",
+    input_shape=(28, 28, 1),
+    n_classes=47,
+)
+
+CIFAR10 = PaperFLConfig(
+    name="paper-cifar10",
+    model="cifar10_cnn",
+    input_shape=(32, 32, 3),
+    n_classes=10,
+)
+
+CIFAR100 = PaperFLConfig(
+    name="paper-cifar100",
+    model="cifar100_cnn",
+    input_shape=(32, 32, 3),
+    n_classes=100,
+)
+
+PAPER_CONFIGS = {c.name: c for c in (EMNIST, CIFAR10, CIFAR100)}

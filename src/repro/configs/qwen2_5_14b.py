@@ -1,0 +1,40 @@
+"""Qwen2.5-14B — dense GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B card family]
+
+48L, d_model=5120, 40H (kv=8), d_ff=13824, vocab=152064, head_dim=128,
+RMSNorm + SwiGLU, QKV bias true (the Qwen2.5 signature), rope theta 1M.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b",
+    arch_type="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    head_dim=128,
+    rope_theta=1000000.0,
+    qkv_bias=True,
+    attn_kind="causal",
+    source="hf:Qwen/Qwen2.5-0.5B (family card)",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2.5-smoke",
+        arch_type="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        qkv_bias=True,
+        attn_kind="causal",
+        q_block=64,
+        source="reduced qwen2.5 family",
+    )

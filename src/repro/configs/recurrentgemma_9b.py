@@ -1,0 +1,44 @@
+"""RecurrentGemma-9B — Griffin hybrid: RG-LRU + local attention, 1:2.
+[arXiv:2402.19427]
+
+38L, d_model=4096, 16H (MQA kv=1), d_ff=12288, vocab=256000; pattern =
+[recurrent, recurrent, local-attention(window 2048)] x12 + 2 recurrent
+tail layers (38 = 12*3 + 2); lru_width = 4096, head_dim=256.
+"""
+from repro.configs.base import ArchConfig, HybridConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    rope_theta=10000.0,
+    attn_kind="window",
+    window=2048,
+    hybrid=HybridConfig(pattern_len=3, attn_slots=(2,), lru_width=4096, conv_width=4),
+    source="arXiv:2402.19427",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma-smoke",
+        arch_type="hybrid",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=1,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        attn_kind="window",
+        window=32,
+        q_block=64,
+        hybrid=HybridConfig(pattern_len=2, attn_slots=(1,), lru_width=128, conv_width=4),
+        source="reduced recurrentgemma family",
+    )

@@ -1,0 +1,47 @@
+"""StarCoder2-3B — dense, GQA, RoPE, sliding-window 4096. [arXiv:2402.19173]
+
+30L, d_model=3072, 24H (kv=2), d_ff=12288, vocab=49152; LayerNorm + GELU
+MLP with biases, per the StarCoder2 report.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    d_ff=12288,
+    vocab=49152,
+    head_dim=128,
+    rope_theta=100000.0,
+    qkv_bias=True,
+    norm="layernorm",
+    mlp="gelu",
+    attn_kind="window",
+    window=4096,
+    tied_embeddings=True,
+    source="arXiv:2402.19173",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2-3b-smoke",
+        arch_type="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        qkv_bias=True,
+        norm="layernorm",
+        mlp="gelu",
+        attn_kind="window",
+        window=32,
+        q_block=64,
+        source="reduced starcoder2 family",
+    )

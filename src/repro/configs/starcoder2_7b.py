@@ -1,0 +1,46 @@
+"""StarCoder2-7B — dense, GQA, RoPE, sliding-window 4096. [arXiv:2402.19173]
+
+32L, d_model=4608, 36H (kv=4), d_ff=18432, vocab=49152.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab=49152,
+    head_dim=128,
+    rope_theta=100000.0,
+    qkv_bias=True,
+    norm="layernorm",
+    mlp="gelu",
+    attn_kind="window",
+    window=4096,
+    tied_embeddings=True,
+    source="arXiv:2402.19173",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2-7b-smoke",
+        arch_type="dense",
+        n_layers=2,
+        d_model=144,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=288,
+        vocab=512,
+        head_dim=24,
+        qkv_bias=True,
+        norm="layernorm",
+        mlp="gelu",
+        attn_kind="window",
+        window=32,
+        q_block=64,
+        source="reduced starcoder2 family",
+    )

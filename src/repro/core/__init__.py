@@ -1,0 +1,3 @@
+"""Core: the paper's contribution — DRAG / BR-DRAG aggregation — plus the
+baseline aggregators and attack models it is evaluated against."""
+from repro.core import aggregators, attacks, br_drag, drag, pytree  # noqa: F401

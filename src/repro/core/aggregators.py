@@ -1,0 +1,211 @@
+"""Server-side aggregation rules: DRAG/BR-DRAG plus every baseline the
+paper compares against (§VI): FedAvg, FedExP, FLTrust, RFA (geometric
+median of models), RAGA (geometric median of updates), and the classic
+robust reducers Krum and coordinate-wise trimmed mean used for the root
+reference's robust reducer option (§IV-B).
+
+All aggregators share one signature over *stacked* update pytrees
+(leading worker axis S) and are jit-compatible::
+
+    delta = AGGREGATORS[name](updates_stacked, **kwargs)
+
+Client-side algorithm variants (FedProx, SCAFFOLD, FedACG local terms)
+live in ``repro.fl.client`` since they modify the local objective, not
+the reduction.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import br_drag, drag
+from repro.core import pytree as pt
+
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------- FedAvg
+def fedavg(updates_stacked: pt.Pytree) -> pt.Pytree:
+    """Eq. (3): plain mean of uploads."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), updates_stacked)
+
+
+# ---------------------------------------------------------------- FedExP
+def fedexp(updates_stacked: pt.Pytree, eps: float = 1e-3) -> pt.Pytree:
+    """FedExP [20]: server extrapolation step-size on the pseudo-gradient.
+
+    eta_g = max(1, sum_m ||g_m||^2 / (2 S (||mean||^2 + eps))).
+    """
+    mean = fedavg(updates_stacked)
+    s = jax.tree.leaves(updates_stacked)[0].shape[0]
+    sq_norms = jax.vmap(pt.tree_sq_norm)(updates_stacked)
+    eta_g = jnp.maximum(1.0, jnp.sum(sq_norms) / (2.0 * s * (pt.tree_sq_norm(mean) + eps)))
+    return pt.tree_scale(mean, eta_g)
+
+
+# --------------------------------------------------------------- FLTrust
+def fltrust(updates_stacked: pt.Pytree, reference: pt.Pytree) -> pt.Pytree:
+    """FLTrust [29]: ReLU-clipped cosine trust scores, norm-matched to r.
+
+    g~_m = relu(cos(g_m, r)) * ||r|| * g_m / ||g_m||; aggregate is the
+    trust-weighted average (weights renormalised over the batch).
+    """
+    r_norm = pt.tree_norm(reference, EPS)
+
+    def score_and_scale(g):
+        ts = jax.nn.relu(pt.cosine_similarity(g, reference, EPS))
+        scaled = pt.tree_scale(g, r_norm / pt.tree_norm(g, EPS))
+        return ts, scaled
+
+    scores, scaled = jax.vmap(score_and_scale)(updates_stacked)
+    wsum = jnp.sum(scores) + EPS
+    return jax.tree.map(
+        lambda x: jnp.tensordot(scores, x, axes=1) / wsum, scaled
+    )
+
+
+# ----------------------------------------------- geometric median (RFA/RAGA)
+def geometric_median(
+    updates_stacked: pt.Pytree, iters: int = 8, eps: float = 1e-8
+) -> pt.Pytree:
+    """Weiszfeld iterations [39] for GeoMed({g_m}).
+
+    Used by RFA [30] (median of *models*, equivalently of updates since
+    theta^t is common) and RAGA [34] (median of updates).  Smoothed
+    Weiszfeld: w_m = 1/max(||g_m - z||, eps).
+    """
+    z0 = fedavg(updates_stacked)
+
+    def body(z, _):
+        def dist(g):
+            return pt.tree_norm(pt.tree_sub(g, z), 0.0)
+
+        d = jax.vmap(dist)(updates_stacked)
+        w = 1.0 / jnp.maximum(d, eps)
+        w = w / jnp.sum(w)
+        z_new = jax.tree.map(lambda x: jnp.tensordot(w, x, axes=1), updates_stacked)
+        return z_new, None
+
+    z, _ = jax.lax.scan(body, z0, None, length=iters)
+    return z
+
+
+rfa = geometric_median
+raga = geometric_median
+
+
+# ------------------------------------------------------------------ Krum
+def krum(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
+    """Krum [26]: select the update closest to its S-f-2 nearest peers."""
+    flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)  # [S, d]
+    s = flat.shape[0]
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)  # [S,S]
+    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)  # exclude self
+    k = max(s - n_byzantine - 2, 1)
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)
+    best = jnp.argmin(scores)
+    return pt.tree_index(updates_stacked, best)
+
+
+def multi_krum(updates_stacked: pt.Pytree, n_byzantine: int, m: int = 0) -> pt.Pytree:
+    """Multi-Krum [26]: average the m lowest-Krum-score updates.
+
+    m = 0 selects the standard S - f - 2 (clamped to >= 1).
+    """
+    flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)  # [S, d]
+    s = flat.shape[0]
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)
+    k = max(s - n_byzantine - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    m = m or max(s - n_byzantine - 2, 1)
+    sel = jnp.argsort(scores)[:m]  # m best
+    w = jnp.zeros((s,)).at[sel].set(1.0 / m)
+
+    def avg(x):
+        return jnp.tensordot(w, x, axes=(0, 0))
+
+    return jax.tree.map(avg, updates_stacked)
+
+
+def bulyan(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
+    """Bulyan [El Mhamdi et al. 2018]: Multi-Krum selection of
+    theta = S - 2f candidates, then coordinate-wise trimmed mean with
+    beta = f over the selected set."""
+    flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)
+    s = flat.shape[0]
+    f = n_byzantine
+    theta = max(s - 2 * f, 1)
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)
+    k = max(s - f - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    sel = jnp.argsort(scores)[:theta]  # theta best by Krum score
+
+    beta = min(f, max((theta - 1) // 2, 0))
+
+    def tm(x):
+        xs = jnp.sort(x[sel], axis=0)  # [theta, ...]
+        lo, hi = beta, theta - beta
+        return jnp.mean(xs[lo:hi], axis=0)
+
+    return jax.tree.map(tm, updates_stacked)
+
+
+# ---------------------------------------------------------- trimmed mean
+def trimmed_mean(updates_stacked: pt.Pytree, trim: int) -> pt.Pytree:
+    """Coordinate-wise trimmed mean [27]: drop ``trim`` high/low per coord."""
+
+    def tm(x):
+        s = x.shape[0]
+        lo, hi = trim, s - trim
+        xs = jnp.sort(x, axis=0)
+        return jnp.mean(xs[lo:hi], axis=0)
+
+    return jax.tree.map(tm, updates_stacked)
+
+
+# --------------------------------------------------------- coord median
+def coordinate_median(updates_stacked: pt.Pytree) -> pt.Pytree:
+    return jax.tree.map(lambda x: jnp.median(x, axis=0), updates_stacked)
+
+
+# ------------------------------------------------------------- registry
+def drag_agg(updates_stacked, reference, c: float = 0.1):
+    delta, _ = drag.aggregate(updates_stacked, reference, c)
+    return delta
+
+
+def br_drag_agg(updates_stacked, reference, c: float = 0.5):
+    delta, _ = br_drag.aggregate(updates_stacked, reference, c)
+    return delta
+
+
+AGGREGATORS = {
+    "fedavg": fedavg,
+    "fedexp": fedexp,
+    "fltrust": fltrust,
+    "geomed": geometric_median,
+    "rfa": rfa,
+    "raga": raga,
+    "krum": krum,
+    "multi_krum": multi_krum,
+    "bulyan": bulyan,
+    "trimmed_mean": trimmed_mean,
+    "median": coordinate_median,
+    "drag": drag_agg,
+    "br_drag": br_drag_agg,
+}
+
+#: aggregators that consume a server reference direction r^t
+NEEDS_REFERENCE = {"fltrust", "drag", "br_drag"}
+
+
+def get(name: str, **fixed):
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")
+    fn = AGGREGATORS[name]
+    return partial(fn, **fixed) if fixed else fn

@@ -1,0 +1,140 @@
+"""Byzantine attack models (paper §I-A / §VI-B).
+
+Update-space attacks transform the stacked uploads given a boolean
+malicious mask; the data-space attack (label flipping) is applied in the
+data pipeline (``repro.data``) but its label transform lives here so the
+semantics sit next to the other attacks.
+
+Paper settings:
+  * noise injection [23]: g_m <- p_m * g_m with p_m ~ N(0, 3)  (scalar per
+    worker per round; the paper scales the genuine update by Gaussian
+    noise, corrupting both direction and magnitude).
+  * sign flipping [24]:  g_m <- -g_m.
+  * label flipping [25]: label l -> L - l - 1 on half the local samples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask_tree(mask, a, b):
+    """Select leaves of ``a`` where the per-worker ``mask`` is set, else ``b``."""
+    s = mask.shape[0]
+
+    def sel(x, y):
+        m = mask.reshape((s,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
+def _scale_tree(factor, updates_stacked):
+    s = factor.shape[0]
+
+    def apply(x):
+        f = factor.reshape((s,) + (1,) * (x.ndim - 1))
+        return x * f
+
+    return jax.tree.map(apply, updates_stacked)
+
+
+def noise_injection(key, updates_stacked, malicious_mask, std: float = 3.0):
+    """g_m <- p_m g_m, p_m ~ N(0, std^0.5*...) for malicious workers.
+
+    Paper: p_m ~ N(0, 3); jax.random.normal is std-normal so we scale by
+    sqrt(3) ~ std parameterised as the distribution's std dev.
+    """
+    s = malicious_mask.shape[0]
+    p = jax.random.normal(key, (s,)) * std
+    factor = jnp.where(malicious_mask, p, 1.0)
+    return _scale_tree(factor, updates_stacked)
+
+
+def sign_flipping(key, updates_stacked, malicious_mask, scale: float = 1.0):
+    """g_m <- -scale * g_m for malicious workers."""
+    del key
+    factor = jnp.where(malicious_mask, -scale, 1.0)
+    return _scale_tree(factor, updates_stacked)
+
+
+def gaussian_replacement(key, updates_stacked, malicious_mask, std: float = 1.0):
+    """Replace malicious uploads with pure random vectors."""
+    leaves, treedef = jax.tree.flatten(updates_stacked)
+    # fold_in a per-leaf index (and a salt) so the noise stream can never
+    # coincide with whatever stream produced the genuine updates.
+    keys = jax.random.split(jax.random.fold_in(key, 0x5EED), len(leaves))
+    noise_leaves = [jax.random.normal(k, x.shape) * std for k, x in zip(keys, leaves)]
+    noise = jax.tree.unflatten(treedef, noise_leaves)
+    return _mask_tree(malicious_mask, noise, updates_stacked)
+
+
+def flip_labels(labels: jax.Array, n_classes: int, flip_mask: jax.Array) -> jax.Array:
+    """Label-flipping transform: l -> L - l - 1 where ``flip_mask``."""
+    return jnp.where(flip_mask, n_classes - labels - 1, labels)
+
+
+def _benign_stats(updates_stacked, malicious_mask):
+    """Per-leaf mean/std over the BENIGN workers (what an omniscient
+    attacker estimates)."""
+    w = (~malicious_mask).astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1.0)
+
+    def stats(x):
+        ww = w.reshape((w.shape[0],) + (1,) * (x.ndim - 1))
+        mu = jnp.sum(x * ww, axis=0) / wsum
+        var = jnp.sum(ww * (x - mu) ** 2, axis=0) / wsum
+        return mu, jnp.sqrt(var + 1e-12)
+
+    return jax.tree.map(stats, updates_stacked, is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def alie(key, updates_stacked, malicious_mask, z: float = 1.5):
+    """'A Little Is Enough' [Baruch et al. 2019]: malicious workers all
+    upload mean - z*std of the benign updates — inside the plausible
+    spread, so distance-based defenses (Krum/trimmed-mean) keep them,
+    yet the coordinated shift steers the aggregate."""
+    del key
+    stats = _benign_stats(updates_stacked, malicious_mask)
+    crafted = jax.tree.map(
+        lambda st: st[0] - z * st[1], stats,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2,
+    )
+    bcast = jax.tree.map(
+        lambda c, x: jnp.broadcast_to(c[None], x.shape), crafted, updates_stacked
+    )
+    return _mask_tree(malicious_mask, bcast, updates_stacked)
+
+
+def ipm(key, updates_stacked, malicious_mask, eps: float = 0.5):
+    """Inner-product manipulation [Xie et al. 2020]: upload
+    -eps * mean(benign), flipping the aggregate's inner product with the
+    true descent direction while keeping a small norm (stealthy vs
+    norm-clipping defenses)."""
+    del key
+    stats = _benign_stats(updates_stacked, malicious_mask)
+    crafted = jax.tree.map(
+        lambda st: -eps * st[0], stats,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2,
+    )
+    bcast = jax.tree.map(
+        lambda c, x: jnp.broadcast_to(c[None], x.shape), crafted, updates_stacked
+    )
+    return _mask_tree(malicious_mask, bcast, updates_stacked)
+
+
+UPDATE_ATTACKS = {
+    "none": lambda key, u, m, **kw: u,
+    "noise_injection": noise_injection,
+    "sign_flipping": sign_flipping,
+    "gaussian": gaussian_replacement,
+    "alie": alie,
+    "ipm": ipm,
+}
+
+
+def apply_update_attack(name: str, key, updates_stacked, malicious_mask, **kw):
+    if name == "label_flipping":
+        # data-space attack; updates already reflect poisoned data
+        return updates_stacked
+    return UPDATE_ATTACKS[name](key, updates_stacked, malicious_mask, **kw)

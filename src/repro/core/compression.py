@@ -1,0 +1,84 @@
+"""Update compression with error feedback (beyond-paper substrate).
+
+The related work the paper positions against (BROADCAST [33]) combines
+Byzantine robustness with gradient-difference compression; this module
+provides the compression half so the framework can reproduce that
+comparison: top-k sparsification and sign-SGD style 1-bit compression,
+both wrapped in error feedback (the residual of what compression dropped
+is carried into the next round — required for convergence).
+
+All operators work on update *pytrees* and are jit-safe (static k).
+
+    state = ef_init(params)
+    compressed, state = ef_compress(update, state, method="topk", ratio=0.05)
+    # compressed is dense again (decompressed server-side view) so the
+    # DRAG calibration (eqs. 10/11/15) applies unchanged on top.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest-|.| entries of a flat vector."""
+    if k >= x.size:
+        return jnp.ones_like(x, bool)
+    thresh = jax.lax.top_k(jnp.abs(x).reshape(-1), k)[0][-1]
+    return jnp.abs(x) >= thresh
+
+
+def compress_topk(tree, ratio: float):
+    """Keep the top ``ratio`` fraction of coordinates per leaf (by |.|)."""
+
+    def one(x):
+        k = max(int(x.size * ratio), 1)
+        m = topk_mask(x, k)
+        return jnp.where(m, x, 0.0)
+
+    return jax.tree.map(one, tree)
+
+
+def compress_sign(tree):
+    """1-bit sign compression with per-leaf l1 scale (signSGD-EF)."""
+
+    def one(x):
+        scale = jnp.mean(jnp.abs(x))
+        return jnp.sign(x) * scale
+
+    return jax.tree.map(one, tree)
+
+
+def ef_init(like_tree):
+    """Zero error-feedback residual shaped like the update pytree."""
+    return pt.tree_zeros_like(like_tree)
+
+
+def ef_compress(update, residual, *, method: str = "topk", ratio: float = 0.05):
+    """Error-feedback compression: compress(update + residual), carry the
+    difference forward.  Returns (compressed, new_residual)."""
+    corrected = pt.tree_add(update, residual)
+    if method == "topk":
+        compressed = compress_topk(corrected, ratio)
+    elif method == "sign":
+        compressed = compress_sign(corrected)
+    elif method == "none":
+        compressed = corrected
+    else:
+        raise ValueError(f"unknown compression {method!r}")
+    new_residual = pt.tree_sub(corrected, compressed)
+    return compressed, new_residual
+
+
+def compression_ratio(tree, method: str, ratio: float) -> float:
+    """Nominal wire-bytes ratio of the scheme (for EXPERIMENTS logging)."""
+    if method == "topk":
+        # value + index per kept coordinate (8 bytes) vs 4 bytes dense
+        return min(2.0 * ratio, 1.0)
+    if method == "sign":
+        return 1.0 / 32.0  # 1 bit per f32 coordinate (+ one scale/leaf)
+    return 1.0

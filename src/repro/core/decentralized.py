@@ -1,0 +1,110 @@
+"""Decentralized DRAG (the paper's §VII future work, built).
+
+No parameter server: worker i keeps its own model x_i and its own
+reference direction r_i, and communicates only with graph neighbours
+through a doubly-stochastic mixing matrix W (gossip averaging):
+
+    g_i      = local update from x_i                      (U SGD steps)
+    lam_i    = c (1 - cos(g_i, r_i))                      (eq. 10, local r)
+    v_i      = (1-lam_i) g_i + lam_i (||g_i||/||r_i||) r_i  (eq. 11)
+    Delta_i  = sum_j W_ij v_j                             (gossip of updates)
+    x_i'     = sum_j W_ij x_j + Delta_i                   (consensus + step)
+    r_i'     = (1-alpha) r_i + alpha Delta_i              (eq. 5, local)
+
+With W = (1/n) 11^T (complete graph) every worker sees the PS average
+and the scheme reduces EXACTLY to centralized DRAG with full
+participation — tested in tests/test_decentralized.py.  Sparser W
+trades consensus speed for communication degree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drag
+from repro.core import pytree as pt
+
+
+# ------------------------------------------------------------ topologies
+
+def mixing_complete(n: int) -> jnp.ndarray:
+    return jnp.full((n, n), 1.0 / n)
+
+
+def mixing_ring(n: int, self_weight: float = 1.0 / 3) -> jnp.ndarray:
+    """Symmetric ring: each worker averages itself and its two neighbours."""
+    w = np.zeros((n, n))
+    side = (1.0 - self_weight) / 2
+    for i in range(n):
+        w[i, i] = self_weight
+        w[i, (i - 1) % n] += side
+        w[i, (i + 1) % n] += side
+    return jnp.asarray(w)
+
+
+def mixing_metropolis(adj: np.ndarray) -> jnp.ndarray:
+    """Metropolis-Hastings weights for an arbitrary undirected graph
+    (doubly stochastic by construction)."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return jnp.asarray(w)
+
+
+TOPOLOGIES = {
+    "complete": lambda n: mixing_complete(n),
+    "ring": lambda n: mixing_ring(n),
+}
+
+
+# ---------------------------------------------------------------- round
+
+def _mix(mixing: jnp.ndarray, stacked: pt.Pytree) -> pt.Pytree:
+    """Per-leaf gossip averaging: out_i = sum_j W_ij leaf_j."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(mixing, x, axes=(1, 0)), stacked
+    )
+
+
+def decentralized_drag_round(
+    params_stacked: pt.Pytree,
+    refs_stacked: pt.Pytree,
+    updates_stacked: pt.Pytree,
+    mixing: jnp.ndarray,
+    *,
+    c: float = 0.1,
+    alpha: float = 0.25,
+):
+    """One gossip round.  All inputs carry a leading worker axis [n, ...].
+
+    Returns (new_params, new_refs, lam [n]).
+    """
+    # per-worker DoD + calibration against the worker's OWN reference
+    def one(g_i, r_i):
+        lam = drag.degree_of_divergence(g_i, r_i, c)
+        v = drag.calibrate(g_i, r_i, lam)
+        return v, lam
+
+    v_stacked, lam = jax.vmap(
+        lambda g, r: one(g, r)
+    )(updates_stacked, refs_stacked)
+
+    delta = _mix(mixing, v_stacked)  # Delta_i = sum_j W_ij v_j
+    new_params = pt.tree_add(_mix(mixing, params_stacked), delta)
+    new_refs = pt.tree_lincomb(1.0 - alpha, refs_stacked, alpha, delta)
+    return new_params, new_refs, lam
+
+
+def consensus_distance(params_stacked: pt.Pytree) -> jnp.ndarray:
+    """Mean squared distance of each worker's model to the average —
+    the quantity gossip drives to zero."""
+    mean = jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), params_stacked)
+    diff = jax.tree.map(lambda x, m: x - m, params_stacked, mean)
+    sq = sum(jnp.sum(l ** 2, axis=tuple(range(1, l.ndim))) for l in jax.tree.leaves(diff))
+    return jnp.mean(sq)

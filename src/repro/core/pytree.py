@@ -1,0 +1,125 @@
+"""Pytree arithmetic helpers used throughout the aggregation layer.
+
+All aggregation rules in the paper operate on *update vectors*
+``g_m = theta_m^{t,U} - theta^t`` which in this framework are pytrees with
+the same structure as the model parameters.  These helpers implement the
+vector-space operations (dot products, norms, linear combinations) over
+pytrees without materialising a flat copy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object  # any jax pytree of arrays
+
+
+def tree_zeros_like(t: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(t: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, t)
+
+
+def tree_axpy(a, x: Pytree, y: Pytree) -> Pytree:
+    """a*x + y."""
+    return jax.tree.map(lambda u, v: a * u + v, x, y)
+
+
+def tree_lincomb(a, x: Pytree, b, y: Pytree) -> Pytree:
+    """a*x + b*y elementwise over matching pytrees."""
+    return jax.tree.map(lambda u, v: a * u + b * v, x, y)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    """Sum of elementwise products across the whole pytree (f32 accum)."""
+    leaves = jax.tree.leaves(
+        jax.tree.map(
+            lambda u, v: jnp.sum(u.astype(jnp.float32) * v.astype(jnp.float32)),
+            a,
+            b,
+        )
+    )
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def tree_sq_norm(t: Pytree) -> jax.Array:
+    return tree_dot(t, t)
+
+
+def tree_norm(t: Pytree, eps: float = 0.0) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(t) + eps)
+
+
+def tree_mean(trees: list[Pytree]) -> Pytree:
+    """Mean of a python list of same-structure pytrees."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_stack(trees: list[Pytree]) -> Pytree:
+    """Stack a list of pytrees along a new leading axis (worker axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(t: Pytree, n: int) -> list[Pytree]:
+    return [jax.tree.map(lambda x: x[i], t) for i in range(n)]
+
+
+def tree_index(t: Pytree, i) -> Pytree:
+    return jax.tree.map(lambda x: x[i], t)
+
+
+def tree_size(t: Pytree) -> int:
+    return sum(x.size for x in jax.tree.leaves(t))
+
+
+def tree_bytes(t: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+def tree_cast(t: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), t)
+
+
+def tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(lambda u, v: jnp.where(pred, u, v), a, b)
+
+
+def tree_any_nan(t: Pytree) -> jax.Array:
+    leaves = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(t)]
+    return jnp.any(jnp.stack(leaves)) if leaves else jnp.bool_(False)
+
+
+def tree_flatten_vector(t: Pytree) -> jax.Array:
+    """Concatenate all leaves into one flat f32 vector (for kernels/tests)."""
+    leaves = jax.tree.leaves(t)
+    return jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in leaves])
+
+
+def tree_unflatten_vector(vec: jax.Array, like: Pytree) -> Pytree:
+    """Inverse of :func:`tree_flatten_vector` given a template pytree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def cosine_similarity(a: Pytree, b: Pytree, eps: float = 1e-12) -> jax.Array:
+    """cos(a, b) over whole pytrees, numerically safe near zero vectors."""
+    return tree_dot(a, b) / (tree_norm(a, eps) * tree_norm(b, eps))

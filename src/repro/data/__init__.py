@@ -1,0 +1,3 @@
+from repro.data.dirichlet import dirichlet_partition, heterogeneity_stats  # noqa: F401
+from repro.data.pipeline import FederatedData, build_federated_data  # noqa: F401
+from repro.data.synthetic import SPECS, make_image_dataset, synth_token_batch  # noqa: F401

@@ -1,0 +1,89 @@
+"""Federated data pipeline: per-worker datasets with deterministic batch
+sampling, label-flipping poisoning for malicious workers, and the vetted
+root dataset for BR-DRAG (paper §IV-B).
+
+The pipeline produces, for a round, the stacked tensor
+``[S, U, B, ...]`` consumed by the jitted federated round step —
+S selected workers x U local steps x local batch B.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.attacks import flip_labels  # noqa: F401  (re-export)
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import SPECS, make_image_dataset
+
+
+@dataclasses.dataclass
+class FederatedData:
+    x: np.ndarray  # full train images
+    y: np.ndarray  # full train labels (possibly poisoned per worker at sample time)
+    parts: list[np.ndarray]  # per-worker index sets
+    test: tuple  # (x_test, y_test)
+    n_classes: int
+    malicious: np.ndarray  # bool [M] — workers under adversarial control
+    attack: str = "none"  # none | noise_injection | sign_flipping | label_flipping
+    flip_fraction: float = 0.5
+
+    def sample_round(self, rng: np.random.RandomState, selected, u: int, b: int):
+        """Returns dict(x=[S,U,B,...], y=[S,U,B]) for the selected workers."""
+        xs, ys = [], []
+        for m in selected:
+            idx = self.parts[m]
+            take = rng.choice(idx, size=u * b, replace=len(idx) < u * b)
+            x = self.x[take].reshape(u, b, *self.x.shape[1:])
+            y = self.y[take].reshape(u, b).copy()
+            if self.malicious[m] and self.attack == "label_flipping":
+                # label flipping on half the local samples (paper §VI-B)
+                flip = rng.rand(u, b) < self.flip_fraction
+                y = np.where(flip, self.n_classes - y - 1, y)
+            xs.append(x)
+            ys.append(y)
+        return {"x": np.stack(xs), "y": np.stack(ys).astype(np.int32)}
+
+    def root_batches(self, rng: np.random.RandomState, u: int, b: int, n_root: int):
+        """Vetted root batches [U, B, ...] drawn from trusted (benign) data."""
+        benign = np.where(~self.malicious)[0]
+        pool = np.concatenate([self.parts[m] for m in benign])
+        pool = pool[: n_root] if len(pool) > n_root else pool
+        take = rng.choice(pool, size=u * b, replace=len(pool) < u * b)
+        return {
+            "x": self.x[take].reshape(u, b, *self.x.shape[1:]),
+            "y": self.y[take].reshape(u, b).astype(np.int32),
+        }
+
+    def test_batch(self, n: int = 1024):
+        x, y = self.test
+        return {"x": x[:n], "y": y[:n].astype(np.int32)}
+
+
+def build_federated_data(
+    dataset: str,
+    n_workers: int,
+    beta: float,
+    malicious_fraction: float = 0.0,
+    attack: str = "none",
+    seed: int = 0,
+) -> FederatedData:
+    spec = SPECS[dataset]
+    data = make_image_dataset(spec, seed)
+    x, y = data["train"]
+    parts = dirichlet_partition(y, n_workers, beta, seed)
+    rng = np.random.RandomState(seed + 7)
+    malicious = np.zeros(n_workers, dtype=bool)
+    n_mal = int(round(malicious_fraction * n_workers))
+    if n_mal:
+        malicious[rng.choice(n_workers, size=n_mal, replace=False)] = True
+    return FederatedData(
+        x=x,
+        y=y,
+        parts=parts,
+        test=data["test"],
+        n_classes=spec.n_classes,
+        malicious=malicious,
+        attack=attack,
+        flip_fraction=0.5,
+    )

@@ -1,0 +1,2 @@
+from repro.fl.round import RoundConfig, ServerState, federated_round, init_server_state, make_round_fn  # noqa: F401
+from repro.fl.server import ExperimentConfig, run_experiment  # noqa: F401

@@ -1,0 +1,218 @@
+"""The jitted federated round — simulation regime.
+
+One call = one full paper round: S parallel (vmapped) local-SGD clients
+-> optional Byzantine update attack -> server aggregation (any rule in
+``repro.core.aggregators``) -> global model + server-state update.
+
+The production-regime round (clients = mesh axis groups, collectives
+instead of vmap) lives in ``repro.launch.train``; both share the same
+core math from ``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators, attacks, br_drag, drag
+from repro.core import pytree as pt
+from repro.fl.client import local_update
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundConfig:
+    algorithm: str = "fedavg"  # fedavg|fedprox|scaffold|fedexp|fedacg|drag|
+    #                            fltrust|rfa|raga|krum|trimmed_mean|br_drag
+    local_steps: int = 5  # U
+    lr: float = 0.01  # eta
+    alpha: float = 0.25  # DRAG EMA
+    c: float = 0.1  # DRAG DoD coefficient
+    c_br: float = 0.5  # BR-DRAG DoD coefficient
+    mu: float = 0.2  # FedProx
+    acg_beta: float = 0.2  # FedACG local regulariser
+    acg_lambda: float = 0.85  # FedACG momentum
+    attack: str = "none"
+    attack_kw: tuple = ()  # e.g. (("std", 3.0),)
+    n_byzantine_hint: int = 0  # for krum / trimmed_mean
+    geomed_iters: int = 8
+
+
+class ServerState(NamedTuple):
+    params: pt.Pytree
+    round: jax.Array  # int32
+    drag: drag.DragState  # reference EMA (drag) / unused otherwise
+    momentum: pt.Pytree  # fedacg server momentum m^t
+    control_global: pt.Pytree  # scaffold h
+    control_workers: pt.Pytree  # scaffold h_m stacked [M, ...]
+
+
+def init_server_state(params: pt.Pytree, n_workers: int) -> ServerState:
+    # Copy params: the jitted round fn donates the state, and donating a
+    # buffer the caller still aliases (e.g. two states built from the same
+    # init) would invalidate it out from under them.
+    return ServerState(
+        params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
+        round=jnp.zeros((), jnp.int32),
+        drag=drag.init_state(params),
+        momentum=pt.tree_zeros_like(params),
+        control_global=pt.tree_zeros_like(params),
+        control_workers=jax.tree.map(
+            lambda x: jnp.zeros((n_workers,) + x.shape, x.dtype), params
+        ),
+    )
+
+
+def _client_updates(loss_fn, state: ServerState, cfg: RoundConfig, batches, selected_idx):
+    """vmapped local updates for the S selected workers.
+
+    batches: pytree [S, U, B, ...]; selected_idx: int32 [S] (for scaffold
+    per-worker control variates).
+    """
+    anchor = None
+    if cfg.algorithm == "fedacg":
+        anchor = pt.tree_axpy(cfg.acg_lambda, state.momentum, state.params)
+
+    def one(args):
+        batch_u, widx = args
+        kw: dict = {}
+        if cfg.algorithm == "scaffold":
+            kw["control_local"] = pt.tree_index(state.control_workers, widx)
+            kw["control_global"] = state.control_global
+        if cfg.algorithm == "fedacg":
+            kw["anchor"] = anchor
+        variant = {
+            "fedprox": "fedprox",
+            "scaffold": "scaffold",
+            "fedacg": "fedacg",
+        }.get(cfg.algorithm, "sgd")
+        return local_update(
+            loss_fn, state.params, batch_u, cfg.lr,
+            variant=variant, mu=cfg.mu, beta=cfg.acg_beta, **kw,
+        )
+
+    # NOTE: an unrolled python loop over the S selected workers, not vmap
+    # and not lax.map — vmap batches the conv *filters* (each client's
+    # params diverge during local SGD) which XLA:CPU executes ~17x
+    # slower, and while-loops (lax.map/scan) are ~11x slower than
+    # straight-line code on the CPU backend.  S is small and static in
+    # the paper's protocol.  The production regime parallelises clients
+    # over mesh axes instead (repro.launch.train).
+    s = jax.tree.leaves(batches)[0].shape[0]
+    outs = [one((pt.tree_index(batches, i), selected_idx[i])) for i in range(s)]
+    gs = pt.tree_stack([o[0] for o in outs])
+    aux = {}
+    if outs[0][1]:
+        aux = {
+            k: pt.tree_stack([o[1][k] for o in outs]) for k in outs[0][1]
+        }
+    return gs, aux
+
+
+def federated_round(
+    loss_fn: Callable,
+    state: ServerState,
+    cfg: RoundConfig,
+    batches,  # [S, U, B, ...]
+    selected_idx,  # [S] int32
+    malicious_mask,  # [S] bool
+    key,
+    root_batches=None,  # [U, B, ...] — BR-DRAG / FLTrust root data
+) -> tuple[ServerState, dict]:
+    s = malicious_mask.shape[0]
+    g_stacked, aux = _client_updates(loss_fn, state, cfg, batches, selected_idx)
+
+    # ---- Byzantine update-space attack
+    g_stacked = attacks.apply_update_attack(
+        cfg.attack, key, g_stacked, malicious_mask, **dict(cfg.attack_kw)
+    )
+
+    metrics: dict = {}
+    new_drag = state.drag
+    new_momentum = state.momentum
+    new_h = state.control_global
+    new_hm = state.control_workers
+    params = state.params
+
+    if cfg.algorithm == "drag":
+        params, new_drag, dm = drag.round_step(
+            params, state.drag, g_stacked, alpha=cfg.alpha, c=cfg.c
+        )
+        metrics.update(dm)
+    elif cfg.algorithm in ("br_drag", "fltrust"):
+        assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
+        grad_fn = jax.grad(loss_fn)
+        reference = br_drag.root_reference(params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr)
+        if cfg.algorithm == "br_drag":
+            params, dm = br_drag.round_step(params, g_stacked, reference, c=cfg.c_br)
+            metrics.update(dm)
+        else:
+            delta = aggregators.fltrust(g_stacked, reference)
+            params = pt.tree_add(params, delta)
+            metrics["delta_norm"] = pt.tree_norm(delta)
+    else:
+        if cfg.algorithm in ("fedavg", "fedprox", "scaffold", "fedacg"):
+            delta = aggregators.fedavg(g_stacked)
+        elif cfg.algorithm == "fedexp":
+            delta = aggregators.fedexp(g_stacked)
+        elif cfg.algorithm in ("rfa", "raga", "geomed"):
+            delta = aggregators.geometric_median(g_stacked, iters=cfg.geomed_iters)
+        elif cfg.algorithm == "krum":
+            delta = aggregators.krum(g_stacked, cfg.n_byzantine_hint)
+        elif cfg.algorithm == "trimmed_mean":
+            delta = aggregators.trimmed_mean(g_stacked, cfg.n_byzantine_hint)
+        elif cfg.algorithm == "median":
+            delta = aggregators.coordinate_median(g_stacked)
+        else:
+            raise ValueError(f"unknown algorithm {cfg.algorithm}")
+        params = pt.tree_add(params, delta)
+        metrics["delta_norm"] = pt.tree_norm(delta)
+        if cfg.algorithm == "fedacg":
+            new_momentum = pt.tree_axpy(cfg.acg_lambda, state.momentum, delta)
+        if cfg.algorithm == "scaffold":
+            n_workers = jax.tree.leaves(state.control_workers)[0].shape[0]
+            new_controls = aux["new_control"]  # [S, ...]
+            old_controls = jax.vmap(lambda i: pt.tree_index(state.control_workers, i))(
+                selected_idx
+            )
+            # h <- h + (1/M) sum_S (new - old)
+            diff = jax.tree.map(lambda a, b: jnp.sum(a - b, 0) / n_workers, new_controls, old_controls)
+            new_h = pt.tree_add(state.control_global, diff)
+            new_hm = jax.tree.map(
+                lambda all_h, upd: all_h.at[selected_idx].set(upd),
+                state.control_workers,
+                new_controls,
+            )
+
+    metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g_stacked))
+    new_state = ServerState(
+        params=params,
+        round=state.round + 1,
+        drag=new_drag,
+        momentum=new_momentum,
+        control_global=new_h,
+        control_workers=new_hm,
+    )
+    return new_state, metrics
+
+
+def make_round_fn(loss_fn, cfg: RoundConfig, with_root: bool):
+    """jit-compiled round with static config."""
+
+    if with_root:
+        @partial(jax.jit, donate_argnums=(0,))
+        def fn(state, batches, selected_idx, malicious_mask, key, root_batches):
+            return federated_round(
+                loss_fn, state, cfg, batches, selected_idx, malicious_mask, key,
+                root_batches=root_batches,
+            )
+    else:
+        @partial(jax.jit, donate_argnums=(0,))
+        def fn(state, batches, selected_idx, malicious_mask, key):
+            return federated_round(
+                loss_fn, state, cfg, batches, selected_idx, malicious_mask, key
+            )
+
+    return fn

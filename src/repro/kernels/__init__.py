@@ -1,0 +1,20 @@
+"""Pallas TPU kernels with ``ops.py`` jitted wrappers and ``ref.py``
+pure-jnp oracles — validated in interpret mode on CPU, Mosaic-compiled
+on real TPUs.
+
+Aggregation hot path (the paper's technique): fused DRAG / BR-DRAG
+calibration, Weiszfeld geometric-median step, trimmed mean.
+Model hot spots (§Perf additions): flash attention (online softmax,
+GQA/causal/window), Mamba-1 selective scan and the RG-LRU linear
+recurrence — both with VMEM-resident state.
+"""
+from repro.kernels import (  # noqa: F401
+    drag_calibrate,
+    flash_attention,
+    linear_recurrence,
+    ops,
+    ref,
+    selective_scan,
+    trimmed_mean,
+    weiszfeld,
+)

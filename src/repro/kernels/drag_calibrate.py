@@ -1,0 +1,109 @@
+"""Fused DRAG/BR-DRAG calibration Pallas TPU kernels.
+
+The aggregation math of eqs. (10)/(11)/(15) over a stacked update matrix
+``G:[S, d]`` (d = model parameter count, tens of GB at assigned scales)
+is memory-bound: naive jnp issues four HBM passes over G (dot, norm,
+scale, blend).  Two kernels bring that to two passes:
+
+  * ``dot_norms``  — one pass: per-worker <g_m, r>, ||g_m||^2 and ||r||^2
+    accumulated in VMEM scratch across d-tiles (grid = (S/bs, d/bd),
+    f32 accumulators).
+  * ``blend``      — one pass: v_m = a_m * g_m + b_m * r with the per-
+    worker coefficients a, b computed on-host from the phase-1 scalars
+    (a [S]-sized vector; negligible).
+
+Block sizes default to (8, 1024): G tile 8x1024xf32 = 32 KiB VMEM, r
+tile 4 KiB — well inside the ~16 MiB VMEM budget, lane-dim 1024 is a
+multiple of 128 for clean vectorisation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BS = 8  # workers per tile (sublane dim)
+DEF_BD = 1024  # parameter-dim tile (lane dim, multiple of 128)
+
+
+# ------------------------------------------------------------ dot_norms
+
+def _dot_norms_kernel(g_ref, r_ref, dots_ref, gsq_ref, rsq_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        gsq_ref[...] = jnp.zeros_like(gsq_ref)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_r():
+        rsq_ref[...] = jnp.zeros_like(rsq_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # [bs, bd]
+    r = r_ref[...].astype(jnp.float32)  # [bd]
+    dots_ref[...] += g @ r
+    gsq_ref[...] += jnp.sum(g * g, axis=1)
+    # accumulate ||r||^2 once per d-tile (only on the first worker row)
+    @pl.when(pl.program_id(0) == 0)
+    def _racc():
+        rsq_ref[...] += jnp.sum(r * r)[None]
+
+
+def dot_norms(g, r, *, block_s: int = DEF_BS, block_d: int = DEF_BD, interpret: bool = False):
+    s, d = g.shape
+    bs, bd = min(block_s, s), min(block_d, d)
+    assert s % bs == 0 and d % bd == 0, (s, d, bs, bd)
+    grid = (s // bs, d // bd)
+    dots, gsq, rsq = pl.pallas_call(
+        _dot_norms_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, r)
+    return dots, gsq, rsq[0]
+
+
+# ---------------------------------------------------------------- blend
+
+def _blend_kernel(g_ref, r_ref, a_ref, b_ref, v_ref):
+    g = g_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    a = a_ref[...][:, None]
+    b = b_ref[...][:, None]
+    v_ref[...] = (a * g + b * r[None, :]).astype(v_ref.dtype)
+
+
+def blend(g, r, a, b, *, block_s: int = DEF_BS, block_d: int = DEF_BD, interpret: bool = False):
+    s, d = g.shape
+    bs, bd = min(block_s, s), min(block_d, d)
+    assert s % bs == 0 and d % bd == 0
+    grid = (s // bs, d // bd)
+    return pl.pallas_call(
+        _blend_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, d), g.dtype),
+        interpret=interpret,
+    )(g, r, a, b)

@@ -1,0 +1,146 @@
+"""Flash-attention (online-softmax) Pallas TPU kernel.
+
+The §Roofline analysis shows the f32 [B, H, Sq, Sk] score/softmax chain
+is the dominant HBM traffic of every attention architecture's train and
+prefill steps (e.g. qwen2.5-14b train_4k: multi-TB of score-chain ops
+per device).  This kernel keeps the KV-block scores, the running max/
+denominator and the output accumulator in VMEM across the KV grid axis,
+so HBM traffic is exactly the q/k/v reads + the o write:
+
+    bytes = 2*B*H*Sq*dh + 2*B*Hkv*Sk*dh        (vs O(B*H*Sq*Sk))
+
+GQA is handled in-kernel via the K/V BlockSpec index maps (q head ->
+kv head = h // (H/Hkv)) — no materialised head broadcast.  Causal and
+sliding-window masking are compile-time parameters.
+
+Block sizes default to (bq, bk) = (256, 256): q tile 256x128xf32 =
+128 KiB, k/v tiles 128 KiB each, scores 256x256xf32 = 256 KiB — a
+working set well inside the ~16 MiB VMEM budget with the MXU contraction
+dims (dh=128, bk=256) hardware-aligned.
+
+``ref.py`` holds the pure-jnp oracle; tests sweep shapes/dtypes/masks in
+interpret mode (CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ = 256
+DEF_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, window, bq, bk, nk,
+):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)  # [bk, dh]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    if causal or window is not None:
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        # fully-masked rows (l == 0) produce 0 output, not NaN
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEF_BQ,
+    block_k: int = DEF_BK,
+    interpret: bool = False,
+):
+    """q: [B, H, Sq, dh]; k, v: [B, Hkv, Sk, dh] -> [B, H, Sq, dh].
+
+    H must be a multiple of Hkv (GQA).  Sq % block_q == 0 and
+    Sk % block_k == 0 (ops.py pads upstream).
+    """
+    b, h, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = scale if scale is not None else dh ** -0.5
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        hh = bh % h
+        return ((bh // h) * hkv + hh // group, j, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(
+        q.reshape(b * h, sq, dh),
+        k.reshape(b * hkv, sk, dh),
+        v.reshape(b * hkv, sk, dh),
+    )
+    return out.reshape(b, h, sq, dh)
+
+
+def io_bytes(b, h, hkv, sq, sk, dh, dtype_bytes=2):
+    """Analytic HBM traffic of the kernel (for §Roofline adjustment)."""
+    return dtype_bytes * (2 * b * h * sq * dh + 2 * b * hkv * sk * dh)

@@ -1,0 +1,93 @@
+"""Diagonal linear-recurrence Pallas TPU kernel (RG-LRU / Griffin).
+
+    h_t = a_t * h_{t-1} + g_t          a, g, h: [B, S, w]
+
+The same VMEM-state treatment as ``selective_scan`` but without the
+d_state axis: grid = (B * w/bw, S/chunk) with the chunk axis innermost,
+the [bw] state carried in VMEM scratch across sequence blocks, and the
+in-chunk recurrence a ``fori_loop`` over positions in VREGs.  HBM
+traffic = the a/g reads + the h write:
+
+    bytes = 4 * 3 * B * S * w          (vs O(log-depth * B*S*w) in XLA)
+
+Used by the recurrentgemma-9b hybrid blocks (``SSMConfig.use_kernel``).
+``ref.py`` holds the sequential oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BW = 512
+DEF_CHUNK = 256
+
+
+def _lr_kernel(a_ref, g_ref, y_ref, h_ref, *, chunk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0, 0]  # [chunk, bw] f32
+    g = g_ref[0, 0]  # [chunk, bw] f32
+
+    def step(t, carry):
+        h, y = carry
+        h = a[t] * h + g[t]
+        y = y.at[t].set(h)
+        return h, y
+
+    y0 = jnp.zeros((chunk, a.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_ref[...], y0))
+    h_ref[...] = h
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+
+def linear_recurrence(
+    a, g, *, block_w: int = DEF_BW, chunk: int = DEF_CHUNK, interpret: bool = False
+):
+    """a, g: [B, S, w] -> h: [B, S, w] with h[-1] = 0."""
+    bsz, s, w = a.shape
+    bw = min(block_w, w)
+    ck = min(chunk, s)
+    assert w % bw == 0 and s % ck == 0, (w, bw, s, ck)
+    nw, nc = w // bw, s // ck
+
+    def row_major(t):
+        return (
+            t.reshape(bsz, nc, ck, nw, bw)
+            .transpose(0, 3, 1, 2, 4)
+            .reshape(bsz * nw, nc, ck, bw)
+        )
+
+    a4 = row_major(a.astype(jnp.float32))
+    g4 = row_major(g.astype(jnp.float32))
+
+    y4 = pl.pallas_call(
+        functools.partial(_lr_kernel, chunk=ck),
+        grid=(bsz * nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, ck, bw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ck, bw), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ck, bw), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * nw, nc, ck, bw), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a4, g4)
+
+    return (
+        y4.reshape(bsz, nw, nc, ck, bw)
+        .transpose(0, 2, 3, 1, 4)
+        .reshape(bsz, s, w)
+    )
+
+
+def io_bytes(bsz, s, w, dtype_bytes=4):
+    """Analytic HBM traffic (for §Roofline adjustment)."""
+    return dtype_bytes * 3 * bsz * s * w

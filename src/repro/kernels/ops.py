@@ -1,0 +1,194 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes eagerly in Python per grid step, which validates
+the block decomposition and the math against ``ref.py``.  On a real TPU
+the same calls compile to Mosaic.
+
+``*_pytree`` variants apply the fused ops to stacked update *pytrees*
+(the FL aggregation interface): leaves are flattened into a padded
+[S, d] matrix once, processed in two HBM passes, and unflattened.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import drag_calibrate as dk
+from repro.kernels import flash_attention as fk
+from repro.kernels import linear_recurrence as lrk
+from repro.kernels import selective_scan as sk
+from repro.kernels import trimmed_mean as tk
+from repro.kernels import weiszfeld as wk
+from repro.kernels.ref import calibrate_coeffs
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# ------------------------------------------------------- matrix-level ops
+
+@partial(jax.jit, static_argnames=("c", "mode", "interpret"))
+def drag_calibrate(g, r, c: float, mode: str = "drag", interpret: bool | None = None):
+    """Fused eqs. (10)+(11)/(15) over G:[S,d], r:[d].
+
+    Returns (v [S,d], lam [S], delta [d]) where delta = mean_s v_s.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    s0, d0 = g.shape
+    bs = 8 if s0 % 8 == 0 else (s0 if s0 <= 8 else 1)
+    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
+    dots, gsq, rsq = dk.dot_norms(g, r, block_s=bs, block_d=bd, interpret=interpret)
+    a, b, lam = calibrate_coeffs(dots, gsq, rsq, c, mode)
+    v = dk.blend(g, r, a, b, block_s=bs, block_d=bd, interpret=interpret)
+    delta = jnp.mean(v, axis=0)
+    return v, lam, delta
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret"))
+def geometric_median(g, iters: int = 8, eps: float = 1e-8, interpret: bool | None = None):
+    """Weiszfeld iterations over G:[S,d] using the two Pallas kernels."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s0, d0 = g.shape
+    bs = 8 if s0 % 8 == 0 else (s0 if s0 <= 8 else 1)
+    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
+    z = jnp.mean(g.astype(jnp.float32), axis=0)
+
+    def body(z, _):
+        d2 = wk.sq_dists(g, z, block_s=bs, block_d=bd, interpret=interpret)
+        w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
+        num = wk.weighted_sum(g, w, block_s=bs, block_d=bd, interpret=interpret)
+        return num / jnp.sum(w), None
+
+    z, _ = jax.lax.scan(body, z, None, length=iters)
+    return z.astype(g.dtype)
+
+
+@partial(jax.jit, static_argnames=("trim", "interpret"))
+def trimmed_mean(g, trim: int, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    d0 = g.shape[1]
+    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
+    return tk.trimmed_mean(g, trim, block_d=bd, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+):
+    """Flash attention over [B, H, S, dh] with GQA k/v [B, Hkv, S, dh].
+
+    Pads Sq/Sk up to the block sizes (padded k positions are masked by
+    the causal/window tests; padded q rows are sliced off).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, sq, dh = q.shape
+    sk_len = k.shape[2]
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk_len, 8))
+    qp, _ = _pad_to(q, bq, axis=2)
+    kp, _ = _pad_to(k, bk, axis=2)
+    vp, _ = _pad_to(v, bk, axis=2)
+    # padded kv positions have kpos > any real qpos - masked iff causal;
+    # for non-causal, mask by windowing on the true length
+    win = window
+    if not causal and kp.shape[2] != sk_len:
+        raise ValueError("non-causal padding unsupported; pad upstream")
+    out = fk.flash_attention(
+        qp, kp, vp, causal=causal, window=win,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :, :sq]
+
+
+@partial(jax.jit, static_argnames=("block_di", "chunk", "interpret"))
+def selective_scan(dt, x, b, c, a, *, block_di: int = 512, chunk: int = 256,
+                   interpret: bool | None = None):
+    """Diagonal selective SSM scan (Mamba-1) — see kernels.selective_scan."""
+    interpret = _interpret_default() if interpret is None else interpret
+    di = dt.shape[-1]
+    s = dt.shape[1]
+    bdi = block_di if di % block_di == 0 else (128 if di % 128 == 0 else di)
+    ck = chunk if s % chunk == 0 else s
+    return sk.selective_scan(dt, x, b, c, a, block_di=bdi, chunk=ck, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
+def linear_recurrence(a, g, *, block_w: int = 512, chunk: int = 256,
+                      interpret: bool | None = None):
+    """h_t = a_t h_{t-1} + g_t over [B, S, w] (RG-LRU) — Pallas kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    w, s = a.shape[-1], a.shape[1]
+    bw = block_w if w % block_w == 0 else (128 if w % 128 == 0 else w)
+    ck = chunk if s % chunk == 0 else s
+    return lrk.linear_recurrence(a, g, block_w=bw, chunk=ck, interpret=interpret)
+
+
+# ------------------------------------------------------- pytree-level ops
+
+def _stack_flatten(updates_stacked):
+    """Stacked pytree (leading S axis) -> [S, d_padded] matrix + meta."""
+    leaves = jax.tree.leaves(updates_stacked)
+    s = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.reshape(s, -1).astype(jnp.float32) for x in leaves], axis=1
+    )
+    flat, d = _pad_to(flat, 128, axis=1)
+    return flat, d
+
+
+def _unflatten_like(vec, like_single):
+    leaves, treedef = jax.tree.flatten(like_single)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def drag_calibrate_pytree(updates_stacked, reference, c: float, mode: str = "drag"):
+    """Fused DRAG aggregation over stacked update pytrees.
+
+    Returns (delta pytree, lam [S]).  Numerically identical (up to f32
+    reassociation) to ``repro.core.drag.aggregate`` /
+    ``repro.core.br_drag.aggregate``.
+    """
+    g, _ = _stack_flatten(updates_stacked)
+    r_flat, _ = _stack_flatten(jax.tree.map(lambda x: x[None], reference))
+    r = r_flat[0]
+    _, lam, delta = drag_calibrate(g, r, c, mode)
+    single = jax.tree.map(lambda x: x[0], updates_stacked)
+    return _unflatten_like(delta, single), lam
+
+
+def geometric_median_pytree(updates_stacked, iters: int = 8):
+    g, _ = _stack_flatten(updates_stacked)
+    z = geometric_median(g, iters=iters)
+    single = jax.tree.map(lambda x: x[0], updates_stacked)
+    return _unflatten_like(z, single)
+
+
+def trimmed_mean_pytree(updates_stacked, trim: int):
+    g, _ = _stack_flatten(updates_stacked)
+    tm = trimmed_mean(g, trim)
+    single = jax.tree.map(lambda x: x[0], updates_stacked)
+    return _unflatten_like(tm, single)

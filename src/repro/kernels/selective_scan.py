@@ -1,0 +1,123 @@
+"""Mamba-1 selective-scan Pallas TPU kernel.
+
+§Roofline P1 (falcon-mamba-7b x train_4k) shows the scan is memory-
+pathological in pure XLA: whether expressed as ``associative_scan``
+(log-depth levels of [chunk, B, di, ds] intermediates) or unrolled, the
+HLO traffic is O(levels * B*S*di*ds) f32.  The CUDA kernel the paper's
+SSM family relies on solves this with SRAM-resident states; this is the
+TPU re-think: the [bdi, ds] state lives in VMEM scratch across the
+sequence grid axis, the discretisation (exp(dt*A), dt*B*x) happens
+in-VREG per position, and HBM traffic is exactly the kernel I/O:
+
+    bytes = 4 * (3*B*S*di + 2*B*S*ds) + 4*di*ds      (~3 passes of [B,S,di])
+
+i.e. independent of d_state and of scan depth.
+
+Layout: grid = (B * di/bdi, S/chunk), chunk axis innermost so the state
+scratch carries across sequence blocks of the same (batch, di-tile) row.
+dt/x tiles are [chunk, bdi] (lane dim bdi a multiple of 128), B/C tiles
+[chunk, ds].  The in-chunk recurrence is a ``lax.fori_loop`` over
+positions updating the [bdi, ds] state in VREGs — serial in S but with
+bdi*ds = 512*16 = 8k lanes of parallel VPU work per step.
+
+``ref.py`` holds the sequential jnp oracle; tests sweep (B, S, di, ds,
+chunk) in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BDI = 512
+DEF_CHUNK = 256
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_ref, *, chunk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dt = dt_ref[0, 0]  # [chunk, bdi] f32
+    x = x_ref[0, 0]  # [chunk, bdi] f32
+    bm = b_ref[0, 0]  # [chunk, ds]  f32
+    cm = c_ref[0, 0]  # [chunk, ds]  f32
+    a = a_ref[0]  # [bdi, ds]   f32 (= -exp(A_log) tile)
+
+    def step(t, carry):
+        h, y = carry
+        a_bar = jnp.exp(dt[t][:, None] * a)  # [bdi, ds]
+        bx = (dt[t] * x[t])[:, None] * bm[t][None, :]  # [bdi, ds]
+        h = a_bar * h + bx
+        y = y.at[t].set(h @ cm[t])  # [bdi]
+        return h, y
+
+    y0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_ref[...], y0))
+    h_ref[...] = h
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+
+def selective_scan(
+    dt, x, b, c, a, *,
+    block_di: int = DEF_BDI,
+    chunk: int = DEF_CHUNK,
+    interpret: bool = False,
+):
+    """Diagonal selective SSM scan.
+
+    dt, x: [B, S, di] (f32); b, c: [B, S, ds] (f32); a: [di, ds] (f32).
+    Returns y: [B, S, di] with y[t] = C[t] . h[t],
+    h[t] = exp(dt[t]*A) h[t-1] + dt[t]*B[t]*x[t],  h[-1] = 0.
+    """
+    bsz, s, di = dt.shape
+    ds = b.shape[-1]
+    bdi = min(block_di, di)
+    ck = min(chunk, s)
+    assert di % bdi == 0 and s % ck == 0, (di, bdi, s, ck)
+    nd, nc = di // bdi, s // ck
+
+    # [B, S, di] -> [B*nd, nc, ck, bdi]: one grid row per (batch, di-tile)
+    def row_major(t):
+        return (
+            t.reshape(bsz, nc, ck, nd, bdi)
+            .transpose(0, 3, 1, 2, 4)
+            .reshape(bsz * nd, nc, ck, bdi)
+        )
+
+    dt4, x4 = row_major(dt.astype(jnp.float32)), row_major(x.astype(jnp.float32))
+    b4 = b.astype(jnp.float32).reshape(bsz, nc, ck, ds)
+    c4 = c.astype(jnp.float32).reshape(bsz, nc, ck, ds)
+    a3 = a.astype(jnp.float32).reshape(nd, bdi, ds)
+
+    y4 = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=ck),
+        grid=(bsz * nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, ck, bdi), lambda g, j: (g, j, 0, 0)),
+            pl.BlockSpec((1, 1, ck, bdi), lambda g, j: (g, j, 0, 0)),
+            pl.BlockSpec((1, 1, ck, ds), lambda g, j: (g // nd, j, 0, 0)),
+            pl.BlockSpec((1, 1, ck, ds), lambda g, j: (g // nd, j, 0, 0)),
+            pl.BlockSpec((1, bdi, ds), lambda g, j: (g % nd, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ck, bdi), lambda g, j: (g, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * nd, nc, ck, bdi), dt.dtype),
+        scratch_shapes=[pltpu.VMEM((bdi, ds), jnp.float32)],
+        interpret=interpret,
+    )(dt4, x4, b4, c4, a3)
+
+    return (
+        y4.reshape(bsz, nd, nc, ck, bdi)
+        .transpose(0, 2, 3, 1, 4)
+        .reshape(bsz, s, di)
+    )
+
+
+def io_bytes(bsz, s, di, ds, dtype_bytes=4):
+    """Analytic HBM traffic (for §Roofline adjustment)."""
+    return dtype_bytes * (3 * bsz * s * di + 2 * bsz * s * ds) + dtype_bytes * di * ds

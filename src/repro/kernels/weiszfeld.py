@@ -1,0 +1,80 @@
+"""Weiszfeld geometric-median iteration Pallas kernels (RFA/RAGA reducers).
+
+Per iteration over ``G:[S, d]`` and current estimate ``z:[d]``:
+  w_s = 1 / max(||g_s - z||, eps);  z' = sum_s w_s g_s / sum_s w_s
+
+Kernel 1 (``sq_dists``): per-worker squared distances, one HBM pass over
+G with VMEM accumulation across d-tiles.
+Kernel 2 (``weighted_mean``): one HBM pass producing the reweighted mean
+with the [S] weight vector resident in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BS = 8
+DEF_BD = 1024
+
+
+def _sq_dists_kernel(g_ref, z_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    diff = g - z[None, :]
+    out_ref[...] += jnp.sum(diff * diff, axis=1)
+
+
+def sq_dists(g, z, *, block_s=DEF_BS, block_d=DEF_BD, interpret=False):
+    s, d = g.shape
+    bs, bd = min(block_s, s), min(block_d, d)
+    assert s % bs == 0 and d % bd == 0
+    return pl.pallas_call(
+        _sq_dists_kernel,
+        grid=(s // bs, d // bd),
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
+        interpret=interpret,
+    )(g, z)
+
+
+def _weighted_mean_kernel(g_ref, w_ref, out_ref, *, s_total: int):
+    i = pl.program_id(1)  # worker-tile index (reduction axis)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # [bs, bd]
+    w = w_ref[...].astype(jnp.float32)  # [bs]
+    out_ref[...] += w @ g
+
+
+def weighted_sum(g, w, *, block_s=DEF_BS, block_d=DEF_BD, interpret=False):
+    """sum_s w_s g_s  -> [d]  (normalisation done by the caller)."""
+    s, d = g.shape
+    bs, bd = min(block_s, s), min(block_d, d)
+    assert s % bs == 0 and d % bd == 0
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_weighted_mean_kernel, s_total=s),
+        grid=(d // bd, s // bs),  # d outer so the out tile stays resident
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda j, i: (i, j)),
+            pl.BlockSpec((bs,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(g, w)

@@ -1,0 +1,5 @@
+"""Production launch layer.  NOTE: repro.launch.dryrun must be executed
+as a module entry point (python -m repro.launch.dryrun) — importing it
+sets XLA_FLAGS for 512 host devices, so it is deliberately NOT imported
+here."""
+from repro.launch import analysis, mesh, serve, specs, train  # noqa: F401

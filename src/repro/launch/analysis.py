@@ -1,0 +1,114 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs(per-device) / peak_FLOPs_per_chip
+  memory term     = HLO_bytes(per-device) / HBM_bw_per_chip
+  collective term = collective_bytes(per-device) / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD
+per-device module).  collective_bytes is parsed from the HLO text:
+the summed output sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction
+(all-reduce counted 2x: reduce-scatter + all-gather phases on a ring).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e constants (assignment §ROOFLINE ANALYSIS)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-reduce(?:-start)?|all-gather(?:-start)?|reduce-scatter|"
+    r"all-to-all|collective-permute(?:-start)?)\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type byte totals (per-device module)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(type_str)
+        # ring all-reduce moves ~2x the buffer (RS + AG phases)
+        if op == "all-reduce":
+            b *= 2
+        out[op] = out.get(op, 0) + b
+        out.setdefault("count_" + op, 0)
+        out["count_" + op] += 1
+    out["total"] = sum(v for k, v in out.items() if not k.startswith("count"))
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int) -> dict:
+    """cost = compiled.cost_analysis() (per-device); returns seconds."""
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: prefer the aggregate key; else sum operand keys
+    if "bytes accessed" in cost:
+        byts = float(cost["bytes accessed"])
+    else:
+        byts = sum(float(v) for k, v in cost.items() if k.startswith("bytes accessed"))
+    cterm = flops / PEAK_FLOPS
+    mterm = byts / HBM_BW
+    xterm = float(coll.get("total", 0)) / ICI_BW
+    dominant = max(
+        (("compute", cterm), ("memory", mterm), ("collective", xterm)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "per_device_flops": flops,
+        "per_device_bytes": byts,
+        "per_device_collective_bytes": float(coll.get("total", 0)),
+        "compute_s": cterm,
+        "memory_s": mterm,
+        "collective_s": xterm,
+        "dominant": dominant,
+        "n_chips": n_chips,
+    }
+
+
+def model_flops(n_params_active: int, n_tokens: int, mult: int = 6) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) / 6 * N_active * D (MoE)."""
+    return float(mult) * n_params_active * n_tokens
+
+
+def memory_summary(mem_analysis) -> dict:
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(mem_analysis, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

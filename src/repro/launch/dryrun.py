@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any jax import (device count locks
+# on first backend init).  Everything below is ordinary.
+
+# Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+#
+# For each (arch x input-shape x mesh): build ShapeDtypeStruct inputs,
+# ``jax.jit(step).lower(...).compile()`` under the production mesh, print
+# ``memory_analysis()`` / ``cost_analysis()``, parse collective bytes from
+# the HLO, and emit a JSON record for §Roofline.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k \
+#       --mesh single --out runs/dryrun
+#   python -m repro.launch.dryrun --all --mesh both --out runs/dryrun
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, active_param_count, get_arch, param_count, valid_pairs
+from repro.launch import analysis
+from repro.launch.mesh import batch_axes_of, data_size, make_production_mesh
+from repro.launch.serve import make_decode_step, make_prefill
+from repro.launch.specs import input_specs
+from repro.launch.train import FLStepConfig, fits_fl_single_pod, make_fl_round_step, make_train_step
+from repro.models import transformer as T
+from repro.sharding import rules
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DTYPE = jnp.bfloat16
+
+
+def _param_sds(arch, dtype=DTYPE):
+    return jax.eval_shape(lambda k: T.init_params(k, arch, dtype), jax.random.PRNGKey(0))
+
+
+def _lower_step(arch, arch_id, shape, mesh, aggregator, local_steps):
+    """Build the right step for the shape's mode and lower it."""
+    params_sds = _param_sds(arch)
+    if shape.mode == "train":
+        specs = input_specs(arch, shape, local_steps)
+        multi_pod = "pod" in mesh.axis_names
+        client_axis = "pod" if multi_pod else "data"
+        use_fl = (multi_pod or fits_fl_single_pod(arch)) and aggregator != "none"
+        kind = f"fl_round[{client_axis}]" if use_fl else "train_fsdp"
+        if use_fl:
+            fl = FLStepConfig(aggregator=aggregator, local_steps=local_steps)
+            step, _ = make_fl_round_step(arch, mesh, client_axis, fl, DTYPE)
+            args = [params_sds, params_sds, specs]
+            if aggregator == "br_drag":
+                root = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (s.shape[0], max(s.shape[1] // 32, 1)) + s.shape[2:], s.dtype
+                    ),
+                    specs,
+                )
+                args.append(root)
+            with mesh:
+                return step.lower(*args), kind
+        step, shardings, opt = make_train_step(
+            arch, mesh,
+            optimizer="sgd_momentum" if arch_id.startswith("kimi") else "adamw",
+            dtype=DTYPE,
+        )
+        ostate = jax.eval_shape(opt.init, params_sds)
+        with mesh:
+            return step.lower(params_sds, ostate, specs), kind
+    if shape.mode == "prefill":
+        specs = input_specs(arch, shape)
+        step, _ = make_prefill(arch, mesh, DTYPE)
+        with mesh:
+            return step.lower(params_sds, specs), "prefill"
+    specs = input_specs(arch, shape)
+    step, info = make_decode_step(arch, mesh, shape, DTYPE)
+    with mesh:
+        return step.lower(params_sds, info["cache_eval"], specs), "decode"
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    if "bytes accessed" in cost:
+        byts = float(cost["bytes accessed"])
+    else:
+        byts = sum(float(v) for k, v in cost.items() if str(k).startswith("bytes accessed"))
+    coll = analysis.collective_bytes(compiled.as_text())
+    return flops, byts, float(coll.get("total", 0)), coll
+
+
+def _cost_variant(arch, depth: int, seq_len: int):
+    """Unrolled shallow variant for loop-corrected cost analysis."""
+    import dataclasses
+
+    kw = dict(n_layers=depth, q_unroll=True)
+    if arch.arch_type in ("ssm", "hybrid"):
+        # unroll the chunk loop (keep the production chunk size!) so the
+        # corrected cost reflects the true chunked program, not a
+        # single-giant-chunk variant with a different memory profile.
+        kw["ssm"] = dataclasses.replace(arch.ssm, unroll=True)
+    return dataclasses.replace(arch, **kw)
+
+
+def corrected_cost(arch, arch_id, shape, mesh, aggregator, local_steps):
+    """XLA cost analysis counts while-loop bodies ONCE; the layer stack is
+    a scan and attention query blocks are a loop.  Lower unrolled 1-block
+    and 2-block depth variants and extrapolate:
+        total = cost(P) + (blocks_eff - 1) * (cost(2P) - cost(P)).
+    """
+    from repro.models.transformer import pattern_of
+
+    pattern, tail = pattern_of(arch)
+    p_len = len(pattern)
+    blocks_eff = arch.n_layers // p_len + (len(tail) / p_len if tail else 0.0)
+
+    a1 = _cost_variant(arch, p_len, shape.seq_len)
+    a2 = _cost_variant(arch, 2 * p_len, shape.seq_len)
+    l1, _ = _lower_step(a1, arch_id, shape, mesh, aggregator, local_steps)
+    c1 = l1.compile()
+    f1, b1, x1, _ = _cost_of(c1)
+    l2, _ = _lower_step(a2, arch_id, shape, mesh, aggregator, local_steps)
+    c2 = l2.compile()
+    f2, b2, x2, _ = _cost_of(c2)
+    per_block = (f2 - f1, b2 - b1, x2 - x1)
+    scale = blocks_eff - 1.0
+    return {
+        "flops": f1 + scale * per_block[0],
+        "bytes": b1 + scale * per_block[1],
+        "collective": x1 + scale * per_block[2],
+        "per_block": {"flops": per_block[0], "bytes": per_block[1], "collective": per_block[2]},
+        "blocks_eff": blocks_eff,
+    }
+
+
+def lower_one(arch_id: str, shape_name: str, mesh, *, aggregator="drag",
+              local_steps: int = 1, moe_dispatch: str | None = None,
+              cost_correct: bool = True):
+    """Lower + compile one combo; returns the record dict."""
+    import dataclasses
+
+    arch = get_arch(arch_id)
+    if moe_dispatch and arch.arch_type == "moe":
+        arch = dataclasses.replace(arch, moe=dataclasses.replace(arch.moe, dispatch=moe_dispatch))
+    shape = INPUT_SHAPES[shape_name]
+    n_chips = mesh.size
+    record: dict = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+        "aggregator": aggregator,
+        "local_steps": local_steps,
+    }
+    t0 = time.time()
+    lowered, kind = _lower_step(arch, arch_id, shape, mesh, aggregator, local_steps)
+    record["step_kind"] = kind
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    raw_flops, raw_bytes, raw_coll, coll = _cost_of(compiled)
+    record["memory"] = analysis.memory_summary(mem)
+    record["cost_raw"] = {"flops": raw_flops, "bytes": raw_bytes}
+    record["collectives"] = coll
+
+    if cost_correct:
+        t2 = time.time()
+        corr = corrected_cost(arch, arch_id, shape, mesh, aggregator, local_steps)
+        record["cost_corrected"] = corr
+        record["cost_correct_s"] = round(time.time() - t2, 1)
+        cost = {"flops": corr["flops"], "bytes accessed": corr["bytes"]}
+        coll_used = {"total": corr["collective"]}
+    else:
+        cost = {"flops": raw_flops, "bytes accessed": raw_bytes}
+        coll_used = coll
+    record["roofline"] = analysis.roofline_terms(cost, coll_used, n_chips)
+
+    # model-FLOPs utilisation ratio
+    n_tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    n_tokens *= local_steps if shape.mode == "train" else 1
+    mult = 6 if shape.mode == "train" else 2
+    mf = analysis.model_flops(active_param_count(arch), n_tokens, mult)
+    total_hlo_flops = record["roofline"]["per_device_flops"] * n_chips
+    record["model_flops"] = mf
+    record["hlo_flops_total"] = total_hlo_flops
+    record["model_flops_ratio"] = mf / total_hlo_flops if total_hlo_flops else 0.0
+    record["params_total"] = param_count(arch)
+    record["params_active"] = active_param_count(arch)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--aggregator", default="drag")
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--moe-dispatch", default=None, choices=[None, "einsum", "sort"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    combos = []
+    for aid, sname, runnable, reason in valid_pairs():
+        if args.arch and aid != args.arch:
+            continue
+        if args.shape and sname != args.shape:
+            continue
+        if not args.all and not (args.arch or args.shape):
+            continue
+        combos.append((aid, sname, runnable, reason))
+
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mname = "multi" if multi_pod else "single"
+        for aid, sname, runnable, reason in combos:
+            key = f"{aid}__{sname}__{mname}" + (f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, key + ".json")
+            if not runnable:
+                rec = {"arch": aid, "shape": sname, "mesh_name": mname, "skipped": reason}
+                print(f"[SKIP] {key}: {reason}", flush=True)
+            else:
+                print(f"[RUN ] {key}", flush=True)
+                try:
+                    rec = lower_one(
+                        aid, sname, mesh,
+                        aggregator=args.aggregator,
+                        local_steps=args.local_steps,
+                        moe_dispatch=args.moe_dispatch,
+                    )
+                    rec["mesh_name"] = mname
+                    r = rec["roofline"]
+                    print(
+                        f"   ok: compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                        f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+                        f"mf_ratio={rec['model_flops_ratio']:.3f} "
+                        f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": aid, "shape": sname, "mesh_name": mname,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"   FAIL: {type(e).__name__}: {str(e)[:200]}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2, default=str)
+            results.append(rec)
+
+    n_ok = sum(1 for r in results if "roofline" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction (assignment §MULTI-POD DRY-RUN).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None):
+    """Small mesh over whatever local devices exist (CPU tests)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    d = 2 if n % 2 == 0 and n > 1 else 1
+    return jax.make_mesh((d, n // d), ("data", "model"), devices=devices[: d * (n // d)])
+
+
+def batch_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh) -> int:
+    n = 1
+    for a in batch_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,111 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+runs/dryrun/*.json artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report runs/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "llama4-scout-17b-a16e", "starcoder2-3b", "starcoder2-7b",
+    "mistral-nemo-12b", "qwen2.5-14b", "internvl2-26b",
+    "recurrentgemma-9b", "hubert-xlarge", "falcon-mamba-7b",
+    "kimi-k2-1t-a32b",
+]
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(runs_dir):
+    recs = {}
+    for path in glob.glob(os.path.join(runs_dir, "*.json")):
+        r = json.load(open(path))
+        key = (r.get("arch"), r.get("shape"), r.get("mesh_name", "single"),
+               os.path.basename(path).split("__")[-1].replace(".json", "")
+               if path.count("__") > 2 else "")
+        recs[(r.get("arch"), r.get("shape"), r.get("mesh_name", "single"))] = r
+    return recs
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | step | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | MF/HLO | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | SKIP | {r['skipped']} | |")
+                continue
+            if "error" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | ERROR | {r['error'][:40]} | |")
+                continue
+            t = r["roofline"]
+            mem = r.get("memory", {})
+            hbm = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+            )
+            lines.append(
+                f"| {arch} | {shape} | {r.get('step_kind','')} "
+                f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+                f"| **{t['dominant']}** | {r.get('model_flops',0):.2e} "
+                f"| {r.get('model_flops_ratio',0):.3f} | {fmt_bytes(hbm)} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | lower+compile s | per-dev FLOPs (corr) | per-dev bytes (corr) "
+        "| collective bytes | collective mix |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None or "roofline" not in r:
+                continue
+            coll = r.get("collectives", {})
+            mix = " ".join(
+                f"{k}:{fmt_bytes(v)}" for k, v in coll.items()
+                if not k.startswith("count") and k != "total"
+            )
+            t = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {r.get('lower_s',0)}+{r.get('compile_s',0)} "
+                f"| {t['per_device_flops']:.3e} | {t['per_device_bytes']:.3e} "
+                f"| {fmt_bytes(t['per_device_collective_bytes'])} | {mix} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    runs_dir = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
+    recs = load(runs_dir)
+    meshes = sorted({k[2] for k in recs})
+    for mesh in meshes:
+        print(f"\n### Roofline — {mesh}-pod mesh\n")
+        print(roofline_table(recs, mesh))
+        print(f"\n### Dry-run detail — {mesh}-pod mesh\n")
+        print(dryrun_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

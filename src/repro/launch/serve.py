@@ -1,0 +1,74 @@
+"""Serving-regime steps: prefill and single-token decode, sharded.
+
+prefill_32k:  logits for the last position + the populated KV cache.
+decode_32k / long_500k: one new token against a seq_len-deep cache.
+For long_500k (global_batch=1) the cache *length* dim is sharded over
+the data axis — context parallelism — since the batch dim cannot shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import batch_axes_of, data_size
+from repro.models import transformer as T
+from repro.sharding import rules
+
+
+def make_prefill(arch: ArchConfig, mesh, dtype=jnp.bfloat16):
+    baxes = batch_axes_of(mesh)
+    act = rules.act_specs(arch, baxes)
+    shard = rules.make_shard_fn(mesh, act)
+
+    def prefill(params, batch):
+        logits, _, _ = T.forward(
+            params,
+            arch,
+            batch.get("tokens"),
+            embeds=batch.get("frames"),
+            patch_embeds=batch.get("patch_embeds"),
+            shard=shard,
+            remat=False,
+        )
+        return logits[:, -1, :]  # next-token logits after prefill
+
+    pspec = rules.param_spec(arch, fsdp_axis="data", tp_axis="model")
+    params_eval = jax.eval_shape(lambda k: T.init_params(k, arch, dtype), jax.random.PRNGKey(0))
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec(params_eval))
+    return jax.jit(prefill), pshard
+
+
+def make_decode_step(arch: ArchConfig, mesh, shape: InputShape, dtype=jnp.bfloat16):
+    baxes = batch_axes_of(mesh)
+    n_data = data_size(mesh)
+    act = rules.act_specs(arch, baxes)
+    shard = rules.make_shard_fn(mesh, act)
+
+    def step(params, cache, batch):
+        logits, new_cache, _ = T.forward(
+            params,
+            arch,
+            batch["tokens"],
+            positions=batch["positions"],
+            cache=cache,
+            shard=shard,
+            remat=False,
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    pspec = rules.param_spec(arch, fsdp_axis="data", tp_axis="model")
+    params_eval = jax.eval_shape(lambda k: T.init_params(k, arch, dtype), jax.random.PRNGKey(0))
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec(params_eval))
+
+    cache_eval = jax.eval_shape(
+        lambda: T.init_cache(arch, shape.global_batch, shape.seq_len, dtype)
+    )
+    cspec_fn = rules.cache_spec(arch, shape.global_batch, n_data, baxes)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec_fn(cache_eval))
+
+    jitted = jax.jit(step, donate_argnums=(1,))
+    return jitted, {"params": pshard, "cache": cshard, "cache_eval": cache_eval}

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run; no
+allocation).  Layouts:
+
+  train   — {<inputs>: [U, B, ...], targets: [U, B, S]}  (U = local steps)
+  prefill — {<inputs>: [B, S...]}
+  decode  — {tokens: [B, 1], positions: [B, 1]} + KV/state cache
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_specs(cfg: ArchConfig, shape: InputShape, local_steps: int = 1) -> dict:
+    u, b, s = local_steps, shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        return {
+            "frames": _sds((u, b, s, cfg.frontend_dim), BF16),
+            "targets": _sds((u, b, s), I32),
+            "mask": _sds((u, b, s), I32),
+        }
+    if cfg.arch_type == "vlm":
+        st = s - cfg.n_patches
+        return {
+            "tokens": _sds((u, b, st), I32),
+            "patch_embeds": _sds((u, b, cfg.n_patches, cfg.frontend_dim), BF16),
+            "targets": _sds((u, b, st), I32),
+        }
+    return {
+        "tokens": _sds((u, b, s), I32),
+        "targets": _sds((u, b, s), I32),
+    }
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        return {"frames": _sds((b, s, cfg.frontend_dim), BF16)}
+    if cfg.arch_type == "vlm":
+        return {
+            "tokens": _sds((b, s - cfg.n_patches), I32),
+            "patch_embeds": _sds((b, cfg.n_patches, cfg.frontend_dim), BF16),
+        }
+    return {"tokens": _sds((b, s), I32)}
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b = shape.global_batch
+    return {
+        "tokens": _sds((b, 1), I32),
+        "positions": _sds((b, 1), I32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, local_steps: int = 1) -> dict:
+    if shape.mode == "train":
+        return train_specs(cfg, shape, local_steps)
+    if shape.mode == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,3 @@
+"""Model zoo: unified stack (transformer.py) covering dense / MoE / SSM /
+hybrid / audio / VLM families, plus the paper's §VI CNNs (cnn.py)."""
+from repro.models import cnn, layers, mamba, moe, rglru, transformer  # noqa: F401

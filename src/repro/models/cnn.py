@@ -1,0 +1,163 @@
+"""The paper's §VI experiment models (exact layer recipes):
+
+  * EMNIST:    two 5x5 conv layers + two FC layers, 47-way output
+  * CIFAR-10:  two 5x5 *padded* conv layers (+ pooling) + FC, 10-way
+  * CIFAR-100: three 3x3 padded conv layers with max pooling + two FC
+               layers, 100-way output
+
+plus a small MLP used by fast unit/convergence tests.  Pure-functional
+(init/apply), vmap-able across FL clients.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, h, w, cin, cout, dtype):
+    scale = 1.0 / math.sqrt(h * w * cin)
+    return (jax.random.normal(key, (h, w, cin, cout)) * scale).astype(dtype)
+
+
+def _dense_init(key, din, dout, dtype):
+    scale = 1.0 / math.sqrt(din)
+    return (jax.random.normal(key, (din, dout)) * scale).astype(dtype)
+
+
+def conv2d(x, w, b, padding):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def max_pool(x, window=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1), (1, window, window, 1), "VALID"
+    )
+
+
+# ------------------------------------------------------------------ MLP
+
+def init_mlp(key, in_dim, hidden, n_classes, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _dense_init(k1, in_dim, hidden, dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": _dense_init(k2, hidden, n_classes, dtype),
+        "b2": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def mlp_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# --------------------------------------------------------------- EMNIST
+
+def init_emnist_cnn(key, dtype=jnp.float32, n_classes=47):
+    k = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(k[0], 5, 5, 1, 16, dtype),
+        "c1b": jnp.zeros((16,), dtype),
+        "c2": _conv_init(k[1], 5, 5, 16, 32, dtype),
+        "c2b": jnp.zeros((32,), dtype),
+        "f1": _dense_init(k[2], 4 * 4 * 32, 128, dtype),
+        "f1b": jnp.zeros((128,), dtype),
+        "f2": _dense_init(k[3], 128, n_classes, dtype),
+        "f2b": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def emnist_cnn_apply(params, x):
+    """x: [B, 28, 28, 1] -> [B, 47]."""
+    x = jax.nn.relu(conv2d(x, params["c1"], params["c1b"], "VALID"))  # 24
+    x = max_pool(x)  # 12
+    x = jax.nn.relu(conv2d(x, params["c2"], params["c2b"], "VALID"))  # 8
+    x = max_pool(x)  # 4
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["f1b"])
+    return x @ params["f2"] + params["f2b"]
+
+
+# -------------------------------------------------------------- CIFAR-10
+
+def init_cifar10_cnn(key, dtype=jnp.float32, n_classes=10):
+    k = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(k[0], 5, 5, 3, 32, dtype),
+        "c1b": jnp.zeros((32,), dtype),
+        "c2": _conv_init(k[1], 5, 5, 32, 64, dtype),
+        "c2b": jnp.zeros((64,), dtype),
+        "f1": _dense_init(k[2], 8 * 8 * 64, 128, dtype),
+        "f1b": jnp.zeros((128,), dtype),
+        "f2": _dense_init(k[3], 128, n_classes, dtype),
+        "f2b": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def cifar10_cnn_apply(params, x):
+    """x: [B, 32, 32, 3] -> [B, 10]."""
+    x = jax.nn.relu(conv2d(x, params["c1"], params["c1b"], "SAME"))  # 32
+    x = max_pool(x)  # 16
+    x = jax.nn.relu(conv2d(x, params["c2"], params["c2b"], "SAME"))  # 16
+    x = max_pool(x)  # 8
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["f1b"])
+    return x @ params["f2"] + params["f2b"]
+
+
+# ------------------------------------------------------------- CIFAR-100
+
+def init_cifar100_cnn(key, dtype=jnp.float32, n_classes=100):
+    k = jax.random.split(key, 5)
+    return {
+        "c1": _conv_init(k[0], 3, 3, 3, 32, dtype),
+        "c1b": jnp.zeros((32,), dtype),
+        "c2": _conv_init(k[1], 3, 3, 32, 64, dtype),
+        "c2b": jnp.zeros((64,), dtype),
+        "c3": _conv_init(k[2], 3, 3, 64, 128, dtype),
+        "c3b": jnp.zeros((128,), dtype),
+        "f1": _dense_init(k[3], 4 * 4 * 128, 256, dtype),
+        "f1b": jnp.zeros((256,), dtype),
+        "f2": _dense_init(k[4], 256, n_classes, dtype),
+        "f2b": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def cifar100_cnn_apply(params, x):
+    """x: [B, 32, 32, 3] -> [B, 100]."""
+    x = jax.nn.relu(conv2d(x, params["c1"], params["c1b"], "SAME"))
+    x = max_pool(x)  # 16
+    x = jax.nn.relu(conv2d(x, params["c2"], params["c2b"], "SAME"))
+    x = max_pool(x)  # 8
+    x = jax.nn.relu(conv2d(x, params["c3"], params["c3b"], "SAME"))
+    x = max_pool(x)  # 4
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["f1b"])
+    return x @ params["f2"] + params["f2b"]
+
+
+MODELS = {
+    "mlp": (init_mlp, mlp_apply),
+    "emnist_cnn": (init_emnist_cnn, emnist_cnn_apply),
+    "cifar10_cnn": (init_cifar10_cnn, cifar10_cnn_apply),
+    "cifar100_cnn": (init_cifar100_cnn, cifar100_cnn_apply),
+}
+
+
+def classification_loss(apply_fn, params, batch):
+    logits = apply_fn(params, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(apply_fn, params, batch):
+    logits = apply_fn(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts MLP with expert parallelism (Llama-4-Scout, Kimi-K2).
+
+Two dispatch strategies, selectable via ``MoEConfig.dispatch``:
+
+  * ``einsum`` — classic capacity-based one-hot dispatch/combine einsums
+    (Switch/GShard style).  Tokens are partitioned into *groups* so the
+    [G, T_g, E, C] dispatch tensor stays bounded; under GSPMD the expert
+    axis shards over the ``model`` mesh axis producing the canonical
+    all-to-all.  This is the paper-era baseline.
+  * ``sort``  — gather/scatter dispatch: tokens are routed via a sort by
+    expert id, removing the O(T·E·C·d) one-hot matmul FLOPs.  This is
+    the beyond-baseline variant used in §Perf hillclimbing.
+
+Shared experts (always-on dense SwiGLU) follow the DeepSeek/Kimi design.
+Aux load-balance loss: E * sum_e f_e * p_e  (Switch eq. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+GROUP_SIZE = 1024  # tokens per dispatch group (einsum mode)
+
+
+def init_moe(key, cfg, dtype):
+    d, e = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, jnp.float32),
+        "w_gate": (
+            jax.random.normal(ks[1], (e.n_experts, d, e.d_ff_expert)) / d**0.5
+        ).astype(dtype),
+        "w_up": (
+            jax.random.normal(ks[2], (e.n_experts, d, e.d_ff_expert)) / d**0.5
+        ).astype(dtype),
+        "w_down": (
+            jax.random.normal(ks[3], (e.n_experts, e.d_ff_expert, d))
+            / e.d_ff_expert**0.5
+        ).astype(dtype),
+    }
+    if e.n_shared_experts:
+        dsh = e.d_ff_expert * e.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, dsh, dtype),
+            "w_up": dense_init(k2, d, dsh, dtype),
+            "w_down": dense_init(k3, dsh, d, dtype),
+        }
+    return p
+
+
+def _router(params, cfg, x):
+    """x: [T, d] -> (probs [T, E], topk_idx [T, k], topk_w [T, k], aux)."""
+    e = cfg.moe
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, e.top_k)
+    topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
+    # load-balance aux: fraction routed (top-1 counts all k choices) x mean prob
+    f = jnp.zeros((e.n_experts,), jnp.float32)
+    f = f.at[topk_idx.reshape(-1)].add(1.0) / (x.shape[0] * e.top_k)
+    p_mean = jnp.mean(probs, axis=0)
+    aux = e.n_experts * jnp.sum(f * p_mean)
+    return probs, topk_idx, topk_w, aux
+
+
+def _experts_ffn(params, h_in):
+    """h_in: [E, C', d] -> [E, C', d] through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", h_in, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h_in, params["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+
+
+def _dispatch_einsum(params, cfg, x, shard):
+    """Capacity one-hot dispatch.  x: [T, d]."""
+    e = cfg.moe
+    t, d = x.shape
+    g = max(t // (e.group_size or GROUP_SIZE), 1)
+    tg = t // g
+    cap = max(int(tg * e.top_k / e.n_experts * e.capacity_factor), e.top_k)
+
+    probs, topk_idx, topk_w, aux = _router(params, cfg, x)
+    xg = x.reshape(g, tg, d)
+    idx_g = topk_idx.reshape(g, tg, e.top_k)
+    w_g = topk_w.reshape(g, tg, e.top_k)
+
+    # expert mask per k-choice: [G, Tg, k, E].  Position bookkeeping runs
+    # in int32 (exact counts); the one-hot dispatch/combine tensors and
+    # their einsums run in the activation dtype — the [*, E, C]-scale
+    # intermediates are the memory hot spot at Kimi-K2 scale (§Perf H2c).
+    mask_i = jax.nn.one_hot(idx_g, e.n_experts, dtype=jnp.int32)
+    flat_mask = mask_i.reshape(g, tg * e.top_k, e.n_experts)
+    pos = jnp.cumsum(flat_mask, axis=1) - flat_mask  # exclusive
+    pos = pos.reshape(g, tg, e.top_k, e.n_experts)
+    keep = ((pos < cap) & (mask_i > 0)).astype(x.dtype)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)  # [G,Tg,k,E,C]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", keep, pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", w_g.astype(x.dtype), keep, pos_oh)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    expert_in = shard(expert_in.reshape(g, e.n_experts, cap * 1, d), "moe_expert_in")
+    expert_in = expert_in.reshape(e.n_experts, g * cap, d)
+    expert_out = _experts_ffn(params, expert_in).reshape(e.n_experts, g, cap, d)
+    # Keep expert_out EXPERT-SHARDED (bf16) into the combine so GSPMD
+    # contracts the sharded E dim (partial sums + one all-reduce of the
+    # [G,Tg,d] result) instead of all-gathering the [G,E,C,d] tensor —
+    # ~20x less collective volume at Kimi-K2 scale (§Perf H2b).
+    expert_out = jnp.moveaxis(expert_out, 1, 0).astype(x.dtype)  # [G, E, C, d]
+    expert_out = shard(expert_out, "moe_expert_out")
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    y = shard(y, "moe_combine")
+    return y.reshape(t, d), aux
+
+
+def _dispatch_sort(params, cfg, x, shard):
+    """Sort/gather dispatch — no one-hot matmul FLOPs.  x: [T, d]."""
+    e = cfg.moe
+    t, d = x.shape
+    cap = max(int(t * e.top_k / e.n_experts * e.capacity_factor), e.top_k)
+
+    probs, topk_idx, topk_w, aux = _router(params, cfg, x)
+    n = t * e.top_k
+    flat_expert = topk_idx.reshape(n)
+    flat_w = topk_w.reshape(n)
+    flat_tok = jnp.repeat(jnp.arange(t), e.top_k)
+
+    order = jnp.argsort(flat_expert)
+    se, st, sw = flat_expert[order], flat_tok[order], flat_w[order]
+    counts = jnp.bincount(flat_expert, length=e.n_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(n) - starts[se]
+    ok = pos_in_e < cap
+
+    buf = jnp.zeros((e.n_experts, cap, d), x.dtype)
+    buf = buf.at[se, jnp.where(ok, pos_in_e, cap - 1)].add(
+        jnp.where(ok[:, None], x[st], 0.0).astype(x.dtype)
+    )
+    buf = shard(buf, "moe_expert_in2")
+    out_buf = _experts_ffn(params, buf)  # [E, C, d]
+    contrib = out_buf[se, jnp.where(ok, pos_in_e, cap - 1)]
+    contrib = jnp.where(ok[:, None], contrib * sw[:, None].astype(x.dtype), 0.0)
+    y = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    return y, aux
+
+
+def moe_mlp(params, cfg, x, shard=lambda t, n: t):
+    """x: [B, S, d] -> ([B, S, d], aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    if cfg.moe.dispatch == "sort":
+        y, aux = _dispatch_sort(params, cfg, xt, shard)
+    else:
+        y, aux = _dispatch_einsum(params, cfg, xt, shard)
+    y = y.reshape(b, s, d)
+    if cfg.moe.n_shared_experts:
+        sh = params["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sh["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, sh["w_down"])
+    return shard(y, "act_model"), aux

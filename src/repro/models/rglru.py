@@ -1,0 +1,139 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin family, arXiv:2402.19427).
+
+The recurrent block: dual linear projections -> depthwise causal conv on
+one branch -> RG-LRU gated diagonal recurrence -> gated output projection.
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal recurrence -> same chunked associative scan treatment as the
+Mamba mixer (see ``repro.models.mamba``): parallel within chunks, O(1)
+state across chunks, O(1) decode.  Gate matrices are block-diagonal
+(``n_gate_blocks``) as in the reference implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+C_FACTOR = 8.0
+N_GATE_BLOCKS = 8
+
+
+def init_rglru(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    dc = cfg.hybrid.conv_width
+    k = jax.random.split(key, 6)
+    bw = w // N_GATE_BLOCKS
+    # Lambda init so a^c is roughly uniform in (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / C_FACTOR))
+    return {
+        "in_x": dense_init(k[0], d, w, dtype),
+        "in_y": dense_init(k[1], d, w, dtype),
+        "conv_w": (jax.random.normal(k[2], (dc, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": (jax.random.normal(k[3], (N_GATE_BLOCKS, bw, bw)) / bw**0.5).astype(dtype),
+        "gate_x": (jax.random.normal(k[4], (N_GATE_BLOCKS, bw, bw)) / bw**0.5).astype(dtype),
+        "Lambda": lam.astype(jnp.float32),
+        "out_proj": dense_init(k[5], w, d, dtype),
+    }
+
+
+def _block_gate(weight, x):
+    """Block-diagonal matmul: x [..., w] -> [..., w]."""
+    nb, bw, _ = weight.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bw))
+    out = jnp.einsum("...nb,nbc->...nc", xs, weight)
+    return out.reshape(x.shape)
+
+
+def rglru_mixer(params, cfg, x, cache=None, shard=lambda t, n: t):
+    """x: [B, S, d] -> ([B, S, d], new_cache); cache: {"conv", "state"}."""
+    b, s, _ = x.shape
+    w, dc = cfg.lru_width, cfg.hybrid.conv_width
+    xb = shard(jnp.einsum("bsd,dw->bsw", x, params["in_x"]), "act_ff")
+    yb = shard(jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_y"])), "act_ff")
+
+    # depthwise causal conv on the x branch
+    if cache is None:
+        pad = jnp.zeros((b, dc - 1, w), xb.dtype)
+        xp = jnp.concatenate([pad, xb], axis=1)
+    else:
+        xp = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+    idx = jnp.arange(s)[:, None] + jnp.arange(dc)[None, :]
+    xc = jnp.einsum("bsci,ci->bsi", xp[:, idx, :], params["conv_w"]) + params["conv_b"]
+
+    # RG-LRU
+    r = jax.nn.sigmoid(_block_gate(params["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_gate(params["gate_x"], xc).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["Lambda"]) * r  # [B,S,w]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+
+    h_prev = (
+        cache["state"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, w), jnp.float32)
+    )
+
+    if s > 1 and cache is None and cfg.ssm.bypass_scan:
+        # measurement-only (see kernel_adjust): consume a/gated without
+        # the recurrence chain
+        h_seq = gated + 1e-6 * a
+        h_last = h_seq[:, -1]
+    elif s > 1 and cache is None and cfg.ssm.use_kernel:
+        # Pallas linear-recurrence kernel: [bw] state in VMEM scratch,
+        # HBM traffic = 3 passes of [B,S,w]
+        from repro.kernels import ops as kops
+
+        h_seq = kops.linear_recurrence(a, gated, chunk=min(cfg.ssm.chunk, s))
+        h_last = h_seq[:, -1]
+    elif s > 1:
+        chunk = min(cfg.ssm.chunk, s)
+        if s % chunk:
+            chunk = s
+        nc = s // chunk
+        a_c = jnp.moveaxis(a.reshape(b, nc, chunk, w), 1, 0)
+        g_c = jnp.moveaxis(gated.reshape(b, nc, chunk, w), 1, 0)
+
+        def combine(l, rr):
+            al, bl = l
+            ar, br = rr
+            return al * ar, ar * bl + br
+
+        def outer(h0, inp):
+            ac, gc = inp  # [B, chunk, w]
+            ac_t = jnp.moveaxis(ac, 1, 0)
+            gc_t = jnp.moveaxis(gc, 1, 0)
+            gc_t = gc_t.at[0].add(ac_t[0] * h0)
+            _, h_all = jax.lax.associative_scan(combine, (ac_t, gc_t), axis=0)
+            return h_all[-1], jnp.moveaxis(h_all, 0, 1)
+
+        h_last, hs = jax.lax.scan(outer, h_prev, (a_c, g_c))
+        h_seq = jnp.moveaxis(hs, 0, 1).reshape(b, s, w)
+    else:
+        h_last = a[:, 0] * h_prev + gated[:, 0]
+        h_seq = h_last[:, None, :]
+
+    y = h_seq.astype(x.dtype) * yb  # output gate (GeGLU-style)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv": xp[:, -(dc - 1) :, :].astype(cache["conv"].dtype),
+            "state": h_last.astype(cache["state"].dtype),
+        }
+    return shard(out, "act_model"), new_cache
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, cfg.lru_width), dtype),
+        "state": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    get_optimizer,
+    sgd,
+    sgd_momentum,
+)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,94 @@
+"""Minimal optimizer substrate (self-built; no optax dependency).
+
+An optimizer is (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params, lr)
+and the caller applies ``params + updates``.  All states are pytrees with
+the same sharding as params (FSDP-friendly).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+OptState = dict
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, lr):
+        del params
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        del params
+        m = jax.tree.map(lambda mm, g: momentum * mm + g, state["m"], grads)
+        return jax.tree.map(lambda mm: -lr * mm, m), {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        mh = jax.tree.map(lambda mm: mm / (1 - b1**t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2**t.astype(jnp.float32)), v)
+        upd = jax.tree.map(
+            lambda mm, vv, p: (
+                -lr * (mm / (jnp.sqrt(vv) + eps) + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype),
+            mh,
+            vh,
+            params,
+        )
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    gn = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "sgd_momentum": sgd_momentum, "adamw": adamw}[name](**kw)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_fraction: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr * (final_fraction + (1 - final_fraction) * cos))
+
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int):
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr * w * cos)
+
+    return f

@@ -1,0 +1,244 @@
+"""Sharding rules: parameter / activation / batch PartitionSpecs per arch.
+
+Scheme (single-pod mesh ``("data","model")``; multi-pod adds a leading
+``"pod"`` axis):
+
+  * TP ("model"): attention head projections (fused head dim), MLP hidden,
+    MoE experts, Mamba/RG-LRU inner channels, vocab for the unembed.
+  * FSDP ("data"): the d_model dim of every weight (standard regime only;
+    in the FL simulation regime with client_axis="data", params are kept
+    per-client and FSDP is off — see DESIGN.md §2).
+  * batch: ("pod","data").
+
+Rules are path-pattern based over the param pytree produced by
+``repro.models.transformer.init_params`` (leading n_blocks axis on all
+stack leaves).  ``block_param_shard`` re-applies the same rules INSIDE
+the scanned layer body — critical: without in-body constraints, GSPMD
+propagation through the scan's backward pass degrades to replicated (or
+layer-axis-sharded) layouts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def spec_for_path(path: str, leaf_ndim: int, *, fsdp_axis, tp_axis, stacked: bool) -> P:
+    """PartitionSpec for one param leaf identified by its tree path."""
+    lead = (None,) if stacked else ()
+    f, d = fsdp_axis, tp_axis
+    nd = leaf_ndim
+
+    # ---- non-stack leaves
+    if path.startswith("embed/"):
+        return P(d, f)  # [V, d_model]: vocab TP'd for the unembed matmul
+    if path == "unembed":
+        return P(f, d)
+    if path.startswith("frontend_proj/"):
+        return P(None, f)
+    if path.startswith("final_norm"):
+        return P(f) if nd == 1 else P()
+
+    # ---- block leaves ("stack/slotJ/..." | "tail/slotJ/..." | "slotJ/...")
+    parts = path.split("/")
+    if parts[0] in ("stack", "tail"):
+        parts = parts[1:]
+    tail = "/".join(parts[1:]) if parts and parts[0].startswith("slot") else "/".join(parts)
+    L = lead
+
+    if tail.startswith("norm"):
+        return P(*L, f)
+    if tail.startswith("attn/"):
+        w = tail.split("/")[-1]
+        if w in ("wq", "wk", "wv"):
+            return P(*L, f, d)
+        if w == "wo":
+            return P(*L, d, f)
+        return P(*L, d)  # biases over the fused head dim
+    if tail.startswith("mlp/"):
+        w = tail.split("/")[-1]
+        if w == "router":
+            return P(*L, f, None)
+        routed_moe = nd == 3 + len(L) and "shared" not in tail
+        if routed_moe:
+            # expert-parallel tensors [E, d, ff] / [E, ff, d] (+lead)
+            if w in ("w_gate", "w_up"):
+                return P(*L, d, f, None)
+            return P(*L, d, None, f)
+        if w in ("w_gate", "w_up", "w_in"):
+            return P(*L, f, d)
+        if w in ("w_down", "w_out"):
+            return P(*L, d, f)
+        if w == "b_in":
+            return P(*L, d)
+        if w == "b_out":
+            return P(*L, f)
+        return P()
+    if tail.startswith("mamba/"):
+        w = tail.split("/")[-1]
+        return {
+            "in_proj": P(*L, f, d),
+            "conv_w": P(*L, None, d),
+            "conv_b": P(*L, d),
+            "x_proj": P(*L, d, None),
+            "dt_proj": P(*L, None, d),
+            "dt_bias": P(*L, d),
+            "A_log": P(*L, d, None),
+            "D": P(*L, d),
+            "out_proj": P(*L, d, f),
+        }[w]
+    if tail.startswith("rglru/"):
+        w = tail.split("/")[-1]
+        return {
+            "in_x": P(*L, f, d),
+            "in_y": P(*L, f, d),
+            "conv_w": P(*L, None, d),
+            "conv_b": P(*L, d),
+            "gate_a": P(*L, None, None, None),  # small block-diag gates
+            "gate_x": P(*L, None, None, None),
+            "Lambda": P(*L, d),
+            "out_proj": P(*L, d, f),
+        }[w]
+    return P()  # fallback: replicate
+
+
+def param_spec(
+    cfg: ArchConfig,
+    *,
+    fsdp_axis: Optional[str] = "data",
+    tp_axis: Optional[str] = "model",
+    stacked: bool = True,
+):
+    """Builds a PartitionSpec pytree builder for ``init_params`` output."""
+    del cfg  # rules are purely path-based today; cfg kept for evolution
+
+    def build(tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = [
+            spec_for_path(
+                _path_str(p), leaf.ndim, fsdp_axis=fsdp_axis, tp_axis=tp_axis, stacked=stacked
+            )
+            for p, leaf in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return build
+
+
+def block_param_shard(cfg: ArchConfig, mesh, *, fsdp_axis="data", tp_axis="model"):
+    """Constraint fn for ONE scanned layer-block's params (unstacked)."""
+
+    def apply(block_params):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(block_params)
+        out = []
+        for p, leaf in flat:
+            spec = spec_for_path(
+                _path_str(p), leaf.ndim, fsdp_axis=fsdp_axis, tp_axis=tp_axis, stacked=False
+            )
+            out.append(
+                jax.lax.with_sharding_constraint(leaf, jax.sharding.NamedSharding(mesh, spec))
+            )
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return apply
+
+
+def act_specs(cfg: ArchConfig, batch_axes, tp_axis="model") -> dict:
+    """PartitionSpecs for the named activation shard points used by models."""
+    b = batch_axes  # e.g. ("pod","data") or ("data",) or None (FL: in-body)
+    kv_shardable = cfg.n_kv_heads % 16 == 0  # heuristic vs model axis size
+    return {
+        "act_model": P(b, None, None),
+        "act_ff": P(b, None, tp_axis),
+        "act_heads": P(b, None, tp_axis, None),
+        "act_kv": P(b, None, tp_axis if kv_shardable else None, None),
+        "act_vocab": P(b, None, tp_axis),
+        "moe_expert_in": P(None, tp_axis, None, None),
+        "moe_expert_in2": P(tp_axis, None, None),
+        "moe_expert_out": P(None, tp_axis, None, None),
+        "moe_combine": P(b, None, None),
+    }
+
+
+def make_shard_fn(mesh, specs: dict, *, use_pspec: bool = False):
+    """Returns shard(t, name) applying with_sharding_constraint by name.
+
+    ``use_pspec=True`` passes the raw PartitionSpec (resolved against the
+    ambient/abstract mesh) — required INSIDE a shard_map body, where a
+    concrete NamedSharding's mesh axis-types (Auto,Auto) would clash with
+    the context mesh's (Manual,Auto).
+    """
+
+    def shard(t, name):
+        spec = specs.get(name)
+        if spec is None:
+            return t
+        try:
+            if use_pspec:
+                return jax.lax.with_sharding_constraint(t, spec)
+            return jax.lax.with_sharding_constraint(
+                t, jax.sharding.NamedSharding(mesh, spec)
+            )
+        except ValueError:
+            return t  # rank mismatch etc.: skip constraint rather than fail
+
+    return shard
+
+
+def batch_spec(mode: str, batch_axes) -> dict:
+    """PartitionSpecs for input batches by mode."""
+    b = batch_axes
+    return {
+        "tokens": P(b, None),
+        "targets": P(b, None),
+        "mask": P(b, None),
+        "frames": P(b, None, None),
+        "patch_embeds": P(b, None, None),
+        "positions": P(b, None),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, n_data: int, batch_axes, tp_axis="model"):
+    """Sharding for KV/state caches (leading n_blocks axis on leaves).
+
+    When the decode batch is too small to shard (long_500k, B=1), the KV
+    cache *length* dim is sharded over the data axis instead — context
+    parallelism for long-context decode.
+    """
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+    h_axis = tp_axis if kv_shardable else None
+    shard_batch = batch >= n_data
+
+    def leaf_spec(path: str, leaf):
+        if path.endswith("index"):
+            return P()
+        if "/k" in path or "/v" in path:  # [n, B, C, Hkv, hd]
+            if shard_batch:
+                return P(None, batch_axes, None, h_axis, None)
+            return P(None, None, "data", h_axis, None)
+        if path.endswith("pos"):  # [n, B, C]
+            if shard_batch:
+                return P(None, batch_axes, None)
+            return P(None, None, "data")
+        if path.endswith("conv"):  # [n, B, dc-1, di]
+            return P(None, batch_axes if shard_batch else None, None, tp_axis)
+        if path.endswith("ssm"):  # [n, B, di, ds]
+            return P(None, batch_axes if shard_batch else None, tp_axis, None)
+        if path.endswith("state"):  # [n, B, w]
+            return P(None, batch_axes if shard_batch else None, tp_axis)
+        return P()
+
+    def build(cache_tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+        specs = [leaf_spec(_path_str(p), leaf) for p, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return build

@@ -1,0 +1,19 @@
+"""Shared pytest config.
+
+NOTE (assignment): XLA_FLAGS / host-device-count is deliberately NOT set
+here — smoke tests must see the default single CPU device; the 512-device
+dry-run paths run in subprocesses (tests/test_launch.py).
+
+A persistent compilation cache keeps repeated full-suite runs fast (the
+unrolled FL round programs dominate compile time otherwise).
+"""
+import os
+
+import jax
+
+jax.config.update(
+    "jax_compilation_cache_dir",
+    os.path.join(os.path.dirname(__file__), "..", ".jax_cache"),
+)
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 2.0)
+jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)

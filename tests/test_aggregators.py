@@ -1,0 +1,135 @@
+"""Baseline aggregator unit tests (paper §VI benchmark algorithms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators as agg
+from repro.core import pytree as pt
+
+
+def _ups(key, s=10):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (s, 6, 4)),
+        "b": jax.random.normal(k2, (s, 3)),
+    }
+
+
+def test_fedavg_is_mean():
+    ups = _ups(jax.random.PRNGKey(0))
+    out = agg.fedavg(ups)
+    np.testing.assert_allclose(out["w"], jnp.mean(ups["w"], 0), rtol=1e-6)
+
+
+def test_fedexp_at_least_mean():
+    """eta_g >= 1 always (max with 1)."""
+    ups = _ups(jax.random.PRNGKey(1))
+    mean = agg.fedavg(ups)
+    out = agg.fedexp(ups)
+    assert float(pt.tree_norm(out)) >= float(pt.tree_norm(mean)) - 1e-6
+
+
+def test_fedexp_identical_updates_eta_one_half_s():
+    """With identical updates, sum||g||^2 / (2S||mean||^2) = 1/2 -> eta=1."""
+    g = {"w": jnp.ones((4, 5))}
+    out = agg.fedexp(g, eps=0.0)
+    np.testing.assert_allclose(out["w"], jnp.ones(5), rtol=1e-5)
+
+
+def test_fltrust_clips_negative_cosine():
+    """Updates opposing r get zero trust weight."""
+    r = {"w": jnp.ones((1, 8))[0]}
+    ups = {"w": jnp.stack([jnp.ones(8), -jnp.ones(8)])}
+    out = agg.fltrust(ups, r)
+    # only the aligned worker contributes, scaled to ||r||
+    np.testing.assert_allclose(out["w"], jnp.ones(8), rtol=1e-5)
+
+
+def test_fltrust_norm_matching():
+    """Each trusted update is rescaled to ||r|| (FLTrust [29])."""
+    r = {"w": jnp.array([1.0, 0.0])}
+    ups = {"w": jnp.array([[1000.0, 0.0]])}
+    out = agg.fltrust(ups, r)
+    np.testing.assert_allclose(out["w"], jnp.array([1.0, 0.0]), rtol=1e-5)
+
+
+def test_geometric_median_outlier_resistance():
+    key = jax.random.PRNGKey(2)
+    ups = {"w": jax.random.normal(key, (10, 32)) * 0.1}
+    ups["w"] = ups["w"].at[0].set(1e4)
+    gm = agg.geometric_median(ups, iters=16)
+    assert float(pt.tree_norm(gm)) < 1.0
+
+
+def test_krum_selects_inlier():
+    key = jax.random.PRNGKey(3)
+    base = jax.random.normal(key, (12,))
+    ups = {"w": base[None] + 0.01 * jax.random.normal(key, (8, 12))}
+    ups["w"] = ups["w"].at[0].set(100.0)  # Byzantine
+    out = agg.krum(ups, n_byzantine=1)
+    assert float(jnp.linalg.norm(out["w"] - base)) < 1.0
+
+
+def test_trimmed_mean_beats_mean_under_outliers():
+    key = jax.random.PRNGKey(4)
+    ups = {"w": jax.random.normal(key, (10, 16)) * 0.1}
+    ups["w"] = ups["w"].at[0].set(50.0).at[1].set(-80.0)
+    tm = agg.trimmed_mean(ups, trim=2)
+    mean = agg.fedavg(ups)
+    assert float(pt.tree_norm(tm)) < float(pt.tree_norm(mean))
+
+
+def test_coordinate_median():
+    ups = {"w": jnp.array([[1.0], [2.0], [100.0]])}
+    np.testing.assert_allclose(agg.coordinate_median(ups)["w"], [2.0])
+
+
+def test_registry_complete():
+    for name in ["fedavg", "fedexp", "fltrust", "geomed", "rfa", "raga",
+                 "krum", "trimmed_mean", "median", "drag", "br_drag"]:
+        assert name in agg.AGGREGATORS
+    with pytest.raises(KeyError):
+        agg.get("nope")
+
+
+def test_jit_compatible():
+    ups = _ups(jax.random.PRNGKey(5))
+    r = pt.tree_index(ups, 0)
+    jax.jit(agg.fedavg)(ups)
+    jax.jit(agg.fedexp)(ups)
+    jax.jit(agg.fltrust)(ups, r)
+    jax.jit(lambda u: agg.geometric_median(u, iters=4))(ups)
+    jax.jit(lambda u: agg.krum(u, 2))(ups)
+    jax.jit(lambda u: agg.trimmed_mean(u, 2))(ups)
+
+
+def test_multi_krum_averages_inliers():
+    """With one far outlier, multi-krum's output stays near the inlier mean."""
+    key = jax.random.PRNGKey(5)
+    ups = _ups(key, s=8)
+    # worker 0 is a large outlier
+    ups = jax.tree.map(lambda x: x.at[0].set(x[0] + 100.0), ups)
+    out = agg.multi_krum(ups, n_byzantine=1)
+    inlier_mean = jax.tree.map(lambda x: jnp.mean(x[1:], 0), ups)
+    # closer to the inlier mean than to the poisoned mean
+    d_in = float(pt.tree_norm(pt.tree_sub(out, inlier_mean)))
+    d_all = float(pt.tree_norm(pt.tree_sub(out, agg.fedavg(ups))))
+    assert d_in < d_all
+
+
+def test_bulyan_outlier_resistance():
+    key = jax.random.PRNGKey(6)
+    ups = _ups(key, s=12)
+    ups = jax.tree.map(lambda x: x.at[0].set(x[0] * 0 + 50.0), ups)
+    ups = jax.tree.map(lambda x: x.at[1].set(x[1] * 0 - 50.0), ups)
+    out = agg.bulyan(ups, n_byzantine=2)
+    # output magnitude bounded by the inlier scale, not the +-50 attackers
+    assert float(pt.tree_norm(out)) < 10.0
+
+
+def test_multi_krum_equals_krum_when_m_1():
+    ups = _ups(jax.random.PRNGKey(7), s=6)
+    out1 = agg.krum(ups, n_byzantine=1)
+    out2 = agg.multi_krum(ups, n_byzantine=1, m=1)
+    np.testing.assert_allclose(out1["w"], out2["w"], rtol=1e-6)

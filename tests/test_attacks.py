@@ -1,0 +1,119 @@
+"""Byzantine attack model tests (paper §I-A / §VI-B semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attacks
+from repro.core import pytree as pt
+
+
+def _ups(key, s=6):
+    return {"w": jax.random.normal(key, (s, 7, 3)), "b": jax.random.normal(key, (s, 2))}
+
+
+def test_sign_flipping_exact():
+    key = jax.random.PRNGKey(0)
+    ups = _ups(key)
+    mask = jnp.array([True, False, True, False, False, False])
+    out = attacks.sign_flipping(key, ups, mask)
+    np.testing.assert_allclose(out["w"][0], -ups["w"][0])
+    np.testing.assert_allclose(out["w"][1], ups["w"][1])
+    np.testing.assert_allclose(out["w"][2], -ups["w"][2])
+
+
+def test_noise_injection_scales_per_worker():
+    key = jax.random.PRNGKey(1)
+    ups = _ups(key)
+    mask = jnp.array([True, True, False, False, False, False])
+    out = attacks.noise_injection(key, ups, mask, std=3.0)
+    # benign untouched
+    np.testing.assert_allclose(out["w"][2:], ups["w"][2:])
+    # malicious scaled by a per-worker scalar (same scalar across leaves)
+    ratio_w = out["w"][0] / ups["w"][0]
+    ratio_b = out["b"][0] / ups["b"][0]
+    assert np.allclose(ratio_w, ratio_w.reshape(-1)[0], rtol=1e-5)
+    assert np.allclose(ratio_b.reshape(-1)[0], ratio_w.reshape(-1)[0], rtol=1e-5)
+
+
+def test_gaussian_replacement():
+    key = jax.random.PRNGKey(2)
+    ups = _ups(key)
+    mask = jnp.array([True, False, False, False, False, False])
+    out = attacks.gaussian_replacement(key, ups, mask)
+    assert not np.allclose(out["w"][0], ups["w"][0])
+    np.testing.assert_allclose(out["w"][1], ups["w"][1])
+
+
+def test_label_flip_transform():
+    labels = jnp.array([0, 1, 46, 10])
+    flipped = attacks.flip_labels(labels, 47, jnp.array([True, True, True, False]))
+    np.testing.assert_array_equal(flipped, jnp.array([46, 45, 0, 10]))
+
+
+def test_label_flip_involution():
+    """Flipping twice restores the original labels."""
+    labels = jnp.arange(10)
+    m = jnp.ones(10, bool)
+    np.testing.assert_array_equal(
+        attacks.flip_labels(attacks.flip_labels(labels, 10, m), 10, m), labels
+    )
+
+
+def test_apply_update_attack_none_and_label_flipping_passthrough():
+    key = jax.random.PRNGKey(3)
+    ups = _ups(key)
+    mask = jnp.ones(6, bool)
+    for name in ("none", "label_flipping"):
+        out = attacks.apply_update_attack(name, key, ups, mask)
+        np.testing.assert_allclose(out["w"], ups["w"])
+
+
+def test_attack_registry():
+    for name in ("noise_injection", "sign_flipping", "gaussian"):
+        assert name in attacks.UPDATE_ATTACKS
+
+
+def test_alie_stays_within_benign_spread():
+    """ALIE's crafted update lies within mean +- 2*std of benign updates."""
+    key = jax.random.PRNGKey(10)
+    ups = _ups(key)
+    mask = jnp.array([True, True, False, False, False, False])
+    out = attacks.alie(key, ups, mask, z=1.5)
+    benign = np.asarray(ups["w"][2:])
+    mu, sd = benign.mean(0), benign.std(0)
+    crafted = np.asarray(out["w"][0])
+    assert (crafted >= mu - 2.0 * sd - 1e-5).all()
+    assert (crafted <= mu + 2.0 * sd + 1e-5).all()
+    # both malicious workers upload the SAME crafted vector (coordinated)
+    np.testing.assert_allclose(out["w"][0], out["w"][1])
+    # benign untouched
+    np.testing.assert_allclose(out["w"][2], ups["w"][2])
+
+
+def test_ipm_flips_inner_product():
+    key = jax.random.PRNGKey(11)
+    ups = _ups(key)
+    mask = jnp.array([True, False, False, False, False, False])
+    out = attacks.ipm(key, ups, mask, eps=0.5)
+    benign_mean = np.asarray(ups["w"][1:]).mean(0)
+    crafted = np.asarray(out["w"][0])
+    assert float((crafted * benign_mean).sum()) < 0  # opposes descent
+    assert np.linalg.norm(crafted) < np.linalg.norm(benign_mean)  # stealthy
+
+
+def test_br_drag_survives_alie_and_ipm():
+    """BR-DRAG's norm clamp + DoD rotation bounds crafted updates: the
+    aggregated delta keeps a positive inner product with the reference."""
+    from repro.core import br_drag, drag
+
+    key = jax.random.PRNGKey(12)
+    ups = _ups(key)
+    ref_dir = jax.tree.map(lambda x: jnp.mean(x[3:], 0), ups)  # honest direction
+    for name in ("alie", "ipm"):
+        mask = jnp.array([True, True, True, False, False, False])  # 50%
+        attacked = attacks.UPDATE_ATTACKS[name](key, ups, mask)
+        lam = jax.vmap(lambda g: drag.degree_of_divergence(g, ref_dir, 0.5))(attacked)
+        delta, _ = br_drag.aggregate(attacked, ref_dir, 0.5)
+        import repro.core.pytree as pt
+
+        assert float(pt.tree_dot(delta, ref_dir)) > 0, name

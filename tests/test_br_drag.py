@@ -1,0 +1,103 @@
+"""Unit tests for BR-DRAG (paper §IV) — the Byzantine-resilient variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks, br_drag, drag
+from repro.core import pytree as pt
+
+
+def _rand_tree(key, s=None):
+    k1, k2 = jax.random.split(key)
+    shape = lambda *t: ((s,) + t) if s else t
+    return {
+        "w": jax.random.normal(k1, shape(12, 7)),
+        "b": jax.random.normal(k2, shape(5,)),
+    }
+
+
+class TestNormClamp:
+    def test_v_norm_bounded_by_r(self):
+        """||v_m|| <= ||r|| (the T_3 bound in Appendix B) — the defense
+        against norm-inflation attacks."""
+        key = jax.random.PRNGKey(0)
+        r = _rand_tree(jax.random.fold_in(key, 999))
+        rn = float(pt.tree_norm(r))
+        for i in range(50):
+            g = pt.tree_scale(_rand_tree(jax.random.fold_in(key, i)), 10.0 ** (i % 7 - 3))
+            lam = drag.degree_of_divergence(g, r, 0.5)
+            v = br_drag.calibrate(g, r, lam)
+            assert float(pt.tree_norm(v)) <= rn * (1 + 1e-4)
+
+    def test_attacker_norm_inflation_neutralised(self):
+        """A 1e6x inflated malicious update contributes no more than ||r||."""
+        key = jax.random.PRNGKey(1)
+        r = _rand_tree(key)
+        g_mal = pt.tree_scale(_rand_tree(jax.random.fold_in(key, 5)), 1e6)
+        lam = drag.degree_of_divergence(g_mal, r, 0.5)
+        v = br_drag.calibrate(g_mal, r, lam)
+        assert float(pt.tree_norm(v)) <= float(pt.tree_norm(r)) * (1 + 1e-4)
+
+    def test_aligned_benign_preserved_in_direction(self):
+        """A benign update aligned with r keeps its direction."""
+        key = jax.random.PRNGKey(2)
+        r = _rand_tree(key)
+        g = pt.tree_scale(r, 0.7)
+        lam = drag.degree_of_divergence(g, r, 0.5)
+        v = br_drag.calibrate(g, r, lam)
+        cos = float(pt.cosine_similarity(v, r))
+        assert cos > 0.999
+
+
+class TestRootReference:
+    def test_eq13_matches_manual_sgd(self):
+        key = jax.random.PRNGKey(3)
+        params = _rand_tree(key)
+
+        def loss(p, b):
+            return jnp.sum((p["w"] @ jnp.ones((7,)) - b["y"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+        grad_fn = jax.grad(loss)
+        u, lr = 3, 0.05
+        batches = {"y": jax.random.normal(key, (u, 12))}
+        r = br_drag.root_reference(params, grad_fn, batches, lr)
+        theta = params
+        for i in range(u):
+            b = {"y": batches["y"][i]}
+            theta = jax.tree.map(lambda p, g: p - lr * g, theta, grad_fn(theta, b))
+        expect = pt.tree_sub(theta, params)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(r), pt.tree_flatten_vector(expect), rtol=1e-5
+        )
+
+
+class TestAggregationUnderAttack:
+    @pytest.mark.parametrize("attack", ["noise_injection", "sign_flipping"])
+    def test_br_drag_beats_fedavg_under_attack(self, attack):
+        """With 60% attackers, the BR-DRAG delta stays far closer to the
+        benign mean than FedAvg's."""
+        key = jax.random.PRNGKey(4)
+        s = 10
+        benign_dir = _rand_tree(key)
+        # benign updates: benign_dir + small noise
+        ups = jax.tree.map(
+            lambda x: x[None] * jnp.ones((s,) + (1,) * x.ndim)
+            + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (s,) + x.shape),
+            benign_dir,
+        )
+        mask = jnp.arange(s) < 6  # 60 % malicious
+        attacked = attacks.apply_update_attack(attack, jax.random.fold_in(key, 2), ups, mask, **({"std": 3.0} if attack == "noise_injection" else {}))
+        r = pt.tree_scale(benign_dir, 0.9)  # trusted root reference
+
+        fedavg_delta = jax.tree.map(lambda x: jnp.mean(x, 0), attacked)
+        br_delta, _ = br_drag.aggregate(attacked, r, 0.5)
+
+        err_fedavg = float(pt.tree_norm(pt.tree_sub(fedavg_delta, benign_dir)))
+        err_br = float(pt.tree_norm(pt.tree_sub(br_delta, benign_dir)))
+        assert err_br < err_fedavg
+
+    def test_c_schedule_theorem2(self):
+        assert br_drag.c_schedule(0.3, -0.3) == 0.5
+        assert br_drag.c_schedule(0.6, 0.0) == 1.0
+        assert 0.5 <= br_drag.c_schedule(0.4, -0.1) <= 1.0

@@ -1,0 +1,82 @@
+"""Compression substrate: top-k / sign with error feedback."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import compression as C
+from repro.core import pytree as pt
+
+jax.config.update("jax_platform_name", "cpu")
+
+vec = hnp.arrays(
+    np.float32,
+    st.integers(8, 64),
+    elements=st.floats(-10, 10, width=32, allow_nan=False, allow_subnormal=False),
+)
+
+
+def test_topk_keeps_largest():
+    x = {"w": jnp.asarray([1.0, -5.0, 0.5, 3.0, -0.1, 2.0])}
+    out = C.compress_topk(x, ratio=0.34)  # k = 2
+    np.testing.assert_allclose(out["w"], [0.0, -5.0, 0.0, 3.0, 0.0, 0.0])
+
+
+def test_sign_preserves_sign_and_l1_scale():
+    x = {"w": jnp.asarray([1.0, -2.0, 4.0, -1.0])}
+    out = C.compress_sign(x)
+    np.testing.assert_allclose(jnp.sign(out["w"]), jnp.sign(x["w"]))
+    np.testing.assert_allclose(jnp.abs(out["w"]), jnp.mean(jnp.abs(x["w"])))
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=vec)
+def test_error_feedback_conserves_mass(g):
+    """compressed + residual == update + old_residual exactly (nothing lost)."""
+    tree = {"w": jnp.asarray(g)}
+    res0 = C.ef_init(tree)
+    comp, res1 = C.ef_compress(tree, res0, method="topk", ratio=0.25)
+    np.testing.assert_allclose(
+        np.asarray(comp["w"] + res1["w"]), g, rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=vec)
+def test_error_feedback_residual_shrinks_reconstruction_error(g):
+    """Over repeated rounds with the SAME update, EF's cumulative
+    transmitted mass approaches the true cumulative update (the EF
+    convergence property)."""
+    hypothesis.assume(float(np.linalg.norm(g)) > 1e-3)
+    tree = {"w": jnp.asarray(g)}
+    res = C.ef_init(tree)
+    sent = jnp.zeros_like(tree["w"])
+    for t in range(12):
+        comp, res = C.ef_compress(tree, res, method="topk", ratio=0.25)
+        sent = sent + comp["w"]
+    true = 12 * tree["w"]
+    rel = float(jnp.linalg.norm(sent - true) / jnp.linalg.norm(true))
+    assert rel < 0.35  # within the single-round residual bound
+
+
+def test_compression_then_drag_calibration_composes():
+    """Compressed updates remain valid inputs to the DRAG calibration."""
+    from repro.core import drag
+
+    key = jax.random.PRNGKey(0)
+    ups = {"w": jax.random.normal(key, (6, 32))}
+    res = C.ef_init(ups)
+    comp, _ = C.ef_compress(ups, res, method="sign")
+    r = {"w": jnp.mean(ups["w"], 0)}
+    delta, lam = drag.aggregate(comp, r, 0.25)
+    assert not bool(jnp.any(jnp.isnan(delta["w"])))
+    assert float(jnp.max(lam)) <= 0.5 + 1e-5
+
+
+def test_ratio_accounting():
+    assert C.compression_ratio(None, "sign", 0.0) == 1.0 / 32.0
+    assert C.compression_ratio(None, "topk", 0.05) == 0.1
+    assert C.compression_ratio(None, "none", 0.0) == 1.0

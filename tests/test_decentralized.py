@@ -1,0 +1,84 @@
+"""Decentralized DRAG (paper future-work extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decentralized as D
+from repro.core import drag
+from repro.core import pytree as pt
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _stacked(key, n=6, d=16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (
+        {"w": jax.random.normal(k1, (n, d))},  # params
+        {"w": jax.random.normal(k2, (n, d))},  # refs
+        {"w": jax.random.normal(k3, (n, d))},  # updates
+    )
+
+
+def test_mixing_matrices_doubly_stochastic():
+    for name, make in D.TOPOLOGIES.items():
+        w = np.asarray(make(8))
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6, err_msg=name)
+        assert (w >= -1e-9).all(), name
+    adj = np.array([[0, 1, 0, 1], [1, 0, 1, 0], [0, 1, 0, 1], [1, 0, 1, 0]])
+    w = np.asarray(D.mixing_metropolis(adj))
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+
+
+def test_complete_graph_reduces_to_centralized_drag():
+    """With W = 11^T/n and identical params/refs, the per-worker new model
+    equals the centralized DRAG update theta + Delta (eqs. 6-7)."""
+    key = jax.random.PRNGKey(0)
+    n, d = 6, 16
+    theta = jax.random.normal(key, (d,))
+    r = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    ups = {"w": jax.random.normal(jax.random.fold_in(key, 2), (n, d))}
+
+    params_st = {"w": jnp.tile(theta[None], (n, 1))}
+    refs_st = {"w": jnp.tile(r[None], (n, 1))}
+    newp, newr, lam = D.decentralized_drag_round(
+        params_st, refs_st, ups, D.mixing_complete(n), c=0.2, alpha=0.25
+    )
+
+    delta, lam_c = drag.aggregate(ups, {"w": r}, 0.2)
+    want = theta + delta["w"]
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(newp["w"][i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(lam_c), rtol=1e-5, atol=1e-6)
+
+
+def test_gossip_drives_consensus():
+    """Repeated mixing with zero updates shrinks consensus distance."""
+    key = jax.random.PRNGKey(3)
+    params_st, refs_st, _ = _stacked(key, n=8, d=12)
+    zero_ups = pt.tree_zeros_like(params_st)
+    w = D.mixing_ring(8)
+    d0 = float(D.consensus_distance(params_st))
+    p = params_st
+    r = refs_st
+    for _ in range(20):
+        p, r, _ = D.decentralized_drag_round(p, r, zero_ups, w, c=0.1)
+    d1 = float(D.consensus_distance(p))
+    assert d1 < 0.05 * d0
+
+
+def test_ring_slower_than_complete():
+    """Consensus on the ring is strictly slower than on the complete graph."""
+    key = jax.random.PRNGKey(4)
+    params_st, refs_st, _ = _stacked(key, n=8, d=12)
+    zero_ups = pt.tree_zeros_like(params_st)
+
+    def run(w, steps=3):
+        p, r = params_st, refs_st
+        for _ in range(steps):
+            p, r, _ = D.decentralized_drag_round(p, r, zero_ups, w, c=0.1)
+        return float(D.consensus_distance(p))
+
+    assert run(D.mixing_complete(8)) < run(D.mixing_ring(8)) + 1e-9

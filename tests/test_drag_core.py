@@ -1,0 +1,142 @@
+"""Unit tests for the paper's core math (DRAG, §III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import drag
+from repro.core import pytree as pt
+
+
+def _rand_tree(key, s=None):
+    k1, k2 = jax.random.split(key)
+    shape = lambda *t: ((s,) + t) if s else t
+    return {
+        "w": jax.random.normal(k1, shape(12, 7)),
+        "b": jax.random.normal(k2, shape(5,)),
+    }
+
+
+class TestDoD:
+    def test_range(self):
+        """lambda in [0, 2c] (eq. 10)."""
+        key = jax.random.PRNGKey(0)
+        for c in (0.1, 0.5, 1.0):
+            for i in range(20):
+                g = _rand_tree(jax.random.fold_in(key, i))
+                r = _rand_tree(jax.random.fold_in(key, 100 + i))
+                lam = float(drag.degree_of_divergence(g, r, c))
+                assert -1e-6 <= lam <= 2 * c + 1e-6
+
+    def test_aligned_zero(self):
+        g = _rand_tree(jax.random.PRNGKey(1))
+        lam = float(drag.degree_of_divergence(g, pt.tree_scale(g, 3.0), 0.5))
+        assert abs(lam) < 1e-5
+
+    def test_opposed_max(self):
+        g = _rand_tree(jax.random.PRNGKey(2))
+        lam = float(drag.degree_of_divergence(g, pt.tree_scale(g, -2.0), 0.5))
+        assert abs(lam - 1.0) < 1e-5
+
+
+class TestCalibrate:
+    def test_eq11_identity_when_aligned(self):
+        """Aligned g (lam=0) passes through unchanged."""
+        g = _rand_tree(jax.random.PRNGKey(3))
+        v = drag.calibrate(g, pt.tree_scale(g, 2.0), 0.0)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(v), pt.tree_flatten_vector(g), rtol=1e-6
+        )
+
+    def test_aligned_component_never_shrinks(self):
+        """Fig. 2: <v, r>/||r|| >= <g, r>/||r|| for lam in [0, 2c]."""
+        key = jax.random.PRNGKey(4)
+        for i in range(30):
+            g = _rand_tree(jax.random.fold_in(key, i))
+            r = _rand_tree(jax.random.fold_in(key, 1000 + i))
+            lam = drag.degree_of_divergence(g, r, 0.5)
+            v = drag.calibrate(g, r, lam)
+            rn = pt.tree_norm(r)
+            assert float(pt.tree_dot(v, r) / rn) >= float(pt.tree_dot(g, r) / rn) - 1e-4
+
+    def test_norm_preserving_structure(self):
+        """v = (1-lam) g + lam (||g||/||r||) r: both terms scale with ||g||."""
+        g = _rand_tree(jax.random.PRNGKey(5))
+        r = _rand_tree(jax.random.PRNGKey(6))
+        lam = drag.degree_of_divergence(g, r, 0.3)
+        v1 = drag.calibrate(g, r, lam)
+        v2 = drag.calibrate(pt.tree_scale(g, 2.0), r, lam)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(v2), 2.0 * pt.tree_flatten_vector(v1), rtol=1e-5
+        )
+
+
+class TestReference:
+    def test_bootstrap_then_ema(self):
+        """r^0 = raw mean (5a); r^t = (1-a) r^{t-1} + a Delta (5b)."""
+        key = jax.random.PRNGKey(7)
+        params = _rand_tree(key)
+        ups = _rand_tree(jax.random.fold_in(key, 1), s=6)
+        state = drag.init_state(params)
+        p1, st1, _ = drag.round_step(params, state, ups, alpha=0.25, c=0.1)
+        raw_mean = jax.tree.map(lambda x: jnp.mean(x, 0), ups)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(st1.reference),
+            pt.tree_flatten_vector(raw_mean),
+            rtol=1e-6,
+        )
+        # round 0 applies the raw mean (no calibration yet)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(p1),
+            pt.tree_flatten_vector(pt.tree_add(params, raw_mean)),
+            rtol=1e-6,
+        )
+        # round 1: EMA update
+        p2, st2, _ = drag.round_step(p1, st1, ups, alpha=0.25, c=0.1)
+        delta, _ = drag.aggregate(ups, st1.reference, 0.1)
+        expect = pt.tree_lincomb(0.75, st1.reference, 0.25, delta)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(st2.reference),
+            pt.tree_flatten_vector(expect),
+            rtol=1e-5,
+        )
+
+    def test_closed_form_eq8(self):
+        """r^t matches the closed-form EMA expansion (eq. 8)."""
+        key = jax.random.PRNGKey(8)
+        params = _rand_tree(key)
+        state = drag.init_state(params)
+        alpha, c = 0.3, 0.2
+        p = params
+        deltas = []
+        r0 = None
+        for t in range(4):
+            ups = _rand_tree(jax.random.fold_in(key, 50 + t), s=5)
+            p_new, state_new, _ = drag.round_step(p, state, ups, alpha=alpha, c=c)
+            delta = pt.tree_sub(p_new, p)
+            if t == 0:
+                r0 = state_new.reference
+            else:
+                deltas.append(delta)
+            p, state = p_new, state_new
+        # closed form after T=4 rounds (deltas from rounds 1..3)
+        tmax = len(deltas)
+        expect = pt.tree_scale(r0, (1 - alpha) ** tmax)
+        for i, d in enumerate(deltas):
+            expect = pt.tree_axpy(alpha * (1 - alpha) ** (tmax - i - 1), d, expect)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(state.reference),
+            pt.tree_flatten_vector(expect),
+            rtol=1e-4,
+        )
+
+
+def test_severe_divergence_reverses_gradient():
+    """For lam > 1 (Fig. 2b) the g component flips sign."""
+    g = {"w": jnp.array([1.0, 0.0])}
+    r = {"w": jnp.array([-1.0, 0.0])}
+    lam = drag.degree_of_divergence(g, r, 1.0)  # cos=-1 -> lam=2
+    assert float(lam) == pytest.approx(2.0, abs=1e-5)
+    v = drag.calibrate(g, r, lam)
+    # v = (1-2) g + 2 * (1/1) r = -g + 2r = [-3, 0]
+    np.testing.assert_allclose(v["w"], jnp.array([-3.0, 0.0]), atol=1e-5)

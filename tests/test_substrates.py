@@ -1,0 +1,85 @@
+"""Optimizer + checkpoint + schedule substrate tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.optim import adamw, get_optimizer, sgd, sgd_momentum
+from repro.optim.optimizers import clip_by_global_norm
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+
+def _quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    return {"x": jnp.zeros(3)}, loss, target
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("sgd_momentum", 0.05), ("adamw", 0.1)])
+def test_optimizers_converge_on_quadratic(name, lr):
+    params, loss, target = _quad_problem()
+    opt = get_optimizer(name, **({"weight_decay": 0.0} if name == "adamw" else {}))
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, lr)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    np.testing.assert_allclose(params["x"], target, atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    assert float(constant(0.1)(0)) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.1, abs=1e-6)
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(0)) == 0.0
+    assert float(wc(10)) == pytest.approx(1.0, rel=0.05)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self):
+        tree = {
+            "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16), "c": jnp.int32(7)},
+        }
+        with tempfile.TemporaryDirectory() as td:
+            checkpoint.save(td, tree, step=3)
+            restored = checkpoint.restore(td, tree)
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+    def test_step_management(self):
+        tree = {"x": jnp.zeros(2)}
+        with tempfile.TemporaryDirectory() as td:
+            checkpoint.save_step(td, tree, 1)
+            checkpoint.save_step(td, {"x": jnp.ones(2)}, 5)
+            restored, step = checkpoint.restore_latest(td, tree)
+        assert step == 5
+        np.testing.assert_array_equal(restored["x"], jnp.ones(2))
+
+    def test_missing_key_raises(self):
+        with tempfile.TemporaryDirectory() as td:
+            checkpoint.save(td, {"x": jnp.zeros(2)})
+            with pytest.raises(ValueError):
+                checkpoint.restore(td, {"x": jnp.zeros(2), "y": jnp.zeros(1)})
+
+    def test_shape_mismatch_raises(self):
+        with tempfile.TemporaryDirectory() as td:
+            checkpoint.save(td, {"x": jnp.zeros(2)})
+            with pytest.raises(ValueError):
+                checkpoint.restore(td, {"x": jnp.zeros(3)})
