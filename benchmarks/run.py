@@ -37,6 +37,7 @@ def main() -> None:
         fig9_17_byzantine,
         kernels_bench,
         roofline,
+        stream_bench,
     )
 
     modules = {
@@ -46,6 +47,7 @@ def main() -> None:
         "fig9_17": fig9_17_byzantine,
         "kernels": kernels_bench,
         "roofline": roofline,
+        "stream": stream_bench,
     }
     selected = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

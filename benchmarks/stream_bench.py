@@ -1,0 +1,167 @@
+"""Async stream engine micro-benchmarks.
+
+Measures the two serving hot paths — donated buffer INGEST (one slot
+write per accepted upload) and threshold FLUSH (staleness-aware
+calibration + any registry rule) — plus the end-to-end event loop, and
+writes ``BENCH_stream.json``::
+
+    {"ingest": {...}, "flush": {rule: {...}}, "e2e": {...}}
+
+CSV rows (``benchmarks.common.emit``) ride along for the harness.
+Scale via REPRO_BENCH_FAST=1 / REPRO_BENCH_ROUNDS.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit
+from repro.core import drag
+from repro.stream import buffer as buf_mod
+from repro.stream.server import StreamConfig, flush, make_flush_fn
+
+CAPACITY = 16 if FAST else 64
+DIM = 1 << 14 if FAST else 1 << 18
+RULES = (
+    ["fedavg", "drag", "trimmed_mean"]
+    if FAST
+    else ["fedavg", "drag", "br_drag", "median", "trimmed_mean", "krum", "geomed"]
+)
+
+
+def _params(d: int):
+    return {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def bench_ingest(iters: int = 512) -> dict:
+    p = _params(DIM)
+    g = {"w": jnp.ones((DIM,), jnp.float32)}
+    ingest = buf_mod.make_ingest_fn()
+    buf = buf_mod.init_buffer(p, CAPACITY)
+    # warmup + fill
+    for i in range(CAPACITY):
+        buf = ingest(buf, g, i, False)
+    buf = buf_mod.reset(buf)
+    jax.block_until_ready(buf.slots)
+
+    t0 = time.time()
+    done = 0
+    while done < iters:
+        buf = buf_mod.reset(buf)
+        for i in range(CAPACITY):
+            buf = ingest(buf, g, i, False)
+        done += CAPACITY
+    jax.block_until_ready(buf.slots)
+    sec = (time.time() - t0) / done
+    bytes_per = DIM * 4  # one slot write
+    rec = {
+        "capacity": CAPACITY,
+        "dim": DIM,
+        "us_per_ingest": sec * 1e6,
+        "ingests_per_s": 1.0 / sec,
+        "gb_per_s": bytes_per / sec / 1e9,
+    }
+    emit(f"stream/ingest/K{CAPACITY}_d{DIM}", sec * 1e6, f"{rec['gb_per_s']:.2f}GB/s")
+    return rec
+
+
+def bench_flush(iters: int = 20) -> dict:
+    key = jax.random.PRNGKey(0)
+    p = _params(DIM)
+    out: dict = {}
+    for rule in RULES:
+        cfg = StreamConfig(
+            algorithm=rule,
+            buffer_capacity=CAPACITY,
+            discount="poly",
+            n_byzantine_hint=max(CAPACITY // 8, 1),
+            geomed_iters=4,
+        )
+        # br_drag needs a root pass — give it a trivial quadratic loss
+        with_root = rule in ("br_drag", "fltrust")
+
+        def loss_fn(params, batch):
+            return jnp.mean((params["w"] - batch["x"]) ** 2)
+
+        fn = make_flush_fn(loss_fn, cfg, with_root)
+        buf = buf_mod.init_buffer(p, CAPACITY)
+        ingest = buf_mod.make_ingest_fn()
+        for i in range(CAPACITY):
+            gi = {"w": jax.random.normal(jax.random.fold_in(key, i), (DIM,))}
+            buf = ingest(buf, gi, i, False)
+        dstate = drag.init_state(p)
+        params, rnd = p, jnp.zeros((), jnp.int32)
+        root = {"x": jnp.zeros((2, 4, DIM), jnp.float32)} if with_root else None
+
+        def call(params, dstate, rnd, buf):
+            args = [params, dstate, rnd, buf, key]
+            if with_root:
+                args.append(root)
+            return fn(*args)
+
+        params, dstate, rnd, buf, m = call(params, dstate, rnd, buf)  # warmup/compile
+        jax.block_until_ready(params)
+        t0 = time.time()
+        for _ in range(iters):
+            params, dstate, rnd, buf, m = call(params, dstate, rnd, buf)
+        jax.block_until_ready(params)
+        sec = (time.time() - t0) / iters
+        out[rule] = {
+            "us_per_flush": sec * 1e6,
+            "flushes_per_s": 1.0 / sec,
+            "updates_per_s": CAPACITY / sec,
+        }
+        emit(
+            f"stream/flush/{rule}/K{CAPACITY}_d{DIM}",
+            sec * 1e6,
+            f"{CAPACITY / sec:.0f}upd/s",
+        )
+    return out
+
+
+def bench_e2e() -> dict:
+    from repro.stream.server import StreamExperimentConfig, run_stream_experiment
+
+    exp = StreamExperimentConfig(
+        n_workers=10,
+        concurrency=8,
+        flushes=4 if FAST else 10,
+        buffer_capacity=4,
+        latency="exponential",
+        local_steps=2,
+        batch_size=4,
+        algorithm="drag",
+        discount="poly",
+        eval_every=100,  # time the loop, not eval
+        seed=0,
+    )
+    t0 = time.time()
+    h = run_stream_experiment(exp)
+    wall = time.time() - t0
+    rec = {
+        "flushes": exp.flushes,
+        "updates_total": h["updates_total"],
+        "updates_per_wall_s": h["updates_per_wall_s"],
+        "wall_s": wall,
+    }
+    emit("stream/e2e/drag_mlp", wall / max(h["updates_total"], 1) * 1e6,
+         f"{h['updates_per_wall_s']:.1f}upd/s")
+    return rec
+
+
+def run() -> None:
+    record = {
+        "ingest": bench_ingest(128 if FAST else 512),
+        "flush": bench_flush(5 if FAST else 20),
+        "e2e": bench_e2e(),
+    }
+    with open("BENCH_stream.json", "w") as f:
+        json.dump(record, f, indent=2)
+    print("wrote BENCH_stream.json", flush=True)
+
+
+if __name__ == "__main__":
+    run()

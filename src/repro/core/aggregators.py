@@ -203,6 +203,25 @@ AGGREGATORS = {
 #: aggregators that consume a server reference direction r^t
 NEEDS_REFERENCE = {"fltrust", "drag", "br_drag"}
 
+#: client-side algorithm variants whose server reduction is the plain mean
+MEAN_REDUCED = {"fedavg", "fedprox", "scaffold", "fedacg"}
+
+
+def rule_kwargs(name: str, *, n_byzantine: int = 0, geomed_iters: int = 8) -> dict:
+    """Hyper-parameter kwargs for one registry rule.
+
+    Shared by the synchronous round (``repro.fl.round``) and the async
+    stream flush (``repro.stream.server``) so every rule stays reachable
+    from both dispatchers with consistent parameterisation.
+    """
+    if name in ("krum", "multi_krum", "bulyan"):
+        return {"n_byzantine": n_byzantine}
+    if name == "trimmed_mean":
+        return {"trim": n_byzantine}
+    if name in ("geomed", "rfa", "raga"):
+        return {"iters": geomed_iters}
+    return {}
+
 
 def get(name: str, **fixed):
     if name not in AGGREGATORS:

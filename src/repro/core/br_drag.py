@@ -45,9 +45,23 @@ def calibrate_worker(g: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Arra
     return calibrate(g, r, lam), lam
 
 
-def aggregate(updates_stacked: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Array]:
-    """PS-side calibration of all S uploads + mean (eq. 14)."""
-    vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
+def aggregate(
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None
+) -> tuple[pt.Pytree, jax.Array]:
+    """PS-side calibration of all S uploads + mean (eq. 14).
+
+    ``discounts`` (optional [S] float32) are staleness factors phi(tau_m)
+    from the async engine; None = fresh uploads (synchronous paper form).
+    """
+    if discounts is None:
+        vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
+    else:
+
+        def one(g, phi):
+            lam = degree_of_divergence(g, r, c, phi)
+            return calibrate(g, r, lam), lam
+
+        vs, lams = jax.vmap(one)(updates_stacked, discounts)
     delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
     return delta, lams
 
@@ -79,9 +93,10 @@ def round_step(
     reference: pt.Pytree,
     *,
     c: float,
+    discounts=None,
 ) -> tuple[pt.Pytree, dict]:
     """One BR-DRAG server round given uploads and the trusted r^t."""
-    delta, lams = aggregate(updates_stacked, reference, c)
+    delta, lams = aggregate(updates_stacked, reference, c, discounts)
     new_params = pt.tree_add(params, delta)
     metrics = {
         "dod_mean": jnp.mean(lams),

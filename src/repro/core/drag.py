@@ -38,9 +38,15 @@ def init_state(params: pt.Pytree) -> DragState:
     )
 
 
-def degree_of_divergence(g: pt.Pytree, r: pt.Pytree, c) -> jax.Array:
-    """DoD lambda_m^t = c * (1 - cos(g_m, r))  in [0, 2c]   (eq. 10)."""
-    return c * (1.0 - pt.cosine_similarity(g, r, EPS))
+def degree_of_divergence(g: pt.Pytree, r: pt.Pytree, c, discount=1.0) -> jax.Array:
+    """DoD lambda_m^t = c * (1 - cos(g_m, r)) * phi  in [0, 2c]   (eq. 10).
+
+    ``discount`` is the staleness factor phi(tau_m) used by the async
+    engine (``repro.stream.staleness``); the default 1.0 — a fresh update,
+    tau = 0 — recovers the paper's synchronous eq. (10) exactly (x * 1.0
+    is bit-exact in IEEE float).
+    """
+    return c * (1.0 - pt.cosine_similarity(g, r, EPS)) * discount
 
 
 def calibrate(g: pt.Pytree, r: pt.Pytree, lam, eps: float = EPS) -> pt.Pytree:
@@ -62,12 +68,26 @@ def calibrate_worker(g: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Arra
     return calibrate(g, r, lam), lam
 
 
-def aggregate(updates_stacked: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Array]:
+def aggregate(
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None
+) -> tuple[pt.Pytree, jax.Array]:
     """Calibrate a stacked [S, ...] update pytree and average (eq. 6).
+
+    ``discounts`` (optional [S] float32) are per-update staleness factors
+    phi(tau_m) from the async engine (``repro.stream.staleness``); None
+    means fresh updates — the synchronous paper setting.
 
     Returns (Delta^t, lambdas[S]).
     """
-    vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
+    if discounts is None:
+        vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
+    else:
+
+        def one(g, phi):
+            lam = degree_of_divergence(g, r, c, phi)
+            return calibrate(g, r, lam), lam
+
+        vs, lams = jax.vmap(one)(updates_stacked, discounts)
     delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
     return delta, lams
 
@@ -90,13 +110,15 @@ def round_step(
     *,
     alpha: float,
     c: float,
+    discounts=None,
 ) -> tuple[pt.Pytree, DragState, dict]:
     """One full DRAG server round given the S raw worker updates.
 
     Matches Alg. 1: on the bootstrap round the raw FedAvg mean both forms
     r^0 and is applied directly (the paper computes r^0 from the round-0
     uploads, eq. 5a); afterwards workers calibrate against r^t and the PS
-    applies Delta^t and rolls the EMA.
+    applies Delta^t and rolls the EMA.  ``discounts`` as in
+    :func:`aggregate` (async staleness factors; None = synchronous).
     """
     raw_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), updates_stacked)
 
@@ -105,7 +127,7 @@ def round_step(
         return raw_mean, lam0
 
     def calibrated(_):
-        return aggregate(updates_stacked, state.reference, c)
+        return aggregate(updates_stacked, state.reference, c, discounts)
 
     delta, lams = jax.lax.cond(state.initialized, calibrated, bootstrap, None)
     new_params = pt.tree_add(params, delta)

@@ -25,7 +25,8 @@ from repro.fl.client import local_update
 @dataclasses.dataclass(frozen=True)
 class RoundConfig:
     algorithm: str = "fedavg"  # fedavg|fedprox|scaffold|fedexp|fedacg|drag|
-    #                            fltrust|rfa|raga|krum|trimmed_mean|br_drag
+    #                            fltrust|rfa|raga|geomed|krum|multi_krum|
+    #                            bulyan|trimmed_mean|median|br_drag
     local_steps: int = 5  # U
     lr: float = 0.01  # eta
     alpha: float = 0.25  # DRAG EMA
@@ -153,20 +154,18 @@ def federated_round(
             params = pt.tree_add(params, delta)
             metrics["delta_norm"] = pt.tree_norm(delta)
     else:
-        if cfg.algorithm in ("fedavg", "fedprox", "scaffold", "fedacg"):
-            delta = aggregators.fedavg(g_stacked)
-        elif cfg.algorithm == "fedexp":
-            delta = aggregators.fedexp(g_stacked)
-        elif cfg.algorithm in ("rfa", "raga", "geomed"):
-            delta = aggregators.geometric_median(g_stacked, iters=cfg.geomed_iters)
-        elif cfg.algorithm == "krum":
-            delta = aggregators.krum(g_stacked, cfg.n_byzantine_hint)
-        elif cfg.algorithm == "trimmed_mean":
-            delta = aggregators.trimmed_mean(g_stacked, cfg.n_byzantine_hint)
-        elif cfg.algorithm == "median":
-            delta = aggregators.coordinate_median(g_stacked)
-        else:
+        # registry-driven dispatch: every non-reference rule in
+        # ``aggregators.AGGREGATORS`` is reachable by name; the client-side
+        # variants (fedprox/scaffold/fedacg) reduce with the plain mean.
+        rule = "fedavg" if cfg.algorithm in aggregators.MEAN_REDUCED else cfg.algorithm
+        if rule not in aggregators.AGGREGATORS or rule in aggregators.NEEDS_REFERENCE:
             raise ValueError(f"unknown algorithm {cfg.algorithm}")
+        delta = aggregators.AGGREGATORS[rule](
+            g_stacked,
+            **aggregators.rule_kwargs(
+                rule, n_byzantine=cfg.n_byzantine_hint, geomed_iters=cfg.geomed_iters
+            ),
+        )
         params = pt.tree_add(params, delta)
         metrics["delta_norm"] = pt.tree_norm(delta)
         if cfg.algorithm == "fedacg":

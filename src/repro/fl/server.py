@@ -78,7 +78,13 @@ def run_experiment(
         c=exp.c,
         c_br=exp.c_br,
         attack=exp.attack if exp.attack != "label_flipping" else "none",
-        n_byzantine_hint=max(int(exp.malicious_fraction * exp.n_selected), 1),
+        # 0 under a benign config — krum/trimmed_mean must not trim an
+        # honest worker when nothing is malicious; >=1 once any fraction is.
+        n_byzantine_hint=(
+            max(int(exp.malicious_fraction * exp.n_selected), 1)
+            if exp.malicious_fraction > 0
+            else 0
+        ),
     )
     with_root = exp.algorithm in ("br_drag", "fltrust")
     round_fn = make_round_fn(loss_fn, cfg, with_root)

@@ -1,0 +1,43 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``jax.shard_map`` (with ``axis_names``/``check_vma``) only exists in
+newer jax; older installs ship ``jax.experimental.shard_map.shard_map``
+(with ``auto``/``check_rep``).  The launch layer targets the new API and
+routes through :func:`shard_map` so both work.
+"""
+from __future__ import annotations
+
+import jax
+
+#: True when this jax ships the new top-level ``jax.shard_map`` API.
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, axis_names, in_specs, out_specs):
+    """``jax.shard_map`` if available, else the experimental equivalent.
+
+    ``axis_names`` is the set of *manual* mesh axes (the new-API meaning);
+    on the legacy API this maps to ``auto = mesh.axis_names - axis_names``.
+    Replication checking is disabled on both paths (the launch bodies mix
+    manual collectives with GSPMD-auto axes, which the checker rejects).
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            axis_names=axis_names,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+        auto=auto,
+    )

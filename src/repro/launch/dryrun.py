@@ -87,6 +87,8 @@ def _lower_step(arch, arch_id, shape, mesh, aggregator, local_steps):
 
 def _cost_of(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps it per-device
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     if "bytes accessed" in cost:
         byts = float(cost["bytes accessed"])

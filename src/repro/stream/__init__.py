@@ -1,0 +1,25 @@
+"""Asynchronous streaming FL engine.
+
+Event-driven serving shape for the paper's aggregation math: a
+virtual-time client simulator (``events``), a fixed-capacity donated
+ingest buffer (``buffer``), staleness-aware DRAG/BR-DRAG calibration
+(``staleness``), and the async server loop (``server``).  The sync
+bridge lives in ``repro.fl.bridge``.
+"""
+from repro.stream.buffer import BufferState, init_buffer, ingest, make_ingest_fn, reset  # noqa: F401
+from repro.stream.events import (  # noqa: F401
+    LATENCIES,
+    ClientEvent,
+    EventStream,
+    make_latency,
+)
+from repro.stream.server import (  # noqa: F401
+    AsyncStreamServer,
+    StreamConfig,
+    StreamExperimentConfig,
+    StreamState,
+    init_stream_state,
+    make_flush_fn,
+    run_stream_experiment,
+)
+from repro.stream.staleness import DISCOUNTS, make_discount  # noqa: F401

@@ -1,0 +1,86 @@
+"""Fixed-capacity jitted ingest buffer for the async server.
+
+The buffer is device-resident: one pre-allocated ``[K, ...]`` pytree of
+update slots plus per-slot metadata (dispatch-round tag, Byzantine flag).
+``ingest`` is a donated jitted write — ``.at[slot].set`` on the donated
+arrays lowers to an in-place dynamic-update-slice, so accepting an upload
+costs one slot write, never a buffer copy.  ``reset`` only zeroes the
+fill count; slot contents are overwritten by subsequent ingests.
+
+Flushing hands the stacked ``[K, ...]`` slots directly to any rule in
+``repro.core.aggregators.AGGREGATORS`` (see ``repro.stream.server``) —
+the buffer layout IS the stacked-worker layout used by every aggregator.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+
+class BufferState(NamedTuple):
+    """Device-side ingest buffer (capacity K = leading axis of slots)."""
+
+    slots: pt.Pytree  # [K, ...] update slots
+    dispatch_rounds: jax.Array  # [K] int32 — server version tags
+    malicious: jax.Array  # [K] bool — for Byzantine injection at flush
+    count: jax.Array  # [] int32 — filled slots
+
+
+def capacity_of(buf: BufferState) -> int:
+    return jax.tree.leaves(buf.slots)[0].shape[0]
+
+
+def init_buffer(params_like: pt.Pytree, capacity: int) -> BufferState:
+    """Allocates an empty K-slot buffer shaped like the param pytree."""
+    return BufferState(
+        slots=jax.tree.map(
+            lambda x: jnp.zeros((capacity,) + x.shape, x.dtype), params_like
+        ),
+        dispatch_rounds=jnp.zeros((capacity,), jnp.int32),
+        malicious=jnp.zeros((capacity,), bool),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def ingest(buf: BufferState, g: pt.Pytree, dispatch_round, is_malicious) -> BufferState:
+    """Write one update into the next free slot (drops if already full)."""
+    k = capacity_of(buf)
+    slot = jnp.minimum(buf.count, k - 1)
+    keep = buf.count < k  # full buffer: refuse the write, don't clobber
+
+    # select at SLOT granularity so the slot write stays a single in-place
+    # dynamic-update-slice on the donated arrays (a whole-buffer where
+    # would materialise a copy and break the donation fast path)
+    def write(s, x):
+        return s.at[slot].set(jnp.where(keep, x.astype(s.dtype), s[slot]))
+
+    return BufferState(
+        slots=jax.tree.map(write, buf.slots, g),
+        dispatch_rounds=buf.dispatch_rounds.at[slot].set(
+            jnp.where(keep, jnp.asarray(dispatch_round, jnp.int32), buf.dispatch_rounds[slot])
+        ),
+        malicious=buf.malicious.at[slot].set(
+            jnp.where(keep, is_malicious, buf.malicious[slot])
+        ),
+        count=buf.count + keep.astype(jnp.int32),
+    )
+
+
+def reset(buf: BufferState) -> BufferState:
+    """Empty the buffer without touching slot storage."""
+    return buf._replace(count=jnp.zeros((), jnp.int32))
+
+
+def staleness(buf: BufferState, server_round) -> jax.Array:
+    """tau_m = current version - dispatch version, per slot, [K] int32."""
+    return jnp.maximum(jnp.asarray(server_round, jnp.int32) - buf.dispatch_rounds, 0)
+
+
+def make_ingest_fn():
+    """Jitted donated ingest: the buffer argument is consumed in place."""
+    return jax.jit(ingest, donate_argnums=(0,))

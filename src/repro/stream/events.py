@@ -1,0 +1,197 @@
+"""Virtual-time client arrival/completion simulator for the async engine.
+
+The event stream models millions of intermittently-connected clients
+WITHOUT materialising per-client state: only the in-flight jobs (bounded
+by the server's dispatch concurrency) live in memory.  Client identities
+are drawn lazily at dispatch time, and per-client *systematic* properties
+— Byzantine control, device-speed class — are derived from a
+deterministic integer hash of ``(seed, client_id)``, so the same virtual
+client always behaves the same way across dispatches with O(1) storage.
+
+Latency models are pluggable (:data:`LATENCIES`); completion events pop
+in virtual-time order with FIFO tie-breaking, so the zero-latency model
+degenerates to exact dispatch order — the property the sync bridge
+(``repro.fl.bridge``) relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+import numpy as np
+
+
+# ---------------------------------------------------------------- hashing
+def _splitmix64(x: int) -> int:
+    """SplitMix64 finaliser: deterministic uint64 hash."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+def client_uniform(seed: int, client_id: int, salt: int) -> float:
+    """Deterministic per-client uniform in [0, 1) — no per-client storage."""
+    h = _splitmix64(_splitmix64(seed ^ (salt * 0x9E3779B9)) ^ client_id)
+    return h / float(1 << 64)
+
+
+# ---------------------------------------------------------------- latency
+class LatencyModel:
+    """Round-trip latency (dispatch -> completed upload) in virtual time."""
+
+    def sample(self, rng: np.random.RandomState, client_id: int) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Constant(LatencyModel):
+    value: float = 0.0
+
+    def sample(self, rng, client_id):
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class Uniform(LatencyModel):
+    lo: float = 0.5
+    hi: float = 1.5
+
+    def sample(self, rng, client_id):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(LatencyModel):
+    scale: float = 1.0
+
+    def sample(self, rng, client_id):
+        return float(rng.exponential(self.scale))
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNormal(LatencyModel):
+    mu: float = 0.0
+    sigma: float = 0.5
+
+    def sample(self, rng, client_id):
+        return float(rng.lognormal(self.mu, self.sigma))
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler(LatencyModel):
+    """Wraps a base model with a deterministic per-client speed class.
+
+    Each client gets a fixed multiplier in [1, 1 + spread] from the hash —
+    systematic device heterogeneity (stragglers) rather than i.i.d. jitter.
+    """
+
+    base: LatencyModel = Constant(1.0)
+    spread: float = 4.0
+    seed: int = 0
+
+    def sample(self, rng, client_id):
+        u = client_uniform(self.seed, client_id, salt=0xD1)
+        return self.base.sample(rng, client_id) * (1.0 + self.spread * u * u)
+
+
+LATENCIES = {
+    "zero": lambda **kw: Constant(0.0),
+    "constant": lambda value=1.0, **kw: Constant(value),
+    "uniform": lambda lo=0.5, hi=1.5, **kw: Uniform(lo, hi),
+    "exponential": lambda scale=1.0, **kw: Exponential(scale),
+    "lognormal": lambda mu=0.0, sigma=0.5, **kw: LogNormal(mu, sigma),
+    "straggler": lambda scale=1.0, spread=4.0, seed=0, **kw: Straggler(
+        Exponential(scale), spread, seed
+    ),
+}
+
+
+def make_latency(name: str, **kw) -> LatencyModel:
+    if name not in LATENCIES:
+        raise KeyError(f"unknown latency model {name!r}; have {sorted(LATENCIES)}")
+    return LATENCIES[name](**kw)
+
+
+# ------------------------------------------------------------ event stream
+@dataclasses.dataclass(frozen=True)
+class ClientEvent:
+    """One dispatched local-training job."""
+
+    seq: int  # unique dispatch sequence number
+    client_id: int
+    dispatch_round: int  # server version t the client trained from
+    dispatch_time: float
+    completion_time: float
+    malicious: bool
+
+
+class EventStream:
+    """Priority-queue simulator over virtual time.
+
+    ``dispatch`` schedules a job for a (lazily sampled) client;
+    ``next_completion`` pops the earliest completion and advances the
+    clock.  Memory is O(in-flight), never O(n_clients).
+    """
+
+    def __init__(
+        self,
+        n_clients: int,
+        latency: LatencyModel | str = "exponential",
+        *,
+        seed: int = 0,
+        malicious_fraction: float = 0.0,
+        malicious_lookup=None,  # optional callable client_id -> bool
+    ):
+        self.n_clients = int(n_clients)
+        self.latency = make_latency(latency) if isinstance(latency, str) else latency
+        self.seed = seed
+        self.malicious_fraction = float(malicious_fraction)
+        self._malicious_lookup = malicious_lookup
+        self._rng = np.random.RandomState(seed)
+        self._heap: list = []
+        self._seq = 0
+        self.now = 0.0
+        self.completed = 0
+
+    # ---- per-client systematic properties (hash-derived, zero storage)
+    def is_malicious(self, client_id: int) -> bool:
+        if self._malicious_lookup is not None:
+            return bool(self._malicious_lookup(client_id))
+        if self.malicious_fraction <= 0.0:
+            return False
+        return client_uniform(self.seed, client_id, salt=0xBAD) < self.malicious_fraction
+
+    # ---- scheduling
+    def dispatch(self, server_round: int, client_id: int | None = None) -> ClientEvent:
+        """Schedule one job; samples a client UAR unless one is given."""
+        if client_id is None:
+            client_id = int(self._rng.randint(0, self.n_clients))
+        dt = self.latency.sample(self._rng, client_id)
+        if not (math.isfinite(dt) and dt >= 0.0):
+            raise ValueError(f"latency model produced invalid delay {dt!r}")
+        ev = ClientEvent(
+            seq=self._seq,
+            client_id=int(client_id),
+            dispatch_round=int(server_round),
+            dispatch_time=self.now,
+            completion_time=self.now + dt,
+            malicious=self.is_malicious(int(client_id)),
+        )
+        # FIFO tie-break on equal completion times (zero-latency determinism)
+        heapq.heappush(self._heap, (ev.completion_time, ev.seq, ev))
+        self._seq += 1
+        return ev
+
+    def next_completion(self) -> ClientEvent:
+        """Pop the earliest-finishing job and advance virtual time."""
+        if not self._heap:
+            raise RuntimeError("no jobs in flight — dispatch before popping")
+        t, _, ev = heapq.heappop(self._heap)
+        self.now = t
+        self.completed += 1
+        return ev
+
+    def in_flight(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,396 @@
+"""Event-driven asynchronous FL server (buffered-async, FedBuff-shaped).
+
+The serving loop is::
+
+    completion event -> client update (vs. the params SNAPSHOT the client
+    was dispatched with) -> donated buffer ingest -> threshold flush
+    (any rule in ``aggregators.AGGREGATORS``, staleness-aware for
+    DRAG/BR-DRAG) -> global step -> reference EMA update -> re-dispatch
+
+Clients never block each other: an upload lands in the fixed-capacity
+ingest buffer (``repro.stream.buffer``) tagged with the model version it
+trained from, and the global model only advances when the buffer reaches
+its flush threshold K.  Staleness tau_m = t - t_dispatch is known
+exactly at flush time and feeds the discounted DoD
+(``repro.stream.staleness``).  Byzantine behaviour reuses
+``repro.core.attacks`` verbatim: update-space attacks transform the
+buffered stack at flush (the malicious mask rides along in the buffer),
+data-space attacks poison the per-client sample stream.
+
+With buffer capacity S, zero latency, and phi = none the engine
+reproduces the synchronous ``repro.fl.round.federated_round`` trajectory
+bit-for-bit — see ``repro.fl.bridge``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregators, attacks, br_drag, drag
+from repro.core import pytree as pt
+from repro.fl.client import local_update
+from repro.stream import buffer as buf_mod
+from repro.stream import staleness as stale
+from repro.stream.events import EventStream
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static config of the jitted ingest/flush steps."""
+
+    algorithm: str = "drag"  # any non-client-variant rule; see fl.bridge
+    buffer_capacity: int = 10  # K — flush threshold
+    local_steps: int = 5  # U (documents the protocol, as in RoundConfig;
+    #                        the client scan infers U from the batch stack)
+    lr: float = 0.01  # eta
+    alpha: float = 0.25  # DRAG EMA
+    c: float = 0.1  # DRAG DoD coefficient
+    c_br: float = 0.5  # BR-DRAG DoD coefficient
+    discount: str = "none"  # staleness phi: none | poly | exp
+    discount_a: float = 0.5  # phi sharpness a
+    attack: str = "none"
+    attack_kw: tuple = ()
+    n_byzantine_hint: int = 0  # krum / multi_krum / bulyan / trimmed_mean
+    geomed_iters: int = 8
+
+
+class StreamState(NamedTuple):
+    """Full async-server state between events."""
+
+    params: pt.Pytree
+    round: jax.Array  # int32 — global model version t (flush count)
+    drag: drag.DragState  # reference EMA (drag) / unused otherwise
+    buffer: buf_mod.BufferState
+
+
+def init_stream_state(params: pt.Pytree, capacity: int) -> StreamState:
+    # Copy params for the same aliasing reason as fl.round.init_server_state.
+    return StreamState(
+        params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
+        round=jnp.zeros((), jnp.int32),
+        drag=drag.init_state(params),
+        buffer=buf_mod.init_buffer(params, capacity),
+    )
+
+
+def flush(
+    loss_fn: Callable,
+    cfg: StreamConfig,
+    params: pt.Pytree,
+    drag_state: drag.DragState,
+    rnd: jax.Array,
+    buf: buf_mod.BufferState,
+    key,
+    root_batches=None,  # [U, B, ...] — BR-DRAG / FLTrust root data
+):
+    """One global step from a full buffer; returns
+    (params', drag', round+1, reset buffer, metrics)."""
+    taus = buf_mod.staleness(buf, rnd)
+    discounts = stale.make_discount(cfg.discount, cfg.discount_a)(taus)
+
+    # ---- Byzantine update-space attack over the buffered stack
+    g = attacks.apply_update_attack(
+        cfg.attack, key, buf.slots, buf.malicious, **dict(cfg.attack_kw)
+    )
+
+    metrics: dict = {
+        "staleness_mean": jnp.mean(taus.astype(jnp.float32)),
+        "staleness_max": jnp.max(taus),
+        "discount_mean": jnp.mean(discounts),
+    }
+    new_drag = drag_state
+
+    if cfg.algorithm == "drag":
+        params, new_drag, dm = stale.drag_round_step(
+            params, drag_state, g, discounts, alpha=cfg.alpha, c=cfg.c
+        )
+        metrics.update(dm)
+    elif cfg.algorithm in ("br_drag", "fltrust"):
+        assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
+        grad_fn = jax.grad(loss_fn)
+        reference = br_drag.root_reference(
+            params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr
+        )
+        if cfg.algorithm == "br_drag":
+            params, dm = stale.br_drag_round_step(
+                params, g, reference, discounts, c=cfg.c_br
+            )
+            metrics.update(dm)
+        else:
+            delta = aggregators.fltrust(g, reference)
+            params = pt.tree_add(params, delta)
+            metrics["delta_norm"] = pt.tree_norm(delta)
+    else:
+        if cfg.algorithm in aggregators.MEAN_REDUCED and cfg.algorithm != "fedavg":
+            # unlike fl.round, there is no client-variant objective here —
+            # stream clients run plain SGD, so silently reducing these with
+            # the mean would mislabel fedavg results
+            raise ValueError(
+                f"{cfg.algorithm} needs client-variant local objectives; "
+                "stream clients run plain SGD — use the synchronous regime"
+            )
+        rule = cfg.algorithm
+        if rule not in aggregators.AGGREGATORS or rule in aggregators.NEEDS_REFERENCE:
+            raise ValueError(f"unknown stream algorithm {cfg.algorithm}")
+        delta = aggregators.AGGREGATORS[rule](
+            g,
+            **aggregators.rule_kwargs(
+                rule, n_byzantine=cfg.n_byzantine_hint, geomed_iters=cfg.geomed_iters
+            ),
+        )
+        params = pt.tree_add(params, delta)
+        metrics["delta_norm"] = pt.tree_norm(delta)
+
+    metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g))
+    return params, new_drag, rnd + 1, buf_mod.reset(buf), metrics
+
+
+def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
+    """Jitted flush.  The BUFFER is donated (its slot storage is reused by
+    the reset buffer); params are NOT — in-flight dispatch snapshots alias
+    the pre-flush params and must stay valid."""
+    if with_root:
+
+        @partial(jax.jit, donate_argnums=(3,))
+        def fn(params, drag_state, rnd, buf, key, root_batches):
+            return flush(loss_fn, cfg, params, drag_state, rnd, buf, key, root_batches)
+
+    else:
+
+        @partial(jax.jit, donate_argnums=(3,))
+        def fn(params, drag_state, rnd, buf, key):
+            return flush(loss_fn, cfg, params, drag_state, rnd, buf, key)
+
+    return fn
+
+
+def make_client_fn(loss_fn: Callable, cfg: StreamConfig):
+    """Jitted single-client local update (plain SGD — the stream engine
+    carries no per-client server state, so client-variant algorithms like
+    scaffold/fedacg stay in the synchronous regime)."""
+
+    def fn(params, batches_u):
+        g, _ = local_update(loss_fn, params, batches_u, cfg.lr, variant="sgd")
+        return g
+
+    return jax.jit(fn)
+
+
+class AsyncStreamServer:
+    """Host-side driver: owns the StreamState plus the jitted step fns.
+
+    The event loop calls ``client_update`` (against the dispatch-time
+    snapshot), ``ingest``, and ``flush_if_ready`` — the server never
+    blocks on slow clients.
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        params: pt.Pytree,
+        cfg: StreamConfig,
+    ):
+        self.cfg = cfg
+        self.with_root = cfg.algorithm in ("br_drag", "fltrust")
+        self.state = init_stream_state(params, cfg.buffer_capacity)
+        self._ingest = buf_mod.make_ingest_fn()
+        self._flush = make_flush_fn(loss_fn, cfg, self.with_root)
+        self._client = make_client_fn(loss_fn, cfg)
+        self.t = 0  # host-side mirror of state.round (avoids device syncs)
+        self.ingested = 0  # accepted since last flush (mirrors buffer.count)
+        self.dropped = 0  # uploads refused because the buffer was full
+
+    @property
+    def params(self) -> pt.Pytree:
+        return self.state.params
+
+    def client_update(self, params_snapshot: pt.Pytree, batches_u) -> pt.Pytree:
+        return self._client(params_snapshot, batches_u)
+
+    def ingest(self, g: pt.Pytree, dispatch_round: int, is_malicious: bool) -> bool:
+        """Accept one upload.  Returns False — and counts the drop — when
+        the buffer is already at threshold; call ``flush_if_ready`` first
+        if the update must not be lost."""
+        if self.ingested >= self.cfg.buffer_capacity:
+            self.dropped += 1
+            return False
+        self.state = self.state._replace(
+            buffer=self._ingest(self.state.buffer, g, dispatch_round, is_malicious)
+        )
+        self.ingested += 1
+        return True
+
+    def buffer_ready(self) -> bool:
+        # host-side mirror: count == ingested since last flush
+        return self.ingested >= self.cfg.buffer_capacity
+
+    def flush_if_ready(self, key, root_batches=None) -> dict | None:
+        if not self.buffer_ready():
+            return None
+        args = [self.state.params, self.state.drag, self.state.round, self.state.buffer, key]
+        if self.with_root:
+            assert root_batches is not None
+            args.append(root_batches)
+        params, new_drag, rnd, buf, metrics = self._flush(*args)
+        self.state = StreamState(params=params, round=rnd, drag=new_drag, buffer=buf)
+        self.t += 1
+        self.ingested = 0
+        return metrics
+
+
+# ------------------------------------------------------------- experiment
+@dataclasses.dataclass
+class StreamExperimentConfig:
+    """Async analogue of ``repro.fl.server.ExperimentConfig``."""
+
+    dataset: str = "emnist"
+    model: str = "mlp"
+    n_workers: int = 40  # M (the EVENT layer scales far beyond this;
+    #                       the materialised data pipeline is the limit)
+    concurrency: int = 16  # W — in-flight dispatches
+    flushes: int = 60  # T — global steps to run
+    buffer_capacity: int = 10  # K
+    latency: str = "exponential"
+    latency_kw: tuple = ()  # e.g. (("scale", 2.0),)
+    local_steps: int = 5  # U
+    batch_size: int = 10  # B
+    lr: float = 0.01
+    beta: float = 0.1  # Dirichlet heterogeneity
+    algorithm: str = "drag"
+    attack: str = "none"
+    malicious_fraction: float = 0.0
+    alpha: float = 0.25
+    c: float = 0.1
+    c_br: float = 0.5
+    discount: str = "poly"
+    discount_a: float = 0.5
+    root_samples: int = 3000
+    eval_every: int = 10  # in flushes
+    seed: int = 0
+
+
+def run_stream_experiment(
+    exp: StreamExperimentConfig,
+    data=None,
+    progress: Callable[[dict], None] | None = None,
+) -> dict:
+    """Event-driven training run; returns a history dict with accuracy,
+    staleness, and throughput (virtual + wall) per eval point."""
+    from repro.data.pipeline import build_federated_data
+    from repro.models import cnn
+
+    rng = np.random.RandomState(exp.seed)
+    key = jax.random.PRNGKey(exp.seed)
+
+    if data is None:
+        data = build_federated_data(
+            exp.dataset, exp.n_workers, exp.beta,
+            malicious_fraction=exp.malicious_fraction, attack=exp.attack,
+            seed=exp.seed,
+        )
+
+    init_fn, apply_fn = cnn.MODELS[exp.model]
+    key, k_init = jax.random.split(key)
+    if exp.model == "mlp":
+        in_dim = int(np.prod(data.x.shape[1:]))
+        params = init_fn(k_init, in_dim, 64, data.n_classes)
+    else:
+        params = init_fn(k_init)
+
+    def loss_fn(p, batch):
+        return cnn.classification_loss(apply_fn, p, batch)
+
+    cfg = StreamConfig(
+        algorithm=exp.algorithm,
+        buffer_capacity=exp.buffer_capacity,
+        local_steps=exp.local_steps,
+        lr=exp.lr,
+        alpha=exp.alpha,
+        c=exp.c,
+        c_br=exp.c_br,
+        discount=exp.discount,
+        discount_a=exp.discount_a,
+        attack=exp.attack if exp.attack != "label_flipping" else "none",
+        n_byzantine_hint=(
+            max(int(exp.malicious_fraction * exp.buffer_capacity), 1)
+            if exp.malicious_fraction > 0
+            else 0
+        ),
+    )
+    from repro.stream.events import make_latency
+
+    server = AsyncStreamServer(loss_fn, params, cfg)
+    stream = EventStream(
+        exp.n_workers,
+        make_latency(exp.latency, **dict(exp.latency_kw)),
+        seed=exp.seed,
+        malicious_lookup=lambda m: bool(data.malicious[m]),
+    )
+
+    eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
+    tb = data.test_batch()
+    test_batch = {"x": jnp.asarray(tb["x"]), "y": jnp.asarray(tb["y"])}
+
+    # prime the pipeline: W concurrent jobs against the initial model
+    inflight: dict[int, pt.Pytree] = {}
+    for _ in range(exp.concurrency):
+        ev = stream.dispatch(server.t)
+        inflight[ev.seq] = server.params
+
+    history = {
+        "flush": [], "accuracy": [], "staleness_mean": [],
+        "virtual_time": [], "wall_s": [], "update_norm": [],
+    }
+    t0 = time.time()
+    while server.t < exp.flushes:
+        ev = stream.next_completion()
+        snapshot = inflight.pop(ev.seq)
+        batch_np = data.sample_round(rng, [ev.client_id], exp.local_steps, exp.batch_size)
+        batches = {
+            "x": jnp.asarray(batch_np["x"][0]),
+            "y": jnp.asarray(batch_np["y"][0]),
+        }
+        g = server.client_update(snapshot, batches)
+        server.ingest(g, ev.dispatch_round, ev.malicious)
+
+        # keep the pipeline full: re-dispatch against the CURRENT model
+        ev2 = stream.dispatch(server.t)
+        inflight[ev2.seq] = server.params
+
+        metrics = None
+        if server.buffer_ready():
+            key, k_flush = jax.random.split(key)
+            root = None
+            if server.with_root:
+                root_np = data.root_batches(
+                    rng, exp.local_steps, exp.batch_size, exp.root_samples
+                )
+                root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
+            metrics = server.flush_if_ready(k_flush, root)
+
+        if metrics is not None and (
+            server.t % exp.eval_every == 0 or server.t == exp.flushes
+        ):
+            acc = float(eval_jit(server.params, test_batch))
+            history["flush"].append(server.t)
+            history["accuracy"].append(acc)
+            history["staleness_mean"].append(float(metrics["staleness_mean"]))
+            history["virtual_time"].append(stream.now)
+            history["wall_s"].append(time.time() - t0)
+            history["update_norm"].append(float(metrics["update_norm_mean"]))
+            if progress:
+                progress({
+                    "flush": server.t, "accuracy": acc,
+                    **{k: float(v) for k, v in metrics.items()},
+                })
+
+    history["final_accuracy"] = history["accuracy"][-1] if history["accuracy"] else 0.0
+    history["updates_total"] = stream.completed
+    history["updates_per_wall_s"] = stream.completed / max(time.time() - t0, 1e-9)
+    return history

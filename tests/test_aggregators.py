@@ -128,6 +128,32 @@ def test_bulyan_outlier_resistance():
     assert float(pt.tree_norm(out)) < 10.0
 
 
+def test_round_dispatch_registry_parity():
+    """Every non-reference rule in AGGREGATORS must be reachable via
+    RoundConfig.algorithm through the synchronous federated_round."""
+    from repro.fl.round import RoundConfig, federated_round, init_server_state
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    s, u, b, d = 6, 2, 4, 3
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((d, 1))}
+    batches = {
+        "x": jax.random.normal(key, (s, u, b, d)),
+        "y": jax.random.normal(jax.random.fold_in(key, 1), (s, u, b, 1)),
+    }
+    mask = jnp.zeros((s,), bool)
+    idx = jnp.arange(s, dtype=jnp.int32)
+    for rule in sorted(set(agg.AGGREGATORS) - agg.NEEDS_REFERENCE):
+        cfg = RoundConfig(algorithm=rule, local_steps=u, n_byzantine_hint=1)
+        state = init_server_state(params, s)
+        new_state, _ = federated_round(loss_fn, state, cfg, batches, idx, mask, key)
+        moved = float(pt.tree_norm(pt.tree_sub(new_state.params, params)))
+        assert np.isfinite(moved) and moved > 0, rule
+
+
 def test_multi_krum_equals_krum_when_m_1():
     ups = _ups(jax.random.PRNGKey(7), s=6)
     out1 = agg.krum(ups, n_byzantine=1)

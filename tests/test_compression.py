@@ -1,5 +1,7 @@
 """Compression substrate: top-k / sign with error feedback."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

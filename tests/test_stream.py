@@ -1,0 +1,367 @@
+"""Async streaming engine tests: events, buffer, staleness calibration,
+the async server loop, and the sync-bridge bit-for-bit equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators, br_drag, drag
+from repro.core import pytree as pt
+from repro.stream import buffer as buf_mod
+from repro.stream import staleness as stale
+from repro.stream.events import Constant, EventStream, Straggler, make_latency
+from repro.stream.server import (
+    AsyncStreamServer,
+    StreamConfig,
+    StreamExperimentConfig,
+    flush,
+    run_stream_experiment,
+)
+
+
+# ------------------------------------------------------------------ events
+class TestEvents:
+    def test_zero_latency_fifo(self):
+        es = EventStream(100, "zero", seed=0)
+        ids = [es.dispatch(0, client_id=i).client_id for i in range(10)]
+        got = [es.next_completion().client_id for _ in range(10)]
+        assert got == ids  # FIFO tie-breaking at equal completion times
+
+    def test_virtual_clock_monotone(self):
+        es = EventStream(1000, "exponential", seed=1)
+        for _ in range(50):
+            es.dispatch(0)
+        last = 0.0
+        for _ in range(50):
+            ev = es.next_completion()
+            assert ev.completion_time >= last
+            assert es.now == ev.completion_time
+            last = ev.completion_time
+
+    def test_millions_of_clients_lazy(self):
+        """O(in-flight) memory: 10M virtual clients, nothing materialised."""
+        es = EventStream(10_000_000, "exponential", seed=2, malicious_fraction=0.3)
+        for _ in range(64):
+            es.dispatch(0)
+        seen = set()
+        for _ in range(64):
+            ev = es.next_completion()
+            seen.add(ev.client_id)
+            es.dispatch(1)
+        assert es.in_flight() == 64
+        assert max(seen) < 10_000_000
+        # hash-derived Byzantine flags approximate the configured fraction
+        frac = np.mean([es.is_malicious(i) for i in range(5000)])
+        assert 0.25 < frac < 0.35
+
+    def test_malicious_deterministic_and_lookup(self):
+        es = EventStream(100, "zero", seed=3, malicious_fraction=0.5)
+        flags = [es.is_malicious(i) for i in range(100)]
+        assert flags == [es.is_malicious(i) for i in range(100)]
+        mal = np.zeros(10, bool)
+        mal[7] = True
+        es2 = EventStream(10, "zero", malicious_lookup=lambda m: bool(mal[m]))
+        assert es2.is_malicious(7) and not es2.is_malicious(3)
+
+    def test_straggler_systematic(self):
+        lat = Straggler(Constant(1.0), spread=4.0, seed=0)
+        rng = np.random.RandomState(0)
+        a1, a2 = lat.sample(rng, 42), lat.sample(rng, 42)
+        assert a1 == a2  # same client -> same deterministic speed class
+        others = {lat.sample(rng, i) for i in range(20)}
+        assert len(others) > 10  # spread across clients
+
+    def test_latency_registry(self):
+        for name in ("zero", "constant", "uniform", "exponential", "lognormal"):
+            m = make_latency(name)
+            assert m.sample(np.random.RandomState(0), 0) >= 0.0
+        with pytest.raises(KeyError):
+            make_latency("nope")
+
+
+# ------------------------------------------------------------------ buffer
+def _params():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": jnp.ones(2)}
+
+
+class TestBuffer:
+    def test_ingest_fill_and_stack(self):
+        p = _params()
+        buf = buf_mod.init_buffer(p, capacity=4)
+        for i in range(4):
+            g = jax.tree.map(lambda x: x * (i + 1.0), p)
+            buf = buf_mod.ingest(buf, g, dispatch_round=i, is_malicious=(i == 2))
+        assert int(buf.count) == 4
+        np.testing.assert_array_equal(np.asarray(buf.dispatch_rounds), [0, 1, 2, 3])
+        np.testing.assert_array_equal(np.asarray(buf.malicious), [0, 0, 1, 0])
+        for i in range(4):
+            np.testing.assert_allclose(
+                np.asarray(buf.slots["w"][i]), np.asarray(p["w"]) * (i + 1.0)
+            )
+
+    def test_ingest_overflow_drops(self):
+        p = _params()
+        buf = buf_mod.init_buffer(p, capacity=2)
+        for i in range(3):
+            buf = buf_mod.ingest(buf, jax.tree.map(lambda x: x + i, p), i, False)
+        assert int(buf.count) == 2  # third write refused
+        np.testing.assert_allclose(np.asarray(buf.slots["b"][1]), np.asarray(p["b"]) + 1)
+
+    def test_reset_keeps_storage(self):
+        p = _params()
+        buf = buf_mod.ingest(buf_mod.init_buffer(p, 2), p, 5, True)
+        buf2 = buf_mod.reset(buf)
+        assert int(buf2.count) == 0
+        np.testing.assert_allclose(np.asarray(buf2.slots["w"][0]), np.asarray(p["w"]))
+
+    def test_staleness_tags(self):
+        p = _params()
+        buf = buf_mod.init_buffer(p, 3)
+        for t in (0, 2, 4):
+            buf = buf_mod.ingest(buf, p, t, False)
+        taus = buf_mod.staleness(buf, server_round=4)
+        np.testing.assert_array_equal(np.asarray(taus), [4, 2, 0])
+
+    def test_jitted_donated_ingest(self):
+        p = _params()
+        fn = buf_mod.make_ingest_fn()
+        buf = buf_mod.init_buffer(p, 8)
+        for i in range(8):
+            buf = fn(buf, jax.tree.map(lambda x: x * i, p), i, False)
+        assert int(buf.count) == 8
+        np.testing.assert_allclose(np.asarray(buf.slots["b"][3]), 3.0 * np.asarray(p["b"]))
+
+
+# --------------------------------------------------------------- staleness
+class TestStaleness:
+    def test_phi_of_zero_is_one(self):
+        tau = jnp.zeros(5, jnp.int32)
+        for name in stale.DISCOUNTS:
+            np.testing.assert_allclose(
+                np.asarray(stale.make_discount(name, 0.7)(tau)), 1.0
+            )
+
+    def test_phi_monotone_decreasing(self):
+        tau = jnp.arange(10, dtype=jnp.int32)
+        for name in ("poly", "exp"):
+            phi = np.asarray(stale.make_discount(name, 0.5)(tau))
+            assert np.all(np.diff(phi) < 0) and phi[0] == 1.0
+
+    def test_fresh_updates_match_sync_drag_bitwise(self):
+        """discounts == 1 -> staleness round step IS drag.round_step."""
+        key = jax.random.PRNGKey(0)
+        p = {"w": jax.random.normal(key, (4, 3))}
+        ups = {"w": jax.random.normal(jax.random.fold_in(key, 1), (6, 4, 3))}
+        state = drag.DragState(
+            reference={"w": jax.random.normal(jax.random.fold_in(key, 2), (4, 3))},
+            initialized=jnp.asarray(True),
+        )
+        ones = jnp.ones(6, jnp.float32)
+        p1, s1, m1 = drag.round_step(p, state, ups, alpha=0.25, c=0.3)
+        p2, s2, m2 = stale.drag_round_step(p, state, ups, ones, alpha=0.25, c=0.3)
+        np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+        np.testing.assert_array_equal(
+            np.asarray(s1.reference["w"]), np.asarray(s2.reference["w"])
+        )
+
+    def test_stale_updates_calibrated_less(self):
+        """phi < 1 shrinks the DoD: a divergent stale update keeps more of
+        its raw direction than the same update fresh."""
+        key = jax.random.PRNGKey(3)
+        r = {"w": jnp.ones(8)}
+        g = {"w": jax.random.normal(key, (8,)) - 1.0}  # misaligned
+        lam_fresh = drag.degree_of_divergence(g, r, 0.5, 1.0)
+        lam_stale = drag.degree_of_divergence(g, r, 0.5, 0.25)
+        assert float(lam_stale) < float(lam_fresh)
+
+    def test_br_drag_norm_clamp_survives_discount(self):
+        """BR-DRAG's ||v|| <= ||r|| bound (Appendix B) holds for any
+        phi in (0, 1]: lam stays in [0, 2c] and the clamp is by scale."""
+        key = jax.random.PRNGKey(4)
+        r = {"w": jax.random.normal(key, (16,))}
+        ups = {"w": 100.0 * jax.random.normal(jax.random.fold_in(key, 1), (5, 16))}
+        disc = jnp.asarray([1.0, 0.5, 0.25, 0.125, 1.0])
+        _, lams = stale.br_drag_aggregate(ups, r, 0.5, disc)
+        vs = jax.vmap(lambda g, lam: pt.tree_norm(br_drag.calibrate(g, r, lam)))(ups, lams)
+        rn = float(pt.tree_norm(r))
+        assert np.all(np.asarray(vs) <= rn * (1.0 + 1e-5))
+
+
+# ---------------------------------------------------------- flush registry
+def test_flush_through_every_nonreference_rule():
+    """The buffer flushes through ANY rule in aggregators.AGGREGATORS."""
+    key = jax.random.PRNGKey(0)
+    p = {"w": jnp.zeros((4, 2))}
+    rules = sorted(set(aggregators.AGGREGATORS) - aggregators.NEEDS_REFERENCE)
+    for rule in rules:
+        cfg = StreamConfig(algorithm=rule, buffer_capacity=6, n_byzantine_hint=1)
+        buf = buf_mod.init_buffer(p, 6)
+        for i in range(6):
+            g = {"w": jax.random.normal(jax.random.fold_in(key, i), (4, 2))}
+            buf = buf_mod.ingest(buf, g, i, False)
+        params, _, rnd, buf2, metrics = flush(
+            None, cfg, p, drag.init_state(p), jnp.int32(6), buf, key
+        )
+        assert int(rnd) == 7 and int(buf2.count) == 0
+        assert np.isfinite(float(metrics["delta_norm"])), rule
+        assert float(pt.tree_norm(params)) > 0.0, rule
+    # client-variant algorithms must be rejected, not silently run as
+    # fedavg (stream clients are plain SGD)
+    buf = buf_mod.init_buffer(p, 2)
+    buf = buf_mod.ingest(buf, p, 0, False)
+    buf = buf_mod.ingest(buf, p, 0, False)
+    for alg in ("fedprox", "scaffold", "fedacg"):
+        with pytest.raises(ValueError, match="client-variant"):
+            flush(None, StreamConfig(algorithm=alg), p, drag.init_state(p),
+                  jnp.int32(0), buf, key)
+    # drag flushes too (reference maintained internally)
+    cfg = StreamConfig(algorithm="drag", buffer_capacity=6)
+    buf = buf_mod.init_buffer(p, 6)
+    for i in range(6):
+        buf = buf_mod.ingest(buf, {"w": jnp.ones((4, 2))}, i, False)
+    params, dstate, _, _, metrics = flush(
+        None, cfg, p, drag.init_state(p), jnp.int32(0), buf, key
+    )
+    assert bool(dstate.initialized) and float(metrics["delta_norm"]) > 0.0
+
+
+# ------------------------------------------------------- bridge equivalence
+def _mlp_setup(n_workers=12, mal=0.0, attack="none"):
+    from repro.data.pipeline import build_federated_data
+    from repro.models import cnn
+
+    data = build_federated_data(
+        "emnist", n_workers, 0.3, malicious_fraction=mal, attack=attack, seed=0
+    )
+    init_fn, apply_fn = cnn.MODELS["mlp"]
+    in_dim = int(np.prod(data.x.shape[1:]))
+    params = init_fn(jax.random.PRNGKey(0), in_dim, 64, data.n_classes)
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(apply_fn, p, b)
+
+    return data, params, loss_fn
+
+
+class TestBridgeEquivalence:
+    @pytest.mark.parametrize("alg", ["fedavg", "drag", "br_drag"])
+    def test_bit_for_bit_vs_federated_round(self, alg):
+        """ISSUE acceptance: capacity-S, zero-latency, phi=none stream ==
+        synchronous federated_round, exactly, over a 3-round trajectory."""
+        from repro.fl import bridge
+        from repro.fl.round import RoundConfig, federated_round, init_server_state
+
+        data, params, loss_fn = _mlp_setup()
+        with_root = alg == "br_drag"
+        cfg = RoundConfig(algorithm=alg, local_steps=2, lr=0.05)
+        s_sync = init_server_state(params, 12)
+        s_str = init_server_state(params, 12)
+        rng = np.random.RandomState(1)
+        k = jax.random.PRNGKey(7)
+        for _ in range(3):
+            sel = rng.choice(12, size=5, replace=False)
+            bn = data.sample_round(rng, sel, 2, 4)
+            batches = {"x": jnp.asarray(bn["x"]), "y": jnp.asarray(bn["y"])}
+            mask = jnp.asarray(data.malicious[sel])
+            k, kr = jax.random.split(k)
+            root = None
+            if with_root:
+                rn = data.root_batches(rng, 2, 4, 500)
+                root = {"x": jnp.asarray(rn["x"]), "y": jnp.asarray(rn["y"])}
+            args = [batches, jnp.asarray(sel, jnp.int32), mask, kr]
+            s_sync, _ = federated_round(loss_fn, s_sync, cfg, *args, root_batches=root)
+            s_str, _ = bridge.streamed_round(
+                loss_fn, s_str, cfg, *args, root_batches=root, jit_client=False
+            )
+            for a, b in zip(jax.tree.leaves(s_sync.params), jax.tree.leaves(s_str.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree.leaves(s_sync.drag.reference),
+                jax.tree.leaves(s_str.drag.reference),
+            ):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(s_str.round) == 3
+
+    def test_state_conversion_roundtrip(self):
+        from repro.fl import bridge
+        from repro.fl.round import init_server_state
+
+        _, params, _ = _mlp_setup()
+        s = init_server_state(params, 12)
+        st = bridge.to_stream_state(s, capacity=5)
+        back = bridge.to_sync_state(st, n_workers=12)
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(s.params)[0]),
+            np.asarray(jax.tree.leaves(back.params)[0]),
+        )
+        assert int(back.round) == 0
+
+    def test_client_variant_algorithms_rejected(self):
+        from repro.fl import bridge
+        from repro.fl.round import RoundConfig
+
+        with pytest.raises(ValueError):
+            bridge.stream_config_from_round(RoundConfig(algorithm="scaffold"), 4)
+
+
+# ------------------------------------------------------------ async server
+class TestAsyncServer:
+    def test_flush_threshold_and_reset(self):
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+        p = {"w": jnp.zeros((3, 1))}
+        cfg = StreamConfig(algorithm="fedavg", buffer_capacity=3, local_steps=2, lr=0.1)
+        server = AsyncStreamServer(loss_fn, p, cfg)
+        key = jax.random.PRNGKey(0)
+        batch = {
+            "x": jax.random.normal(key, (2, 4, 3)),
+            "y": jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 1)),
+        }
+        for i in range(2):
+            g = server.client_update(server.params, batch)
+            server.ingest(g, 0, False)
+            assert server.flush_if_ready(key) is None  # below threshold
+        g = server.client_update(server.params, batch)
+        server.ingest(g, 0, False)
+        metrics = server.flush_if_ready(key)
+        assert metrics is not None and server.t == 1
+        assert int(server.state.round) == 1
+        assert int(server.state.buffer.count) == 0
+        assert float(metrics["staleness_mean"]) == 0.0
+
+    def test_run_stream_experiment_drag_poly(self):
+        exp = StreamExperimentConfig(
+            n_workers=10, concurrency=8, flushes=6, buffer_capacity=4,
+            latency="exponential", local_steps=2, batch_size=4,
+            algorithm="drag", discount="poly", eval_every=3, seed=0,
+        )
+        h = run_stream_experiment(exp)
+        assert h["flush"] and h["flush"][-1] == 6
+        assert np.isfinite(h["final_accuracy"])
+        assert all(s >= 0.0 for s in h["staleness_mean"])
+        assert h["updates_total"] >= 6 * 4
+        assert h["virtual_time"][-1] > 0.0
+
+    def test_async_br_drag_under_attack(self):
+        """All attack scenarios run asynchronously: BR-DRAG + sign flip."""
+        exp = StreamExperimentConfig(
+            n_workers=10, concurrency=8, flushes=6, buffer_capacity=4,
+            latency="uniform", local_steps=2, batch_size=4,
+            algorithm="br_drag", attack="sign_flipping", malicious_fraction=0.4,
+            discount="exp", eval_every=6, root_samples=300, seed=1,
+        )
+        h = run_stream_experiment(exp)
+        assert np.isfinite(h["final_accuracy"])
+        assert h["final_accuracy"] > 0.0
+
+    def test_stale_dispatch_tags_propagate(self):
+        """With heavy latency spread, flushed buffers contain genuinely
+        stale updates (tau > 0 shows up in the metrics)."""
+        exp = StreamExperimentConfig(
+            n_workers=10, concurrency=12, flushes=8, buffer_capacity=3,
+            latency="straggler", local_steps=1, batch_size=4,
+            algorithm="fedavg", eval_every=1, seed=2,
+        )
+        h = run_stream_experiment(exp)
+        assert max(h["staleness_mean"]) > 0.0
