@@ -1,0 +1,182 @@
+"""Scenario-matrix robustness benchmark: attack x aggregator x
+heterogeneity, sync AND async, -> ``BENCH_robustness.json``.
+
+Each synchronous cell runs the synthetic least-squares federation from
+``repro.adversary.scenarios`` (40% byzantine unless the attack is
+``none``) over several seeds and records the mean final loss plus the
+break rate (fraction of seeds whose final loss left the attack-free
+envelope).  The async cells drive the two stream-native attacks
+(``buffer_flood``, ``staleness_camouflage``) through the real
+``repro.stream`` engine.
+
+The headline acceptance invariant — checked and recorded under
+``acceptance`` in the JSON — is that trust-weighted BR-DRAG
+(``br_drag_trust``) beats plain FedAvg on final loss in EVERY byzantine
+cell of the matrix.
+
+    PYTHONPATH=src python benchmarks/robustness_bench.py [--smoke] [--out F]
+
+``--smoke`` cuts the grid to a representative slice (the CI weekly job);
+the full matrix adds heterogeneity levels, seeds, and rounds.  CSV rows
+(``benchmarks.common.emit``) ride along for the harness.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/robustness_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.adversary.scenarios import (
+    Scenario,
+    run_cell,
+    run_scenario,
+    run_stream_scenario,
+)
+
+#: (name, attack_kw) — ipm at eps=2 is the aggregate-reversing variant
+#: (Xie et al.), the one that actually diverges a mean reducer; the
+#: schedule cell switches sign flipping -> ALIE mid-run.
+ATTACKS = [
+    ("sign_flipping", ()),
+    ("noise_injection", ()),
+    ("alie", ()),
+    ("ipm", (("eps", 2.0),)),
+    ("min_max", ()),
+    ("mimic", ()),
+    ("schedule", (("phases", ((0, "sign_flipping"), (20, "alie"))),)),
+]
+
+AGGREGATORS_SMOKE = ["fedavg", "median", "krum", "drag", "br_drag", "br_drag_trust"]
+AGGREGATORS_FULL = AGGREGATORS_SMOKE + ["trimmed_mean", "geomed"]
+
+ASYNC_ATTACKS = ["buffer_flood", "staleness_camouflage"]
+ASYNC_AGGREGATORS = ["fedavg", "br_drag", "br_drag_trust"]
+
+BREAK_FACTOR = 5.0
+
+
+def sync_matrix(smoke: bool) -> list[dict]:
+    hets = [0.5, 1.5] if smoke else [0.3, 1.0, 3.0]
+    seeds = (0, 1) if smoke else (0, 1, 2, 3, 4)
+    rounds = 40 if smoke else 80
+    aggs = AGGREGATORS_SMOKE if smoke else AGGREGATORS_FULL
+    cells = []
+    for h in hets:
+        for agg in aggs:
+            proto = Scenario(aggregator=agg, heterogeneity=h, rounds=rounds)
+            # one attack-free baseline per (aggregator, heterogeneity, seed)
+            baselines = {
+                seed: run_scenario(
+                    dataclasses.replace(proto, attack="none", seed=seed)
+                )["final_loss"]
+                for seed in seeds
+            }
+            cells.append({
+                "aggregator": agg, "attack": "none", "heterogeneity": h,
+                "malicious_fraction": 0.0,
+                "final_loss": sum(baselines.values()) / len(baselines),
+                "final_loss_per_seed": [baselines[s] for s in seeds],
+                "break_rate": 0.0, "seeds": len(seeds),
+            })
+            for attack, kw in ATTACKS:
+                sc = dataclasses.replace(proto, attack=attack, attack_kw=kw)
+                cell = run_cell(sc, BREAK_FACTOR, seeds, baselines=baselines)
+                cells.append(cell)
+                emit(
+                    f"robustness/{attack}/{agg}/h{h}",
+                    0.0,
+                    f"loss={cell['final_loss']:.4g},break={cell['break_rate']:.2f}",
+                )
+    return cells
+
+
+def async_matrix(smoke: bool) -> list[dict]:
+    seeds = (0,) if smoke else (0, 1, 2)
+    flushes = 30 if smoke else 60
+    cells = []
+    for attack in ASYNC_ATTACKS:
+        for agg in ASYNC_AGGREGATORS:
+            finals = []
+            for seed in seeds:
+                sc = Scenario(aggregator=agg, attack=attack, seed=seed)
+                finals.append(run_stream_scenario(sc, flushes=flushes)["final_loss"])
+            cell = {
+                "aggregator": agg, "attack": attack, "regime": "async",
+                "heterogeneity": 1.0, "malicious_fraction": 0.4,
+                "final_loss": sum(finals) / len(finals),
+                "final_loss_per_seed": finals, "seeds": len(seeds),
+            }
+            cells.append(cell)
+            emit(f"robustness/async/{attack}/{agg}", 0.0, f"loss={cell['final_loss']:.4g}")
+    return cells
+
+
+def check_acceptance(cells: list[dict], async_cells: list[dict]) -> dict:
+    """br_drag_trust < fedavg on final loss in every byzantine cell."""
+    def by(cs, agg):
+        return {
+            (c["attack"], c["heterogeneity"]): c["final_loss"]
+            for c in cs if c["aggregator"] == agg and c["attack"] != "none"
+        }
+
+    failures = []
+    for cs in (cells, async_cells):
+        trust, fedavg = by(cs, "br_drag_trust"), by(cs, "fedavg")
+        for k in fedavg:
+            if k in trust and not trust[k] < fedavg[k]:
+                failures.append({"cell": list(k), "br_drag_trust": trust[k], "fedavg": fedavg[k]})
+    return {"br_drag_trust_beats_fedavg": not failures, "failures": failures}
+
+
+def run_matrix(smoke: bool, out: str) -> dict:
+    t0 = time.time()
+    cells = sync_matrix(smoke)
+    async_cells = async_matrix(smoke)
+    acceptance = check_acceptance(cells, async_cells)
+    record = {
+        "meta": {
+            "smoke": smoke,
+            "break_factor": BREAK_FACTOR,
+            "attacks": [a for a, _ in ATTACKS] + ASYNC_ATTACKS,
+            "aggregators": sorted({c["aggregator"] for c in cells}),
+            "wall_s": time.time() - t0,
+        },
+        "cells": cells,
+        "async_cells": async_cells,
+        "acceptance": acceptance,
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    n = len(cells) + len(async_cells)
+    print(f"wrote {out}: {n} cells, acceptance={acceptance['br_drag_trust_beats_fedavg']}",
+          flush=True)
+    if not acceptance["br_drag_trust_beats_fedavg"]:
+        raise SystemExit(f"acceptance violated: {acceptance['failures']}")
+    return record
+
+
+def run() -> None:
+    """benchmarks.run entry point: REPRO_BENCH_FAST=1 maps to --smoke."""
+    from benchmarks.common import FAST
+
+    run_matrix(FAST, "BENCH_robustness.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="representative slice (weekly CI job)")
+    ap.add_argument("--out", default="BENCH_robustness.json")
+    args = ap.parse_args()
+    run_matrix(args.smoke, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ def main() -> None:
         fig7_8_hparams,
         fig9_17_byzantine,
         kernels_bench,
+        robustness_bench,
         roofline,
         stream_bench,
     )
@@ -48,6 +49,7 @@ def main() -> None:
         "kernels": kernels_bench,
         "roofline": roofline,
         "stream": stream_bench,
+        "robustness": robustness_bench,
     }
     selected = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

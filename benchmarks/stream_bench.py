@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import FAST, emit
 from repro.core import drag
 from repro.stream import buffer as buf_mod
-from repro.stream.server import StreamConfig, flush, make_flush_fn
+from repro.stream.server import StreamConfig, flush, make_flush_fn, make_root_fn
 
 CAPACITY = 16 if FAST else 64
 DIM = 1 << 14 if FAST else 1 << 18
@@ -87,6 +87,7 @@ def bench_flush(iters: int = 20) -> dict:
             return jnp.mean((params["w"] - batch["x"]) ** 2)
 
         fn = make_flush_fn(loss_fn, cfg, with_root)
+        root_fn = make_root_fn(loss_fn, cfg) if with_root else None
         buf = buf_mod.init_buffer(p, CAPACITY)
         ingest = buf_mod.make_ingest_fn()
         for i in range(CAPACITY):
@@ -97,16 +98,18 @@ def bench_flush(iters: int = 20) -> dict:
         root = {"x": jnp.zeros((2, 4, DIM), jnp.float32)} if with_root else None
 
         def call(params, dstate, rnd, buf):
-            args = [params, dstate, rnd, buf, key]
+            args = [params, dstate, rnd, buf, key, (), ()]
             if with_root:
-                args.append(root)
+                # the flush benchmark times the flush itself; r^t comes
+                # precomputed, as the server's RootReferenceCache serves it
+                args.append(root_fn(params, root))
             return fn(*args)
 
-        params, dstate, rnd, buf, m = call(params, dstate, rnd, buf)  # warmup/compile
+        params, dstate, rnd, buf, _, _, m = call(params, dstate, rnd, buf)  # warmup
         jax.block_until_ready(params)
         t0 = time.time()
         for _ in range(iters):
-            params, dstate, rnd, buf, m = call(params, dstate, rnd, buf)
+            params, dstate, rnd, buf, _, _, m = call(params, dstate, rnd, buf)
         jax.block_until_ready(params)
         sec = (time.time() - t0) / iters
         out[rule] = {

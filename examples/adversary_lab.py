@@ -1,0 +1,71 @@
+"""Adversary lab tour: adaptive attacks vs. divergence-history trust.
+
+Three acts on the synthetic least-squares federation (fast enough to
+watch live):
+
+  1. a sync attack x aggregator slice — watch FedAvg break while
+     trust-weighted BR-DRAG holds;
+  2. an attack SCHEDULE (sign flipping that switches to ALIE mid-run)
+     against the same defenses;
+  3. the async-native attacks (buffer_flood, staleness_camouflage)
+     through the real event-driven stream engine.
+
+    PYTHONPATH=src python examples/adversary_lab.py [--rounds 40]
+"""
+import argparse
+
+from repro.adversary.scenarios import Scenario, run_scenario, run_stream_scenario
+
+
+def bar(loss: float, floor: float = 1e-4, span: float = 8.0) -> str:
+    import math
+
+    if not math.isfinite(loss):
+        return "#" * 40 + " (diverged)"
+    n = int(40 * min(max(math.log10(loss / floor), 0.0), span) / span)
+    return "#" * n
+
+
+def act1(rounds: int) -> None:
+    print("\n=== act 1: adaptive attacks, 40% byzantine ===")
+    attacks = [("alie", ()), ("ipm", (("eps", 2.0),)), ("min_max", ()), ("mimic", ())]
+    for attack, kw in attacks:
+        print(f"\n  attack: {attack}")
+        for agg in ("fedavg", "median", "br_drag_trust"):
+            r = run_scenario(Scenario(
+                aggregator=agg, attack=attack, attack_kw=kw, rounds=rounds,
+            ))
+            print(f"    {agg:14s} final_loss={r['final_loss']:10.4g} {bar(r['final_loss'])}")
+
+
+def act2(rounds: int) -> None:
+    print("\n=== act 2: attack schedule (sign_flipping -> alie at t=%d) ===" % (rounds // 2))
+    kw = (("phases", ((0, "sign_flipping"), (rounds // 2, "alie"))),)
+    for agg in ("fedavg", "br_drag_trust"):
+        r = run_scenario(Scenario(
+            aggregator=agg, attack="schedule", attack_kw=kw, rounds=rounds,
+        ))
+        print(f"    {agg:14s} final_loss={r['final_loss']:10.4g} {bar(r['final_loss'])}")
+
+
+def act3() -> None:
+    print("\n=== act 3: async-native attacks through the stream engine ===")
+    for attack in ("buffer_flood", "staleness_camouflage"):
+        print(f"\n  attack: {attack}")
+        for agg in ("fedavg", "br_drag_trust"):
+            r = run_stream_scenario(Scenario(aggregator=agg, attack=attack))
+            print(f"    {agg:14s} final_loss={r['final_loss']:10.4g} {bar(r['final_loss'])}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    args = ap.parse_args()
+    act1(args.rounds)
+    act2(args.rounds)
+    act3()
+    print("\nfull matrix: PYTHONPATH=src python benchmarks/robustness_bench.py --smoke")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@ Learning" (DRAG / BR-DRAG).
 
 Layers:
   repro.core       DRAG / BR-DRAG + baseline aggregators + attack models
+  repro.adversary  stateful adaptive-attack engine + scenario lab
+  repro.trust      divergence-history reputation + quarantine
   repro.models     10 assigned architectures (dense/MoE/SSM/hybrid/audio/VLM)
   repro.fl         federated runtime (simulation regime)
   repro.launch     production regime: meshes, FL round step, dry-run, serve

@@ -1,0 +1,65 @@
+"""Adversary lab: stateful Byzantine attack engine for the robustness
+benchmarks (``benchmarks/robustness_bench.py``) and both serving
+regimes (``repro.fl.round`` sync, ``repro.stream.server`` async).
+
+README — attack registry
+========================
+
+Resolved by name from ``RoundConfig.attack`` / ``StreamConfig.attack``
+via :func:`repro.adversary.engine.resolve`; ``attack_kw`` supplies the
+keyword arguments.  S = stateful (cross-round memory), A = shapes
+arrival times (async engine only).
+
+======================  ====  =================================================
+name                    kind  behaviour
+======================  ====  =================================================
+none                    --    benign passthrough
+noise_injection         --    g_m <- p_m g_m, p_m ~ N(0, std) (paper [23])
+sign_flipping           --    g_m <- -scale * g_m (paper [24])
+label_flipping          --    data-space: l -> L - l - 1 in the sample
+                              pipeline (paper [25]); update passthrough
+gaussian                --    replace g_m with pure noise
+alie                    --    A-Little-Is-Enough: mean - z*std of benign
+                              stack (Baruch et al. 2019)
+ipm                     --    inner-product manipulation: -eps * benign
+                              mean (Xie et al. 2020)
+min_max                 --    optimal-gamma min-max distance attack
+                              (Shejwalkar & Houmansadr 2021), closed form
+mimic                   S     colluders replay one persistent benign
+                              victim (Karimireddy et al. 2022)
+schedule                S     combinator: switch attacks at round
+                              thresholds, phases=((t0, name[, kw]), ...)
+ramp                    S*    combinator: fade ``inner`` in linearly over
+                              ``rounds`` rounds (* state iff inner has it)
+buffer_flood            A     byzantine clients get hash-biased fast
+                              arrivals and crowd the ingest buffer;
+                              payload from ``inner`` (default ipm)
+staleness_camouflage    A     hold poisoned uploads until stale so
+                              phi(tau) mutes the DoD calibration;
+                              payload from ``inner`` (default
+                              sign_flipping).  Countered by the
+                              divergence-history trust layer
+                              (``repro.trust``), which accumulates the
+                              undiscounted divergence.
+======================  ====  =================================================
+
+Layout: ``engine`` (protocol, context, registry, combinators),
+``attacks`` (adaptive update-space crafts), ``stream_attacks``
+(async-native arrival shaping), ``scenarios`` (the synthetic
+least-squares scenario matrix shared by the robustness benchmark and
+the break-rate invariant tests).
+"""
+from repro.adversary.engine import (  # noqa: F401
+    ADVERSARIES,
+    Adversary,
+    AttackContext,
+    Ramp,
+    Schedule,
+    Stateless,
+    names,
+    register,
+    resolve,
+)
+from repro.adversary import attacks as _attacks  # noqa: F401  (registers)
+from repro.adversary import stream_attacks as _stream_attacks  # noqa: F401
+from repro.adversary.stream_attacks import BiasedLatency  # noqa: F401

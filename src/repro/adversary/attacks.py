@@ -1,0 +1,131 @@
+"""Adaptive update-space attacks (omniscient threat model).
+
+These go beyond the paper's three static attacks: each one *optimises*
+its crafted upload against the honest stack it can see.
+
+  * ``min_max`` [Shejwalkar & Houmansadr, NDSS 2021]: push the shared
+    malicious upload as far as possible along a perturbation direction
+    while staying within the maximum pairwise distance of the benign
+    set — by construction inside the acceptance region of
+    distance-based defenses (Krum / Multi-Krum / Bulyan).  The optimal
+    step gamma has a closed form here (the constraint is quadratic in
+    gamma), so the attack is a handful of jittable reductions rather
+    than the paper's bisection loop.
+  * ``mimic`` [Karimireddy et al., ICLR 2022]: all colluders replay one
+    *benign* victim's upload.  Every individual upload is genuine, so
+    per-update tests cannot flag it; the damage is the silent
+    over-weighting of one client's data distribution under
+    heterogeneity.  Stateful: the victim (the benign client whose
+    update deviates most from the benign mean, i.e. the most skewed
+    distribution) is chosen on the first crafted round and then kept
+    for the whole run — consistency is what makes mimicry potent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.adversary import engine
+from repro.core import pytree as pt
+
+_EPS = 1e-12
+
+
+def _flatten_stack(updates_stacked):
+    flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)  # [S, d] f32
+    template = pt.tree_index(updates_stacked, 0)
+    return flat, template
+
+
+def _unflatten_rows(rows, template, updates_stacked):
+    tree_rows = jax.vmap(lambda v: pt.tree_unflatten_vector(v, template))(rows)
+    # preserve original leaf dtypes (tree_unflatten_vector already casts)
+    return jax.tree.map(lambda crafted, x: crafted.astype(x.dtype), tree_rows, updates_stacked)
+
+
+def min_max(key, updates_stacked, malicious_mask, boost: float = 1.0):
+    """Min-max distance attack: crafted = mu + gamma * p with the largest
+    gamma keeping max_j ||crafted - g_j|| <= max_{i,j} ||g_i - g_j|| over
+    benign i, j.  ``p`` is the unit vector opposing the benign mean (the
+    most damaging of the standard perturbation choices); ``boost``
+    scales the optimal gamma (boost > 1 trades stealth for damage)."""
+    del key
+    flat, template = _flatten_stack(updates_stacked)
+    benign = (~malicious_mask).astype(jnp.float32)  # [S]
+    has_benign = jnp.sum(benign) > 0
+    nb = jnp.maximum(jnp.sum(benign), 1.0)
+    mu = jnp.sum(flat * benign[:, None], axis=0) / nb  # [d]
+    p = -mu / (jnp.linalg.norm(mu) + _EPS)  # unit perturbation
+
+    # max pairwise benign distance D, via the Gram matrix — O(S d + S^2),
+    # never the [S, S, d] difference tensor (4 GB at S=64, d=2^18)
+    sq = jnp.sum(flat * flat, axis=-1)  # [S]
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T), 0.0)
+    pair_ok = benign[:, None] * benign[None, :]
+    d2_max = jnp.max(jnp.where(pair_ok > 0, d2, -jnp.inf))
+    d2_max = jnp.maximum(d2_max, 0.0)  # single-benign edge case
+
+    # For each benign j: ||(mu - g_j) + gamma p||^2 <= D^2, ||p|| = 1
+    # => gamma^2 + 2 b_j gamma + (||d_j||^2 - D^2) <= 0,  b_j = <d_j, p>
+    # => gamma <= -b_j + sqrt(b_j^2 - ||d_j||^2 + D^2)  (positive root)
+    dj = mu[None, :] - flat  # [S, d]
+    bj = jnp.sum(dj * p[None, :], axis=-1)  # [S]
+    dj2 = jnp.sum(dj * dj, axis=-1)
+    disc = jnp.maximum(bj * bj - dj2 + d2_max, 0.0)
+    gamma_j = -bj + jnp.sqrt(disc)
+    gamma = jnp.min(jnp.where(benign > 0, gamma_j, jnp.inf))
+    # no benign uploads -> nothing to calibrate against: gamma would be
+    # min over the empty set (inf, and inf * p = NaN); degrade to mu
+    gamma = jnp.where(has_benign, jnp.maximum(gamma, 0.0), 0.0) * boost
+
+    crafted = mu + gamma * p  # [d]
+    rows = jnp.where(malicious_mask[:, None], crafted[None, :], flat)
+    return _unflatten_rows(rows, template, updates_stacked)
+
+
+class MinMax(engine.Adversary):
+    name = "min_max"
+
+    def __init__(self, boost: float = 1.0):
+        self.boost = boost
+
+    def craft(self, state, ctx):
+        return min_max(ctx.key, ctx.updates, ctx.malicious_mask, self.boost), state
+
+
+class Mimic(engine.Adversary):
+    """Colluding mimicry with a persistent victim (see module docstring).
+
+    State: ``victim`` (int32 stack position) and ``chosen`` (bool).  The
+    victim is a *position* in the stacked upload, so the attack assumes a
+    stable client -> slot mapping (full participation, or the async
+    buffer's slot order); under uniform re-sampling it degrades to
+    per-round mimicry, which is the attack's stateless variant.
+    """
+
+    name = "mimic"
+
+    def init(self):
+        return {
+            "victim": jnp.zeros((), jnp.int32),
+            "chosen": jnp.zeros((), bool),
+        }
+
+    def craft(self, state, ctx):
+        flat, template = _flatten_stack(ctx.updates)
+        benign = (~ctx.malicious_mask).astype(jnp.float32)
+        nb = jnp.maximum(jnp.sum(benign), 1.0)
+        mu = jnp.sum(flat * benign[:, None], axis=0) / nb
+        dev = jnp.linalg.norm(flat - mu[None, :], axis=-1)
+        candidate = jnp.argmax(jnp.where(benign > 0, dev, -jnp.inf)).astype(jnp.int32)
+        victim = jnp.where(state["chosen"], state["victim"], candidate)
+        # victim beyond the current stack (smaller buffer): fall back to
+        # the fresh candidate rather than reading out of bounds
+        victim = jnp.where(victim < flat.shape[0], victim, candidate)
+        rows = jnp.where(ctx.malicious_mask[:, None], flat[victim][None, :], flat)
+        out = _unflatten_rows(rows, template, ctx.updates)
+        return out, {"victim": victim, "chosen": jnp.ones((), bool)}
+
+
+engine.register("min_max", lambda boost=1.0, **kw: MinMax(boost))
+engine.register("mimic", lambda **kw: Mimic())

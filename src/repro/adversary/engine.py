@@ -1,0 +1,247 @@
+"""Stateful adversary engine.
+
+The one-shot ``core.attacks.apply_update_attack`` call assumed a
+memoryless attacker: the same transform of the stacked uploads every
+round.  Real adaptive adversaries *remember* — they pick a victim once
+and mimic it forever, ramp intensity, or switch strategies mid-run.
+This module gives them a protocol:
+
+  * an :class:`Adversary` is a config-only (hashable, trace-safe) object
+    whose mutable memory lives in a jax pytree threaded through the
+    jitted round/flush step (``init`` -> ``craft(state, ctx) ->
+    (attacked, state')``), so stateful attacks compose with jit, scan,
+    and donation exactly like server state does;
+  * the :class:`AttackContext` gives the attacker the paper's strongest
+    threat model: the omniscient stack of honest uploads, the malicious
+    mask, the server round, and (async) the per-slot staleness tags and
+    phi(tau) discounts it can try to hide behind;
+  * a registry (:data:`ADVERSARIES`) resolves attack names from
+    ``RoundConfig.attack`` / ``StreamConfig.attack``; every legacy
+    ``core.attacks`` entry is wrapped as a stateless registry entry, so
+    existing configs behave bit-for-bit as before;
+  * combinators: :class:`Schedule` switches attacks at round thresholds
+    and :class:`Ramp` fades an attack in over the first N rounds —
+    attack *programs*, not just attack functions.
+
+Host-side arrival shaping (the async-native attacks) rides on the same
+object via :meth:`Adversary.latency_bias`; see
+``repro.adversary.stream_attacks``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import attacks as core_attacks
+from repro.core import pytree as pt
+
+
+class AttackContext(NamedTuple):
+    """Everything the (omniscient) adversary sees when crafting uploads.
+
+    ``updates`` is the honest stacked ``[S, ...]`` pytree *before* any
+    tampering; ``taus``/``discounts`` are the async staleness tags and
+    phi(tau) factors of the buffered slots (None in the synchronous
+    round).  ``round`` is the server version t as an int32 scalar.
+    """
+
+    key: object
+    updates: pt.Pytree
+    malicious_mask: object  # [S] bool
+    round: object  # [] int32
+    taus: object = None  # [S] int32 | None
+    discounts: object = None  # [S] float32 | None
+
+
+class Adversary:
+    """Base adversary: benign (no-op) in both update and arrival space.
+
+    Subclasses hold *configuration only* — all mutable memory goes in
+    the state pytree so ``craft`` stays jit/scan-compatible.  Instances
+    are resolved from static config at trace time, so two resolutions of
+    the same (name, kwargs) must behave identically.
+    """
+
+    name = "none"
+
+    def init(self) -> pt.Pytree:
+        """Initial adversary memory (a pytree of jax arrays; () if none)."""
+        return ()
+
+    def craft(self, state: pt.Pytree, ctx: AttackContext):
+        """Returns (attacked_updates_stacked, new_state)."""
+        return ctx.updates, state
+
+    def latency_bias(self, client_id: int, is_malicious: bool) -> float:
+        """Host-side arrival-time multiplier for the event stream (<1 =
+        arrive faster, >1 = hold the upload).  1.0 = no shaping."""
+        del client_id, is_malicious
+        return 1.0
+
+
+class Stateless(Adversary):
+    """Wraps a ``core.attacks``-signature function ``fn(key, updates,
+    mask, **kw)`` as a registry entry.  Zero state; bit-for-bit the old
+    ``apply_update_attack`` behaviour."""
+
+    def __init__(self, fn: Callable, name: str, **kw):
+        self.fn = fn
+        self.name = name
+        self.kw = kw
+
+    def craft(self, state, ctx):
+        return self.fn(ctx.key, ctx.updates, ctx.malicious_mask, **self.kw), state
+
+
+class Passthrough(Adversary):
+    """Data-space attacks (label flipping) poison the sample stream in
+    ``repro.data.pipeline``; the uploads already reflect the poison."""
+
+    def __init__(self, name: str = "label_flipping"):
+        self.name = name
+
+
+class Schedule(Adversary):
+    """Attack switcher: ``phases = ((start_round, name[, kw]), ...)``.
+
+    The phase whose ``start_round`` is the largest one <= t is active;
+    rounds before the first phase are benign.  Sub-adversary memories are
+    carried as a tuple, and only the active branch executes
+    (``lax.switch``), so a schedule of stateful attacks keeps each
+    phase's memory intact across switches.
+    """
+
+    name = "schedule"
+
+    def __init__(self, phases):
+        if not phases:
+            raise ValueError("schedule needs at least one (start_round, name) phase")
+        spec = []
+        for p in phases:
+            start, sub_name = p[0], p[1]
+            kw = dict(p[2]) if len(p) > 2 else {}
+            spec.append((int(start), resolve(sub_name, kw)))
+        spec.sort(key=lambda sa: sa[0])
+        self.starts = tuple(s for s, _ in spec)
+        self.subs = tuple(a for _, a in spec)
+
+    def init(self):
+        return tuple(a.init() for a in self.subs)
+
+    def craft(self, state, ctx):
+        # number of phase starts <= t, minus 1; -1 (pre-first-phase) is
+        # mapped onto a benign branch at index 0 by shifting everything.
+        t = jnp.asarray(ctx.round, jnp.int32)
+        starts = jnp.asarray(self.starts, jnp.int32)
+        phase = jnp.sum((t >= starts).astype(jnp.int32)) - 1
+
+        def benign(operand):
+            st, c = operand
+            return c.updates, st
+
+        def make_branch(i):
+            def branch(operand):
+                st, c = operand
+                out, sub_new = self.subs[i].craft(st[i], c)
+                return out, tuple(
+                    sub_new if j == i else st[j] for j in range(len(st))
+                )
+
+            return branch
+
+        branches = [benign] + [make_branch(i) for i in range(len(self.subs))]
+        return lax.switch(phase + 1, branches, (state, ctx))
+
+    def latency_bias(self, client_id, is_malicious):
+        # arrival shaping cannot switch per-round (latency is sampled at
+        # dispatch); use the strongest phase's bias for the whole run.
+        biases = [a.latency_bias(client_id, is_malicious) for a in self.subs]
+        return max(biases, key=lambda b: abs(b - 1.0))
+
+
+class Ramp(Adversary):
+    """Intensity ramp: fades ``inner`` in linearly over ``rounds`` server
+    rounds — g(t) = honest + min(t/rounds, 1) * (crafted - honest).
+    Models an attacker that warms up below detection thresholds."""
+
+    name = "ramp"
+
+    def __init__(self, inner: Adversary, rounds: int = 10):
+        self.inner = inner
+        self.rounds = max(int(rounds), 1)
+
+    def init(self):
+        return self.inner.init()
+
+    def craft(self, state, ctx):
+        crafted, new_state = self.inner.craft(state, ctx)
+        w = jnp.minimum(
+            jnp.asarray(ctx.round, jnp.float32) / float(self.rounds), 1.0
+        )
+        blended = jax_tree_blend(ctx.updates, crafted, w)
+        return blended, new_state
+
+    def latency_bias(self, client_id, is_malicious):
+        return self.inner.latency_bias(client_id, is_malicious)
+
+
+def jax_tree_blend(a: pt.Pytree, b: pt.Pytree, w) -> pt.Pytree:
+    """a + w * (b - a), elementwise over matching pytrees."""
+    return pt.tree_add(a, pt.tree_scale(pt.tree_sub(b, a), w))
+
+
+# ------------------------------------------------------------- registry
+#: name -> factory(**kw) -> Adversary.  Extended by
+#: ``repro.adversary.attacks`` (adaptive update-space attacks) and
+#: ``repro.adversary.stream_attacks`` (async-native arrival shaping) at
+#: import time; ``resolve`` force-loads both.
+ADVERSARIES: dict = {
+    "none": lambda **kw: Adversary(),
+    "label_flipping": lambda **kw: Passthrough(),
+    "noise_injection": lambda **kw: Stateless(
+        core_attacks.noise_injection, "noise_injection", **kw
+    ),
+    "sign_flipping": lambda **kw: Stateless(
+        core_attacks.sign_flipping, "sign_flipping", **kw
+    ),
+    "gaussian": lambda **kw: Stateless(
+        core_attacks.gaussian_replacement, "gaussian", **kw
+    ),
+    "alie": lambda **kw: Stateless(core_attacks.alie, "alie", **kw),
+    "ipm": lambda **kw: Stateless(core_attacks.ipm, "ipm", **kw),
+    "schedule": lambda phases=(), **kw: Schedule(phases),
+    "ramp": lambda inner="sign_flipping", rounds=10, inner_kw=(), **kw: Ramp(
+        resolve(inner, dict(inner_kw)), rounds
+    ),
+}
+
+_EXTENSIONS_LOADED = False
+
+
+def register(name: str, factory: Callable) -> None:
+    ADVERSARIES[name] = factory
+
+
+def _load_extensions() -> None:
+    global _EXTENSIONS_LOADED
+    if _EXTENSIONS_LOADED:
+        return
+    _EXTENSIONS_LOADED = True
+    for mod in ("repro.adversary.attacks", "repro.adversary.stream_attacks"):
+        importlib.import_module(mod)
+
+
+def resolve(name: str, kw: dict | None = None) -> Adversary:
+    """Build the adversary for an attack name + kwargs (both static)."""
+    _load_extensions()
+    if name not in ADVERSARIES:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(ADVERSARIES)}")
+    return ADVERSARIES[name](**(kw or {}))
+
+
+def names() -> list[str]:
+    _load_extensions()
+    return sorted(ADVERSARIES)

@@ -1,0 +1,323 @@
+"""Scenario matrix: the synthetic robustness lab shared by
+``benchmarks/robustness_bench.py`` and the break-rate invariant tests.
+
+A cell of the matrix is (attack x aggregator x heterogeneity) run on a
+synthetic heterogeneous least-squares federation — small enough that a
+full sweep is seconds, structured enough that every paper quantity
+(reference direction, degree of divergence, staleness, trust history)
+is exercised for real:
+
+  * client m holds the quadratic objective F_m(w) = 1/2 ||w - w*_m||^2
+    with local optimum w*_m = w* + h * delta_m (unit-norm delta_m, so
+    ``heterogeneity`` h IS the benign update spread the stealth attacks
+    calibrate against);
+  * an honest local update is U SGD steps on F_m plus gradient noise —
+    closed form g_m = ((1-lr)^U - 1)(w - w*_m) + noise, no autodiff in
+    the inner loop, so a whole trajectory jit-compiles to one scan;
+  * the trusted root objective targets the benign mean optimum (what a
+    clean D_root estimates), giving BR-DRAG its reference r^t;
+  * the adversary engine crafts over the stacked honest updates each
+    round with full omniscience, and the trust layer (optional)
+    accumulates divergence history across rounds.
+
+``final_loss`` is F(w) = 1/2 ||w - mean benign w*_m||^2 — distance to
+the best model for the *honest* population.  ``broke`` means the run
+left the attack-free envelope (final loss > ``break_factor`` x the
+attack-free final loss of the same aggregator, or non-finite): the
+scenario-level definition of "the attack won".
+
+The async variant drives the same objective through the real
+``repro.stream`` engine (event stream, ingest buffer, staleness
+discounts), which is what gives the two async-native attacks their
+attack surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adversary import engine as adversary_engine
+from repro.core import aggregators, br_drag, drag
+from repro.core import pytree as pt
+from repro.trust import reputation as trust_mod
+
+#: aggregators the scenario matrix can sweep; "br_drag_trust" is BR-DRAG
+#: with the divergence-history reputation weighting + quarantine.
+SCENARIO_AGGREGATORS = (
+    "fedavg", "median", "krum", "trimmed_mean", "geomed",
+    "drag", "br_drag", "br_drag_trust",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell's static configuration (hashable — jit-safe)."""
+
+    aggregator: str = "fedavg"
+    attack: str = "none"
+    attack_kw: tuple = ()
+    heterogeneity: float = 1.0  # h — benign optimum spread
+    malicious_fraction: float = 0.4
+    n_clients: int = 20  # M (full participation)
+    dim: int = 32  # d
+    rounds: int = 40  # T
+    local_steps: int = 5  # U
+    lr: float = 0.15
+    noise_std: float = 0.02  # gradient noise per round
+    alpha: float = 0.25  # DRAG EMA
+    c: float = 0.1  # DRAG DoD
+    c_br: float = 0.5  # BR-DRAG DoD
+    root_bias: float = 0.1  # D_root is clean but finite: its optimum sits
+    #                         this far from the true benign mean
+    trust_kw: tuple = ()
+    seed: int = 0
+
+
+def _make_world(sc: Scenario):
+    """Optima, malicious mask, initial model (host-side, deterministic)."""
+    rng = np.random.RandomState(sc.seed)
+    w_star = rng.randn(sc.dim).astype(np.float32)
+    delta = rng.randn(sc.n_clients, sc.dim).astype(np.float32)
+    delta /= np.linalg.norm(delta, axis=1, keepdims=True) + 1e-12
+    optima = w_star[None, :] + sc.heterogeneity * delta  # [M, d]
+    n_mal = int(round(sc.malicious_fraction * sc.n_clients))
+    malicious = np.zeros(sc.n_clients, bool)
+    if n_mal:
+        malicious[rng.choice(sc.n_clients, size=n_mal, replace=False)] = True
+    w0 = w_star + 4.0 * rng.randn(sc.dim).astype(np.float32)  # start far out
+    benign_mean = optima[~malicious].mean(0) if (~malicious).any() else optima.mean(0)
+    root_dir = rng.randn(sc.dim).astype(np.float32)
+    root_dir /= np.linalg.norm(root_dir) + 1e-12
+    root_target = benign_mean + sc.root_bias * root_dir
+    return (
+        jnp.asarray(optima),
+        jnp.asarray(malicious),
+        jnp.asarray(w0),
+        jnp.asarray(benign_mean.astype(np.float32)),
+        jnp.asarray(root_target.astype(np.float32)),
+    )
+
+
+def _honest_updates(w, optima, key, sc: Scenario):
+    """Closed-form U-step local SGD updates + gradient noise, [M, d]."""
+    shrink = (1.0 - sc.lr) ** sc.local_steps - 1.0  # in (-1, 0)
+    noise = sc.noise_std * jax.random.normal(key, optima.shape)
+    return shrink * (w[None, :] - optima) + noise
+
+
+def _root_reference(w, root_target, sc: Scenario):
+    """r^t: the same U-step pass on the clean (but biased-by-finiteness)
+    root objective."""
+    shrink = (1.0 - sc.lr) ** sc.local_steps - 1.0
+    return shrink * (w - root_target)
+
+
+def run_scenario(sc: Scenario) -> dict:
+    """Runs one cell; returns {losses: [T], final_loss, trajectory_max}.
+
+    The full trajectory is one jitted ``lax.scan`` — adversary memory,
+    trust history, and the DRAG reference EMA are all carried as scan
+    state, which is exactly the threading contract of the engine.
+    """
+    optima, malicious, w0, benign_mean, root_target = _make_world(sc)
+    adv = adversary_engine.resolve(sc.attack, dict(sc.attack_kw))
+    use_trust = sc.aggregator == "br_drag_trust"
+    tcfg = trust_mod.TrustConfig(**dict(sc.trust_kw))
+    base_agg = "br_drag" if use_trust else sc.aggregator
+    n_byz = max(int(round(sc.malicious_fraction * sc.n_clients)), 1) if (
+        sc.malicious_fraction > 0
+    ) else 0
+    client_idx = jnp.arange(sc.n_clients, dtype=jnp.int32)
+
+    def loss_of(w):
+        return 0.5 * jnp.sum((w - benign_mean) ** 2)
+
+    def round_step(carry, round_key):
+        w, t, adv_state, trust_state, drag_state = carry
+        k_up, k_att = jax.random.split(round_key)
+        honest = {"w": _honest_updates(w, optima, k_up, sc)}
+
+        ctx = adversary_engine.AttackContext(
+            key=k_att, updates=honest, malicious_mask=malicious, round=t
+        )
+        g, adv_state = adv.craft(adv_state, ctx)
+
+        weights = trust_mod.reputation(trust_state, client_idx, tcfg) if use_trust else None
+
+        if base_agg == "drag":
+            new_w, drag_state, _ = drag.round_step(
+                {"w": w}, drag_state, g, alpha=sc.alpha, c=sc.c, weights=weights
+            )
+            new_w = new_w["w"]
+        elif base_agg == "br_drag":
+            reference = {"w": _root_reference(w, root_target, sc)}
+            new_w, _ = br_drag.round_step(
+                {"w": w}, g, reference, c=sc.c_br, weights=weights
+            )
+            new_w = new_w["w"]
+            if use_trust:
+                div, nr = trust_mod.divergence_signals(g, reference)
+                trust_state = trust_mod.observe(trust_state, client_idx, div, nr, tcfg)
+        else:
+            delta = aggregators.AGGREGATORS[base_agg](
+                g, **aggregators.rule_kwargs(base_agg, n_byzantine=n_byz)
+            )
+            new_w = w + delta["w"]
+
+        new_carry = (new_w, t + 1, adv_state, trust_state, drag_state)
+        return new_carry, loss_of(new_w)
+
+    @partial(jax.jit, static_argnums=())
+    def trajectory(w0):
+        keys = jax.random.split(jax.random.PRNGKey(sc.seed + 101), sc.rounds)
+        carry0 = (
+            w0,
+            jnp.zeros((), jnp.int32),
+            adv.init(),
+            trust_mod.init_trust(sc.n_clients),
+            drag.init_state({"w": w0}),
+        )
+        _, losses = jax.lax.scan(round_step, carry0, keys)
+        return losses
+
+    losses = np.asarray(trajectory(w0))
+    return {
+        "losses": losses,
+        "final_loss": float(losses[-1]),
+        "trajectory_max": float(np.max(losses)),
+        "initial_loss": float(0.5 * np.sum((np.asarray(w0) - np.asarray(benign_mean)) ** 2)),
+    }
+
+
+def run_cell(sc: Scenario, break_factor: float = 5.0, seeds=(0,), baselines=None) -> dict:
+    """Runs a cell over ``seeds``; adds attack-free baselines + break rate.
+
+    ``broke`` per seed: non-finite final loss, or final loss >
+    ``break_factor`` x the same aggregator's attack-free final loss.
+    ``baselines`` (optional dict seed -> attack-free final loss) lets a
+    matrix sweep compute each aggregator's baseline once instead of once
+    per attack.
+    """
+    finals, brokes = [], []
+    for seed in seeds:
+        cell = run_scenario(dataclasses.replace(sc, seed=seed))
+        if baselines is not None and seed in baselines:
+            base_final = baselines[seed]
+        else:
+            base_final = run_scenario(
+                dataclasses.replace(sc, attack="none", attack_kw=(), seed=seed)
+            )["final_loss"]
+        floor = max(base_final, 1e-6)
+        broke = (not np.isfinite(cell["final_loss"])) or (
+            cell["final_loss"] > break_factor * floor
+        )
+        finals.append(cell["final_loss"])
+        brokes.append(broke)
+    return {
+        "aggregator": sc.aggregator,
+        "attack": sc.attack,
+        "heterogeneity": sc.heterogeneity,
+        "malicious_fraction": sc.malicious_fraction,
+        "final_loss": float(np.mean([f for f in finals if np.isfinite(f)] or [np.inf])),
+        "final_loss_per_seed": [float(f) for f in finals],
+        "break_rate": float(np.mean(brokes)),
+        "seeds": len(list(seeds)),
+    }
+
+
+# ------------------------------------------------------------- async cells
+def run_stream_scenario(
+    sc: Scenario,
+    flushes: int = 30,
+    buffer_capacity: int = 8,
+    concurrency: int = 16,
+    discount: str = "poly",
+    discount_a: float = 0.5,
+    latency: str = "exponential",
+) -> dict:
+    """The same objective served through the REAL async engine
+    (``repro.stream``): event stream + biased arrivals + ingest buffer +
+    staleness-discounted flushes.  This is where ``buffer_flood`` and
+    ``staleness_camouflage`` actually bite.
+    """
+    from repro.adversary.stream_attacks import BiasedLatency
+    from repro.stream.events import EventStream, make_latency
+    from repro.stream.server import AsyncStreamServer, StreamConfig
+
+    optima_j, malicious_j, w0, benign_mean_j, root_target_j = _make_world(sc)
+    optima = np.asarray(optima_j)
+    malicious = np.asarray(malicious_j)
+    benign_mean = np.asarray(benign_mean_j)
+    root_target = np.asarray(root_target_j)
+    rng = np.random.RandomState(sc.seed + 31)
+
+    def loss_fn(p, batch):
+        # U x B stacked targets; mean over batch of 1/2||w - target||^2
+        return 0.5 * jnp.mean(jnp.sum((p["w"][None, :] - batch["x"]) ** 2, -1))
+
+    use_trust = sc.aggregator == "br_drag_trust"
+    cfg = StreamConfig(
+        algorithm="br_drag" if use_trust else sc.aggregator,
+        buffer_capacity=buffer_capacity,
+        local_steps=sc.local_steps,
+        lr=sc.lr,
+        alpha=sc.alpha,
+        c=sc.c,
+        c_br=sc.c_br,
+        discount=discount,
+        discount_a=discount_a,
+        attack=sc.attack,
+        attack_kw=sc.attack_kw,
+        n_byzantine_hint=max(int(round(sc.malicious_fraction * buffer_capacity)), 1)
+        if sc.malicious_fraction > 0 else 0,
+        trust=use_trust,
+        trust_kw=sc.trust_kw,
+    )
+    server = AsyncStreamServer(loss_fn, {"w": w0}, cfg, n_clients=sc.n_clients)
+    lookup = lambda m: bool(malicious[m])  # noqa: E731
+    lat = make_latency(latency)
+    if sc.attack != "none":
+        lat = BiasedLatency(lat, server.adversary, lookup)
+    stream = EventStream(sc.n_clients, lat, seed=sc.seed, malicious_lookup=lookup)
+
+    def client_batches(m):
+        x = optima[m][None, None, :] + sc.noise_std * rng.randn(
+            sc.local_steps, 1, sc.dim
+        ).astype(np.float32)
+        return {"x": jnp.asarray(x)}
+
+    def root_batches():
+        x = np.broadcast_to(
+            root_target[None, None, :], (sc.local_steps, 1, sc.dim)
+        ).astype(np.float32)
+        return {"x": jnp.asarray(x)}
+
+    inflight = {}
+    for _ in range(concurrency):
+        ev = stream.dispatch(server.t)
+        inflight[ev.seq] = server.params
+    key = jax.random.PRNGKey(sc.seed + 77)
+    losses = []
+    while server.t < flushes:
+        ev = stream.next_completion()
+        snapshot = inflight.pop(ev.seq)
+        g = server.client_update(snapshot, client_batches(ev.client_id))
+        server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
+        ev2 = stream.dispatch(server.t)
+        inflight[ev2.seq] = server.params
+        if server.buffer_ready():
+            key, k = jax.random.split(key)
+            root = root_batches() if server.with_root else None
+            m = server.flush_if_ready(k, root)
+            if m is not None:
+                w = np.asarray(server.params["w"])
+                losses.append(float(0.5 * np.sum((w - benign_mean) ** 2)))
+    return {
+        "losses": np.asarray(losses),
+        "final_loss": losses[-1] if losses else np.inf,
+        "byzantine_flush_fraction": None,  # populated by callers that track it
+    }

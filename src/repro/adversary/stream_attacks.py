@@ -1,0 +1,126 @@
+"""Async-native attacks: adversaries that exploit the *serving shape* of
+``repro.stream`` rather than (only) the update values.
+
+The buffered-async engine introduces two attack surfaces the
+synchronous paper setting does not have:
+
+  * the fixed-capacity ingest buffer flushes on a count threshold, so
+    whoever arrives fastest owns the flush — ``buffer_flood`` gives
+    Byzantine clients hash-biased fast arrival times (deterministic per
+    client, like the engine's own lazy-client properties) so they crowd
+    out honest uploads and raise the *effective* byzantine fraction per
+    flush far above the population fraction;
+  * the staleness discount phi(tau) shrinks the DoD lambda_m, i.e. a
+    stale upload is calibrated *less* aggressively toward the reference
+    (by design — see ``repro.stream.staleness``).  ``staleness_camouflage``
+    weaponises that: attackers hold their poisoned uploads (slow
+    arrival), so tau > 0, phi(tau) ~ 0, lambda ~ 0, and the poison rides
+    through the calibration nearly raw.  The divergence-history trust
+    layer (``repro.trust``) is the counter: it accumulates the
+    *undiscounted* divergence, which camouflage cannot suppress.
+
+Both compose an arrival-shaping half (``latency_bias``, consumed by
+:class:`BiasedLatency` wrapping any ``repro.stream.events`` latency
+model) with an update-space half delegated to an inner registry attack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.adversary import engine
+from repro.stream.events import LatencyModel, client_uniform
+
+
+@dataclasses.dataclass(frozen=True)
+class BiasedLatency(LatencyModel):
+    """Wraps a base latency model with an adversary's arrival shaping.
+
+    ``malicious_lookup(client_id) -> bool`` is the same systematic
+    per-client property the event stream uses, so the bias is applied
+    exactly to the clients the adversary controls.
+    """
+
+    base: LatencyModel
+    adversary: engine.Adversary
+    malicious_lookup: object  # callable client_id -> bool
+
+    def sample(self, rng, client_id):
+        bias = self.adversary.latency_bias(
+            int(client_id), bool(self.malicious_lookup(int(client_id)))
+        )
+        return self.base.sample(rng, client_id) * float(bias)
+
+
+class BufferFlood(engine.Adversary):
+    """Byzantine clients race the ingest buffer (see module docstring).
+
+    ``speedup`` is the mean arrival-time multiplier for malicious
+    clients (<< 1); each client's exact factor is hash-jittered in
+    [0.5, 1.5] * speedup so the flood does not arrive as a detectable
+    synchronized burst.  Updates are crafted by ``inner`` (default IPM —
+    small-norm poison that survives norm screens) over the crowded
+    buffer, where the malicious fraction is now outsized.
+    """
+
+    name = "buffer_flood"
+
+    def __init__(self, inner: str = "ipm", inner_kw: dict | None = None,
+                 speedup: float = 0.1, seed: int = 0):
+        self.inner = engine.resolve(inner, dict(inner_kw or {}))
+        self.speedup = float(speedup)
+        self.seed = int(seed)
+
+    def init(self):
+        return self.inner.init()
+
+    def craft(self, state, ctx):
+        return self.inner.craft(state, ctx)
+
+    def latency_bias(self, client_id, is_malicious):
+        if not is_malicious:
+            return 1.0
+        u = client_uniform(self.seed, client_id, salt=0xF100D)
+        return self.speedup * (0.5 + u)
+
+
+class StalenessCamouflage(engine.Adversary):
+    """Attackers upload stale-but-poisoned updates (see module docstring).
+
+    ``slowdown`` multiplies malicious arrival times (>> 1) so their
+    uploads land with tau > 0 and a small phi(tau); ``inner`` (default
+    sign flipping — maximal divergence, which phi then masks from the
+    calibration) crafts the payload.
+    """
+
+    name = "staleness_camouflage"
+
+    def __init__(self, inner: str = "sign_flipping", inner_kw: dict | None = None,
+                 slowdown: float = 6.0, seed: int = 0):
+        self.inner = engine.resolve(inner, dict(inner_kw or {}))
+        self.slowdown = float(slowdown)
+        self.seed = int(seed)
+
+    def init(self):
+        return self.inner.init()
+
+    def craft(self, state, ctx):
+        return self.inner.craft(state, ctx)
+
+    def latency_bias(self, client_id, is_malicious):
+        if not is_malicious:
+            return 1.0
+        u = client_uniform(self.seed, client_id, salt=0x57A1E)
+        return self.slowdown * (0.75 + 0.5 * u)
+
+
+engine.register(
+    "buffer_flood",
+    lambda inner="ipm", inner_kw=(), speedup=0.1, seed=0, **kw: BufferFlood(
+        inner, dict(inner_kw), speedup, seed
+    ),
+)
+engine.register(
+    "staleness_camouflage",
+    lambda inner="sign_flipping", inner_kw=(), slowdown=6.0, seed=0, **kw:
+        StalenessCamouflage(inner, dict(inner_kw), slowdown, seed),
+)

@@ -46,12 +46,15 @@ def calibrate_worker(g: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Arra
 
 
 def aggregate(
-    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None, weights=None
 ) -> tuple[pt.Pytree, jax.Array]:
     """PS-side calibration of all S uploads + mean (eq. 14).
 
     ``discounts`` (optional [S] float32) are staleness factors phi(tau_m)
     from the async engine; None = fresh uploads (synchronous paper form).
+    ``weights`` (optional [S] float32) are trust reputations
+    (``repro.trust``) making the aggregate a reputation-weighted mean of
+    the calibrated updates; None = the paper's uniform mean, bit-for-bit.
     """
     if discounts is None:
         vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
@@ -62,7 +65,10 @@ def aggregate(
             return calibrate(g, r, lam), lam
 
         vs, lams = jax.vmap(one)(updates_stacked, discounts)
-    delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
+    if weights is None:
+        delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
+    else:
+        delta = pt.tree_weighted_mean(vs, weights)
     return delta, lams
 
 
@@ -94,9 +100,10 @@ def round_step(
     *,
     c: float,
     discounts=None,
+    weights=None,
 ) -> tuple[pt.Pytree, dict]:
     """One BR-DRAG server round given uploads and the trusted r^t."""
-    delta, lams = aggregate(updates_stacked, reference, c, discounts)
+    delta, lams = aggregate(updates_stacked, reference, c, discounts, weights)
     new_params = pt.tree_add(params, delta)
     metrics = {
         "dod_mean": jnp.mean(lams),

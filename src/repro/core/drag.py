@@ -69,13 +69,18 @@ def calibrate_worker(g: pt.Pytree, r: pt.Pytree, c) -> tuple[pt.Pytree, jax.Arra
 
 
 def aggregate(
-    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts=None, weights=None
 ) -> tuple[pt.Pytree, jax.Array]:
     """Calibrate a stacked [S, ...] update pytree and average (eq. 6).
 
     ``discounts`` (optional [S] float32) are per-update staleness factors
     phi(tau_m) from the async engine (``repro.stream.staleness``); None
     means fresh updates — the synchronous paper setting.
+
+    ``weights`` (optional [S] float32) are cross-round reputation weights
+    from the trust layer (``repro.trust``): the aggregate becomes the
+    reputation-weighted mean of the calibrated updates.  None = the
+    paper's uniform mean, bit-for-bit.
 
     Returns (Delta^t, lambdas[S]).
     """
@@ -88,7 +93,10 @@ def aggregate(
             return calibrate(g, r, lam), lam
 
         vs, lams = jax.vmap(one)(updates_stacked, discounts)
-    delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
+    if weights is None:
+        delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
+    else:
+        delta = pt.tree_weighted_mean(vs, weights)
     return delta, lams
 
 
@@ -111,14 +119,18 @@ def round_step(
     alpha: float,
     c: float,
     discounts=None,
+    weights=None,
 ) -> tuple[pt.Pytree, DragState, dict]:
     """One full DRAG server round given the S raw worker updates.
 
     Matches Alg. 1: on the bootstrap round the raw FedAvg mean both forms
     r^0 and is applied directly (the paper computes r^0 from the round-0
     uploads, eq. 5a); afterwards workers calibrate against r^t and the PS
-    applies Delta^t and rolls the EMA.  ``discounts`` as in
-    :func:`aggregate` (async staleness factors; None = synchronous).
+    applies Delta^t and rolls the EMA.  ``discounts``/``weights`` as in
+    :func:`aggregate` (async staleness factors / trust reputations; None
+    = the synchronous, trust-free paper setting).  The bootstrap round
+    is always the uniform raw mean — no reference yet means no
+    divergence history to weight by.
     """
     raw_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), updates_stacked)
 
@@ -127,7 +139,7 @@ def round_step(
         return raw_mean, lam0
 
     def calibrated(_):
-        return aggregate(updates_stacked, state.reference, c, discounts)
+        return aggregate(updates_stacked, state.reference, c, discounts, weights)
 
     delta, lams = jax.lax.cond(state.initialized, calibrated, bootstrap, None)
     new_params = pt.tree_add(params, delta)

@@ -69,6 +69,21 @@ def tree_mean(trees: list[Pytree]) -> Pytree:
     return tree_scale(acc, 1.0 / n)
 
 
+def tree_weighted_mean(stacked: Pytree, weights) -> Pytree:
+    """Weighted mean over the leading (worker) axis, weights renormalised.
+
+    Near-zero total weight (e.g. every worker quarantined by the trust
+    layer) falls back to the uniform mean rather than emitting a
+    zero/NaN step — a bricked server is its own denial of service.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    s = w.shape[0]
+    wsum = jnp.sum(w)
+    eps = 1e-12
+    w = jnp.where(wsum > eps, w / jnp.maximum(wsum, eps), jnp.full((s,), 1.0 / s))
+    return jax.tree.map(lambda x: jnp.tensordot(w, x, axes=(0, 0)), stacked)
+
+
 def tree_stack(trees: list[Pytree]) -> Pytree:
     """Stack a list of pytrees along a new leading axis (worker axis)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)

@@ -12,7 +12,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.attacks import flip_labels  # noqa: F401  (re-export)
+from repro.core.attacks import flip_labels
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import SPECS, make_image_dataset
 
@@ -37,9 +37,12 @@ class FederatedData:
             x = self.x[take].reshape(u, b, *self.x.shape[1:])
             y = self.y[take].reshape(u, b).copy()
             if self.malicious[m] and self.attack == "label_flipping":
-                # label flipping on half the local samples (paper §VI-B)
+                # label flipping on half the local samples (paper §VI-B),
+                # through the canonical transform in ``core.attacks`` so
+                # the data- and update-space attack semantics share one
+                # definition (l -> L - l - 1)
                 flip = rng.rand(u, b) < self.flip_fraction
-                y = np.where(flip, self.n_classes - y - 1, y)
+                y = np.asarray(flip_labels(y, self.n_classes, flip), dtype=y.dtype)
             xs.append(x)
             ys.append(y)
         return {"x": np.stack(xs), "y": np.stack(ys).astype(np.int32)}

@@ -53,6 +53,8 @@ def stream_config_from_round(cfg: RoundConfig, capacity: int) -> stream_server.S
         attack_kw=cfg.attack_kw,
         n_byzantine_hint=cfg.n_byzantine_hint,
         geomed_iters=cfg.geomed_iters,
+        trust=cfg.trust,
+        trust_kw=cfg.trust_kw,
     )
 
 
@@ -64,6 +66,8 @@ def to_stream_state(state: ServerState, capacity: int) -> stream_server.StreamSt
         round=state.round,
         drag=state.drag,
         buffer=buf_mod.init_buffer(state.params, capacity),
+        adversary=state.adversary,
+        trust=state.trust,
     )
 
 
@@ -82,6 +86,8 @@ def to_sync_state(stream_state: stream_server.StreamState, n_workers: int) -> Se
         control_workers=jax.tree.map(
             lambda x: jnp.zeros((n_workers,) + x.shape, x.dtype), params
         ),
+        adversary=stream_state.adversary,
+        trust=stream_state.trust,
     )
 
 
@@ -126,11 +132,14 @@ def streamed_round(
     for i in range(s):
         ev = es.next_completion()  # FIFO at zero latency -> worker order
         g = client_fn(state.params, pt.tree_index(batches, ev.seq))
-        buf = ingest_fn(buf, g, ev.dispatch_round, malicious_mask[ev.seq])
+        buf = ingest_fn(
+            buf, g, ev.dispatch_round, malicious_mask[ev.seq], ev.client_id
+        )
 
     flush_args = [loss_fn, scfg, state.params, state.drag, state.round, buf, key]
-    params, new_drag, rnd, _, metrics = stream_server.flush(
-        *flush_args, root_batches=root_batches
+    params, new_drag, rnd, _, new_adv, new_trust, metrics = stream_server.flush(
+        *flush_args, root_batches=root_batches,
+        adv_state=state.adversary, trust_state=state.trust,
     )
     new_state = ServerState(
         params=params,
@@ -139,5 +148,7 @@ def streamed_round(
         momentum=state.momentum,
         control_global=state.control_global,
         control_workers=state.control_workers,
+        adversary=new_adv,
+        trust=new_trust,
     )
     return new_state, metrics

@@ -17,9 +17,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregators, attacks, br_drag, drag
+from repro.adversary import engine as adversary_engine
+from repro.core import aggregators, br_drag, drag
 from repro.core import pytree as pt
 from repro.fl.client import local_update
+from repro.trust import reputation as trust_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,10 +37,12 @@ class RoundConfig:
     mu: float = 0.2  # FedProx
     acg_beta: float = 0.2  # FedACG local regulariser
     acg_lambda: float = 0.85  # FedACG momentum
-    attack: str = "none"
+    attack: str = "none"  # any repro.adversary registry name
     attack_kw: tuple = ()  # e.g. (("std", 3.0),)
     n_byzantine_hint: int = 0  # for krum / trimmed_mean
     geomed_iters: int = 8
+    trust: bool = False  # divergence-history reputation (drag/br_drag)
+    trust_kw: tuple = ()  # TrustConfig overrides, e.g. (("decay", 0.9),)
 
 
 class ServerState(NamedTuple):
@@ -48,12 +52,26 @@ class ServerState(NamedTuple):
     momentum: pt.Pytree  # fedacg server momentum m^t
     control_global: pt.Pytree  # scaffold h
     control_workers: pt.Pytree  # scaffold h_m stacked [M, ...]
+    adversary: pt.Pytree = ()  # attack memory (repro.adversary)
+    trust: pt.Pytree = ()  # TrustState | () (repro.trust)
 
 
-def init_server_state(params: pt.Pytree, n_workers: int) -> ServerState:
+def init_server_state(
+    params: pt.Pytree, n_workers: int, cfg: RoundConfig | None = None
+) -> ServerState:
     # Copy params: the jitted round fn donates the state, and donating a
     # buffer the caller still aliases (e.g. two states built from the same
     # init) would invalidate it out from under them.
+    #
+    # ``cfg`` sizes the adversary memory and the trust table; without it
+    # both stay empty — fine for stateless attacks with trust off (the
+    # pre-engine behaviour), enforced in ``federated_round``.
+    adv_state: pt.Pytree = ()
+    trust_state: pt.Pytree = ()
+    if cfg is not None:
+        adv_state = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw)).init()
+        if cfg.trust:
+            trust_state = trust_mod.init_trust(n_workers)
     return ServerState(
         params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
         round=jnp.zeros((), jnp.int32),
@@ -63,6 +81,8 @@ def init_server_state(params: pt.Pytree, n_workers: int) -> ServerState:
         control_workers=jax.tree.map(
             lambda x: jnp.zeros((n_workers,) + x.shape, x.dtype), params
         ),
+        adversary=adv_state,
+        trust=trust_state,
     )
 
 
@@ -125,9 +145,38 @@ def federated_round(
     s = malicious_mask.shape[0]
     g_stacked, aux = _client_updates(loss_fn, state, cfg, batches, selected_idx)
 
-    # ---- Byzantine update-space attack
-    g_stacked = attacks.apply_update_attack(
-        cfg.attack, key, g_stacked, malicious_mask, **dict(cfg.attack_kw)
+    # ---- Byzantine update-space attack: the adversary engine sees the
+    # honest stack (omniscient threat model) and threads its memory
+    # through the server state
+    adv = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
+    if jax.tree.structure(state.adversary) != jax.tree.structure(adv.init()):
+        raise ValueError(
+            f"attack {cfg.attack!r} carries state; build the server state "
+            "with init_server_state(params, n_workers, cfg)"
+        )
+    ctx = adversary_engine.AttackContext(
+        key=key, updates=g_stacked, malicious_mask=malicious_mask,
+        round=state.round,
+    )
+    g_stacked, new_adv = adv.craft(state.adversary, ctx)
+
+    # ---- trust layer: reputation weights from PAST rounds' divergence
+    # history weight this round's aggregation; this round's divergences
+    # are folded into the history afterwards
+    use_trust = cfg.trust and cfg.algorithm in ("drag", "br_drag")
+    if cfg.trust and not use_trust:
+        raise ValueError(
+            f"trust reputation needs a reference direction; algorithm "
+            f"{cfg.algorithm!r} has none (use drag or br_drag)"
+        )
+    if use_trust and not isinstance(state.trust, trust_mod.TrustState):
+        raise ValueError(
+            "cfg.trust=True needs a trust table; build the server state "
+            "with init_server_state(params, n_workers, cfg)"
+        )
+    tcfg = trust_mod.TrustConfig(**dict(cfg.trust_kw)) if use_trust else None
+    weights = (
+        trust_mod.reputation(state.trust, selected_idx, tcfg) if use_trust else None
     )
 
     metrics: dict = {}
@@ -135,20 +184,33 @@ def federated_round(
     new_momentum = state.momentum
     new_h = state.control_global
     new_hm = state.control_workers
+    new_trust = state.trust
     params = state.params
 
     if cfg.algorithm == "drag":
         params, new_drag, dm = drag.round_step(
-            params, state.drag, g_stacked, alpha=cfg.alpha, c=cfg.c
+            params, state.drag, g_stacked, alpha=cfg.alpha, c=cfg.c,
+            weights=weights,
         )
         metrics.update(dm)
+        if use_trust:
+            div, nr = trust_mod.divergence_signals(g_stacked, state.drag.reference)
+            # no reference on the bootstrap round -> no observation
+            new_trust = trust_mod.observe(
+                state.trust, selected_idx, div, nr, tcfg, gate=state.drag.initialized
+            )
     elif cfg.algorithm in ("br_drag", "fltrust"):
         assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
         grad_fn = jax.grad(loss_fn)
         reference = br_drag.root_reference(params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr)
         if cfg.algorithm == "br_drag":
-            params, dm = br_drag.round_step(params, g_stacked, reference, c=cfg.c_br)
+            params, dm = br_drag.round_step(
+                params, g_stacked, reference, c=cfg.c_br, weights=weights
+            )
             metrics.update(dm)
+            if use_trust:
+                div, nr = trust_mod.divergence_signals(g_stacked, reference)
+                new_trust = trust_mod.observe(state.trust, selected_idx, div, nr, tcfg)
         else:
             delta = aggregators.fltrust(g_stacked, reference)
             params = pt.tree_add(params, delta)
@@ -185,6 +247,9 @@ def federated_round(
                 new_controls,
             )
 
+    if use_trust:
+        metrics["trust_weight_mean"] = jnp.mean(weights)
+        metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
     metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g_stacked))
     new_state = ServerState(
         params=params,
@@ -193,6 +258,8 @@ def federated_round(
         momentum=new_momentum,
         control_global=new_h,
         control_workers=new_hm,
+        adversary=new_adv,
+        trust=new_trust,
     )
     return new_state, metrics
 

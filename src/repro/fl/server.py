@@ -31,11 +31,14 @@ class ExperimentConfig:
     lr: float = 0.01
     beta: float = 0.1  # Dirichlet heterogeneity
     algorithm: str = "fedavg"
-    attack: str = "none"
+    attack: str = "none"  # any repro.adversary registry name
+    attack_kw: tuple = ()
     malicious_fraction: float = 0.0
     alpha: float = 0.25
     c: float = 0.1
     c_br: float = 0.5
+    trust: bool = False  # divergence-history reputation (drag/br_drag)
+    trust_kw: tuple = ()
     root_samples: int = 3000
     eval_every: int = 10
     seed: int = 0
@@ -77,7 +80,10 @@ def run_experiment(
         alpha=exp.alpha,
         c=exp.c,
         c_br=exp.c_br,
-        attack=exp.attack if exp.attack != "label_flipping" else "none",
+        # label_flipping resolves to a data-space passthrough in the
+        # adversary registry, so it no longer needs host-side special-casing
+        attack=exp.attack,
+        attack_kw=exp.attack_kw,
         # 0 under a benign config — krum/trimmed_mean must not trim an
         # honest worker when nothing is malicious; >=1 once any fraction is.
         n_byzantine_hint=(
@@ -85,11 +91,13 @@ def run_experiment(
             if exp.malicious_fraction > 0
             else 0
         ),
+        trust=exp.trust,
+        trust_kw=exp.trust_kw,
     )
     with_root = exp.algorithm in ("br_drag", "fltrust")
     round_fn = make_round_fn(loss_fn, cfg, with_root)
 
-    state = init_server_state(params, exp.n_workers)
+    state = init_server_state(params, exp.n_workers, cfg)
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
     test_batch = {"x": jnp.asarray(data.test_batch()["x"]), "y": jnp.asarray(data.test_batch()["y"])}
 

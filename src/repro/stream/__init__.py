@@ -15,11 +15,13 @@ from repro.stream.events import (  # noqa: F401
 )
 from repro.stream.server import (  # noqa: F401
     AsyncStreamServer,
+    RootReferenceCache,
     StreamConfig,
     StreamExperimentConfig,
     StreamState,
     init_stream_state,
     make_flush_fn,
+    make_root_fn,
     run_stream_experiment,
 )
 from repro.stream.staleness import DISCOUNTS, make_discount  # noqa: F401

@@ -29,6 +29,7 @@ class BufferState(NamedTuple):
     dispatch_rounds: jax.Array  # [K] int32 — server version tags
     malicious: jax.Array  # [K] bool — for Byzantine injection at flush
     count: jax.Array  # [] int32 — filled slots
+    client_ids: jax.Array  # [K] int32 — uploader ids (trust indexing)
 
 
 def capacity_of(buf: BufferState) -> int:
@@ -44,11 +45,19 @@ def init_buffer(params_like: pt.Pytree, capacity: int) -> BufferState:
         dispatch_rounds=jnp.zeros((capacity,), jnp.int32),
         malicious=jnp.zeros((capacity,), bool),
         count=jnp.zeros((), jnp.int32),
+        client_ids=jnp.zeros((capacity,), jnp.int32),
     )
 
 
-def ingest(buf: BufferState, g: pt.Pytree, dispatch_round, is_malicious) -> BufferState:
-    """Write one update into the next free slot (drops if already full)."""
+def ingest(
+    buf: BufferState, g: pt.Pytree, dispatch_round, is_malicious, client_id=0
+) -> BufferState:
+    """Write one update into the next free slot (drops if already full).
+
+    ``client_id`` tags the slot with the uploader's identity so the
+    flush can index the trust layer's reputation table; 0 when no trust
+    is configured.
+    """
     k = capacity_of(buf)
     slot = jnp.minimum(buf.count, k - 1)
     keep = buf.count < k  # full buffer: refuse the write, don't clobber
@@ -68,6 +77,9 @@ def ingest(buf: BufferState, g: pt.Pytree, dispatch_round, is_malicious) -> Buff
             jnp.where(keep, is_malicious, buf.malicious[slot])
         ),
         count=buf.count + keep.astype(jnp.int32),
+        client_ids=buf.client_ids.at[slot].set(
+            jnp.where(keep, jnp.asarray(client_id, jnp.int32), buf.client_ids[slot])
+        ),
     )
 
 

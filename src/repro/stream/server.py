@@ -12,10 +12,23 @@ ingest buffer (``repro.stream.buffer``) tagged with the model version it
 trained from, and the global model only advances when the buffer reaches
 its flush threshold K.  Staleness tau_m = t - t_dispatch is known
 exactly at flush time and feeds the discounted DoD
-(``repro.stream.staleness``).  Byzantine behaviour reuses
-``repro.core.attacks`` verbatim: update-space attacks transform the
-buffered stack at flush (the malicious mask rides along in the buffer),
-data-space attacks poison the per-client sample stream.
+(``repro.stream.staleness``).
+
+Byzantine behaviour goes through the adversary engine
+(``repro.adversary``): update-space attacks transform the buffered stack
+at flush (the malicious mask rides along in the buffer, the adversary's
+cross-round memory rides in the :class:`StreamState`), async-native
+attacks additionally shape arrival times (``BiasedLatency``), and
+data-space attacks poison the per-client sample stream.  The
+divergence-history trust layer (``repro.trust``) indexes its reputation
+table with the per-slot client ids and enters DRAG/BR-DRAG flushes as
+the reputation-weighted mean.
+
+For BR-DRAG/FLTrust flushes the trusted reference r^t (a U-step SGD pass
+over D_root) is computed host-side through a version-keyed cache
+(:class:`RootReferenceCache`) so it can be amortised across flushes;
+``root_refresh_every > 1`` additionally reuses a slightly-stale r across
+that many versions (ROADMAP open item).
 
 With buffer capacity S, zero latency, and phi = none the engine
 reproduces the synchronous ``repro.fl.round.federated_round`` trajectory
@@ -32,12 +45,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregators, attacks, br_drag, drag
+from repro.adversary import engine as adversary_engine
+from repro.core import aggregators, br_drag, drag
 from repro.core import pytree as pt
 from repro.fl.client import local_update
 from repro.stream import buffer as buf_mod
 from repro.stream import staleness as stale
 from repro.stream.events import EventStream
+from repro.trust import reputation as trust_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +69,13 @@ class StreamConfig:
     c_br: float = 0.5  # BR-DRAG DoD coefficient
     discount: str = "none"  # staleness phi: none | poly | exp
     discount_a: float = 0.5  # phi sharpness a
-    attack: str = "none"
+    attack: str = "none"  # any repro.adversary registry name
     attack_kw: tuple = ()
     n_byzantine_hint: int = 0  # krum / multi_krum / bulyan / trimmed_mean
     geomed_iters: int = 8
+    trust: bool = False  # divergence-history reputation (drag/br_drag)
+    trust_kw: tuple = ()  # TrustConfig overrides
+    root_refresh_every: int = 1  # reuse cached r^t across this many versions
 
 
 class StreamState(NamedTuple):
@@ -67,15 +85,35 @@ class StreamState(NamedTuple):
     round: jax.Array  # int32 — global model version t (flush count)
     drag: drag.DragState  # reference EMA (drag) / unused otherwise
     buffer: buf_mod.BufferState
+    adversary: pt.Pytree = ()  # attack memory (repro.adversary)
+    trust: pt.Pytree = ()  # TrustState | () (repro.trust)
 
 
-def init_stream_state(params: pt.Pytree, capacity: int) -> StreamState:
+def init_stream_state(
+    params: pt.Pytree,
+    capacity: int,
+    cfg: StreamConfig | None = None,
+    n_clients: int | None = None,
+) -> StreamState:
     # Copy params for the same aliasing reason as fl.round.init_server_state.
+    #
+    # ``cfg`` sizes the adversary memory and (with ``n_clients``) the
+    # trust table; without it both stay empty — the pre-engine behaviour.
+    adv_state: pt.Pytree = ()
+    trust_state: pt.Pytree = ()
+    if cfg is not None:
+        adv_state = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw)).init()
+        if cfg.trust:
+            if not n_clients:
+                raise ValueError("cfg.trust=True needs n_clients for the trust table")
+            trust_state = trust_mod.init_trust(n_clients)
     return StreamState(
         params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
         round=jnp.zeros((), jnp.int32),
         drag=drag.init_state(params),
         buffer=buf_mod.init_buffer(params, capacity),
+        adversary=adv_state,
+        trust=trust_state,
     )
 
 
@@ -88,15 +126,45 @@ def flush(
     buf: buf_mod.BufferState,
     key,
     root_batches=None,  # [U, B, ...] — BR-DRAG / FLTrust root data
+    adv_state: pt.Pytree = (),  # adversary memory (repro.adversary)
+    trust_state: pt.Pytree = (),  # TrustState | ()
+    reference=None,  # precomputed r^t (RootReferenceCache); overrides root_batches
 ):
     """One global step from a full buffer; returns
-    (params', drag', round+1, reset buffer, metrics)."""
+    (params', drag', round+1, reset buffer, adv_state', trust_state',
+    metrics)."""
     taus = buf_mod.staleness(buf, rnd)
     discounts = stale.make_discount(cfg.discount, cfg.discount_a)(taus)
 
-    # ---- Byzantine update-space attack over the buffered stack
-    g = attacks.apply_update_attack(
-        cfg.attack, key, buf.slots, buf.malicious, **dict(cfg.attack_kw)
+    # ---- Byzantine update-space attack over the buffered stack: the
+    # adversary sees the staleness tags and discounts it may hide behind
+    adv = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
+    if jax.tree.structure(adv_state) != jax.tree.structure(adv.init()):
+        raise ValueError(
+            f"attack {cfg.attack!r} carries state; build the stream state "
+            "with init_stream_state(params, capacity, cfg)"
+        )
+    ctx = adversary_engine.AttackContext(
+        key=key, updates=buf.slots, malicious_mask=buf.malicious, round=rnd,
+        taus=taus, discounts=discounts,
+    )
+    g, new_adv = adv.craft(adv_state, ctx)
+
+    # ---- trust layer: PAST flushes' divergence history weights this one
+    use_trust = cfg.trust and cfg.algorithm in ("drag", "br_drag")
+    if cfg.trust and not use_trust:
+        raise ValueError(
+            f"trust reputation needs a reference direction; stream algorithm "
+            f"{cfg.algorithm!r} has none (use drag or br_drag)"
+        )
+    if use_trust and not isinstance(trust_state, trust_mod.TrustState):
+        raise ValueError(
+            "cfg.trust=True needs a trust table; build the stream state "
+            "with init_stream_state(params, capacity, cfg, n_clients)"
+        )
+    tcfg = trust_mod.TrustConfig(**dict(cfg.trust_kw)) if use_trust else None
+    weights = (
+        trust_mod.reputation(trust_state, buf.client_ids, tcfg) if use_trust else None
     )
 
     metrics: dict = {
@@ -105,23 +173,37 @@ def flush(
         "discount_mean": jnp.mean(discounts),
     }
     new_drag = drag_state
+    new_trust = trust_state
 
     if cfg.algorithm == "drag":
         params, new_drag, dm = stale.drag_round_step(
-            params, drag_state, g, discounts, alpha=cfg.alpha, c=cfg.c
+            params, drag_state, g, discounts, alpha=cfg.alpha, c=cfg.c,
+            weights=weights,
         )
         metrics.update(dm)
+        if use_trust:
+            div, nr = trust_mod.divergence_signals(g, drag_state.reference)
+            new_trust = trust_mod.observe(
+                trust_state, buf.client_ids, div, nr, tcfg,
+                gate=drag_state.initialized,
+            )
     elif cfg.algorithm in ("br_drag", "fltrust"):
-        assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
-        grad_fn = jax.grad(loss_fn)
-        reference = br_drag.root_reference(
-            params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr
-        )
+        if reference is None:
+            assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
+            grad_fn = jax.grad(loss_fn)
+            reference = br_drag.root_reference(
+                params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr
+            )
         if cfg.algorithm == "br_drag":
             params, dm = stale.br_drag_round_step(
-                params, g, reference, discounts, c=cfg.c_br
+                params, g, reference, discounts, c=cfg.c_br, weights=weights
             )
             metrics.update(dm)
+            if use_trust:
+                div, nr = trust_mod.divergence_signals(g, reference)
+                new_trust = trust_mod.observe(
+                    trust_state, buf.client_ids, div, nr, tcfg
+                )
         else:
             delta = aggregators.fltrust(g, reference)
             params = pt.tree_add(params, delta)
@@ -147,27 +229,92 @@ def flush(
         params = pt.tree_add(params, delta)
         metrics["delta_norm"] = pt.tree_norm(delta)
 
+    if use_trust:
+        metrics["trust_weight_mean"] = jnp.mean(weights)
+        metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
     metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g))
-    return params, new_drag, rnd + 1, buf_mod.reset(buf), metrics
+    return params, new_drag, rnd + 1, buf_mod.reset(buf), new_adv, new_trust, metrics
 
 
 def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
     """Jitted flush.  The BUFFER is donated (its slot storage is reused by
     the reset buffer); params are NOT — in-flight dispatch snapshots alias
-    the pre-flush params and must stay valid."""
+    the pre-flush params and must stay valid.
+
+    The with-root variant takes the PRECOMPUTED reference r^t (from
+    :class:`RootReferenceCache` via :func:`make_root_fn`) instead of raw
+    root batches, so the D_root SGD pass is not baked into — and re-run
+    by — every flush."""
     if with_root:
 
         @partial(jax.jit, donate_argnums=(3,))
-        def fn(params, drag_state, rnd, buf, key, root_batches):
-            return flush(loss_fn, cfg, params, drag_state, rnd, buf, key, root_batches)
+        def fn(params, drag_state, rnd, buf, key, adv_state, trust_state, reference):
+            return flush(
+                loss_fn, cfg, params, drag_state, rnd, buf, key,
+                adv_state=adv_state, trust_state=trust_state, reference=reference,
+            )
 
     else:
 
         @partial(jax.jit, donate_argnums=(3,))
-        def fn(params, drag_state, rnd, buf, key):
-            return flush(loss_fn, cfg, params, drag_state, rnd, buf, key)
+        def fn(params, drag_state, rnd, buf, key, adv_state, trust_state):
+            return flush(
+                loss_fn, cfg, params, drag_state, rnd, buf, key,
+                adv_state=adv_state, trust_state=trust_state,
+            )
 
     return fn
+
+
+def make_root_fn(loss_fn: Callable, cfg: StreamConfig):
+    """Jitted trusted-reference pass: r^t from U SGD steps on D_root."""
+    grad_fn = jax.grad(loss_fn)
+
+    def fn(params, root_batches):
+        return br_drag.root_reference(
+            params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr
+        )
+
+    return jax.jit(fn)
+
+
+class RootReferenceCache:
+    """Version-keyed cache of the BR-DRAG root reference r^t.
+
+    The D_root SGD pass costs a full local-training's worth of compute
+    per flush.  Its inputs change only when the model version advances,
+    so the cache keys on the version (coarsened to
+    ``refresh_every``-sized buckets): within a bucket every flush reuses
+    the stored r.  ``refresh_every = 1`` is exact — r is recomputed
+    whenever the version advances, and a cache hit can only serve the
+    bit-identical array that a recompute would produce.
+    ``refresh_every > 1`` trades exactness for throughput by serving a
+    slightly stale r while the version advances slowly (ROADMAP open
+    item); BR-DRAG's norm clamp keeps the calibration bounded either way.
+    """
+
+    def __init__(self, compute_fn, refresh_every: int = 1, enabled: bool = True):
+        self.compute_fn = compute_fn  # (params, root_batches) -> r
+        self.refresh_every = max(int(refresh_every), 1)
+        self.enabled = enabled
+        self.hits = 0
+        self.misses = 0
+        self._key: int | None = None
+        self._reference = None
+
+    def get(self, version: int, params, root_batches):
+        key = int(version) // self.refresh_every
+        if self.enabled and key == self._key:
+            self.hits += 1
+            return self._reference
+        self.misses += 1
+        reference = self.compute_fn(params, root_batches)
+        if self.enabled:
+            self._key, self._reference = key, reference
+        return reference
+
+    def clear(self) -> None:
+        self._key, self._reference = None, None
 
 
 def make_client_fn(loss_fn: Callable, cfg: StreamConfig):
@@ -195,13 +342,19 @@ class AsyncStreamServer:
         loss_fn: Callable,
         params: pt.Pytree,
         cfg: StreamConfig,
+        n_clients: int | None = None,
+        root_cache: bool = True,
     ):
         self.cfg = cfg
         self.with_root = cfg.algorithm in ("br_drag", "fltrust")
-        self.state = init_stream_state(params, cfg.buffer_capacity)
+        self.adversary = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
+        self.state = init_stream_state(params, cfg.buffer_capacity, cfg, n_clients)
         self._ingest = buf_mod.make_ingest_fn()
         self._flush = make_flush_fn(loss_fn, cfg, self.with_root)
         self._client = make_client_fn(loss_fn, cfg)
+        self.root_cache = RootReferenceCache(
+            make_root_fn(loss_fn, cfg), cfg.root_refresh_every, enabled=root_cache
+        ) if self.with_root else None
         self.t = 0  # host-side mirror of state.round (avoids device syncs)
         self.ingested = 0  # accepted since last flush (mirrors buffer.count)
         self.dropped = 0  # uploads refused because the buffer was full
@@ -213,7 +366,9 @@ class AsyncStreamServer:
     def client_update(self, params_snapshot: pt.Pytree, batches_u) -> pt.Pytree:
         return self._client(params_snapshot, batches_u)
 
-    def ingest(self, g: pt.Pytree, dispatch_round: int, is_malicious: bool) -> bool:
+    def ingest(
+        self, g: pt.Pytree, dispatch_round: int, is_malicious: bool, client_id: int = 0
+    ) -> bool:
         """Accept one upload.  Returns False — and counts the drop — when
         the buffer is already at threshold; call ``flush_if_ready`` first
         if the update must not be lost."""
@@ -221,7 +376,9 @@ class AsyncStreamServer:
             self.dropped += 1
             return False
         self.state = self.state._replace(
-            buffer=self._ingest(self.state.buffer, g, dispatch_round, is_malicious)
+            buffer=self._ingest(
+                self.state.buffer, g, dispatch_round, is_malicious, client_id
+            )
         )
         self.ingested += 1
         return True
@@ -230,15 +387,26 @@ class AsyncStreamServer:
         # host-side mirror: count == ingested since last flush
         return self.ingested >= self.cfg.buffer_capacity
 
+    def root_reference(self, root_batches) -> pt.Pytree:
+        """Trusted r^t for the CURRENT model version, through the cache."""
+        assert self.with_root
+        return self.root_cache.get(self.t, self.state.params, root_batches)
+
     def flush_if_ready(self, key, root_batches=None) -> dict | None:
         if not self.buffer_ready():
             return None
-        args = [self.state.params, self.state.drag, self.state.round, self.state.buffer, key]
+        args = [
+            self.state.params, self.state.drag, self.state.round,
+            self.state.buffer, key, self.state.adversary, self.state.trust,
+        ]
         if self.with_root:
             assert root_batches is not None
-            args.append(root_batches)
-        params, new_drag, rnd, buf, metrics = self._flush(*args)
-        self.state = StreamState(params=params, round=rnd, drag=new_drag, buffer=buf)
+            args.append(self.root_reference(root_batches))
+        params, new_drag, rnd, buf, adv, trust, metrics = self._flush(*args)
+        self.state = StreamState(
+            params=params, round=rnd, drag=new_drag, buffer=buf,
+            adversary=adv, trust=trust,
+        )
         self.t += 1
         self.ingested = 0
         return metrics
@@ -263,14 +431,19 @@ class StreamExperimentConfig:
     lr: float = 0.01
     beta: float = 0.1  # Dirichlet heterogeneity
     algorithm: str = "drag"
-    attack: str = "none"
+    attack: str = "none"  # any repro.adversary registry name
+    attack_kw: tuple = ()
     malicious_fraction: float = 0.0
     alpha: float = 0.25
     c: float = 0.1
     c_br: float = 0.5
     discount: str = "poly"
     discount_a: float = 0.5
+    trust: bool = False  # divergence-history reputation (drag/br_drag)
+    trust_kw: tuple = ()
     root_samples: int = 3000
+    root_refresh_every: int = 1  # r^t cache coarsening (1 = exact)
+    root_cache: bool = True  # disable to force a D_root pass per flush
     eval_every: int = 10  # in flushes
     seed: int = 0
 
@@ -316,21 +489,36 @@ def run_stream_experiment(
         c_br=exp.c_br,
         discount=exp.discount,
         discount_a=exp.discount_a,
-        attack=exp.attack if exp.attack != "label_flipping" else "none",
+        # label_flipping resolves to a data-space passthrough in the
+        # adversary registry, so it no longer needs host-side special-casing
+        attack=exp.attack,
+        attack_kw=exp.attack_kw,
         n_byzantine_hint=(
             max(int(exp.malicious_fraction * exp.buffer_capacity), 1)
             if exp.malicious_fraction > 0
             else 0
         ),
+        trust=exp.trust,
+        trust_kw=exp.trust_kw,
+        root_refresh_every=exp.root_refresh_every,
     )
+    from repro.adversary.stream_attacks import BiasedLatency
     from repro.stream.events import make_latency
 
-    server = AsyncStreamServer(loss_fn, params, cfg)
+    server = AsyncStreamServer(
+        loss_fn, params, cfg, n_clients=exp.n_workers, root_cache=exp.root_cache
+    )
+    malicious_lookup = lambda m: bool(data.malicious[m])  # noqa: E731
+    latency = make_latency(exp.latency, **dict(exp.latency_kw))
+    if exp.attack != "none":
+        # async-native adversaries shape arrival times (buffer_flood /
+        # staleness_camouflage); for everything else the bias is 1.0
+        latency = BiasedLatency(latency, server.adversary, malicious_lookup)
     stream = EventStream(
         exp.n_workers,
-        make_latency(exp.latency, **dict(exp.latency_kw)),
+        latency,
         seed=exp.seed,
-        malicious_lookup=lambda m: bool(data.malicious[m]),
+        malicious_lookup=malicious_lookup,
     )
 
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
@@ -357,7 +545,7 @@ def run_stream_experiment(
             "y": jnp.asarray(batch_np["y"][0]),
         }
         g = server.client_update(snapshot, batches)
-        server.ingest(g, ev.dispatch_round, ev.malicious)
+        server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
 
         # keep the pipeline full: re-dispatch against the CURRENT model
         ev2 = stream.dispatch(server.t)
@@ -393,4 +581,7 @@ def run_stream_experiment(
     history["final_accuracy"] = history["accuracy"][-1] if history["accuracy"] else 0.0
     history["updates_total"] = stream.completed
     history["updates_per_wall_s"] = stream.completed / max(time.time() - t0, 1e-9)
+    if server.root_cache is not None:
+        history["root_cache_hits"] = server.root_cache.hits
+        history["root_cache_misses"] = server.root_cache.misses
     return history

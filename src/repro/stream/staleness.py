@@ -64,17 +64,17 @@ def make_discount(name: str, a: float = 0.5):
 
 
 def drag_aggregate(
-    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts, weights=None
 ) -> tuple[pt.Pytree, jax.Array]:
     """Staleness-aware DRAG flush: eq. (11) with lambda_m discounted."""
-    return drag.aggregate(updates_stacked, r, c, discounts)
+    return drag.aggregate(updates_stacked, r, c, discounts, weights)
 
 
 def br_drag_aggregate(
-    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts
+    updates_stacked: pt.Pytree, r: pt.Pytree, c, discounts, weights=None
 ) -> tuple[pt.Pytree, jax.Array]:
     """Staleness-aware BR-DRAG flush: eq. (15) with lambda_m discounted."""
-    return br_drag.aggregate(updates_stacked, r, c, discounts)
+    return br_drag.aggregate(updates_stacked, r, c, discounts, weights)
 
 
 def drag_round_step(
@@ -85,11 +85,14 @@ def drag_round_step(
     *,
     alpha: float,
     c: float,
+    weights=None,
 ) -> tuple[pt.Pytree, drag.DragState, dict]:
     """Async analogue of ``drag.round_step`` (same bootstrap semantics:
-    the t = 0 flush applies the raw mean and seeds r^0, eq. 5a)."""
+    the t = 0 flush applies the raw mean and seeds r^0, eq. 5a).
+    ``weights`` are trust reputations (``repro.trust``); None = uniform."""
     return drag.round_step(
-        params, state, updates_stacked, alpha=alpha, c=c, discounts=discounts
+        params, state, updates_stacked, alpha=alpha, c=c,
+        discounts=discounts, weights=weights,
     )
 
 
@@ -100,8 +103,11 @@ def br_drag_round_step(
     discounts,
     *,
     c: float,
+    weights=None,
 ) -> tuple[pt.Pytree, dict]:
-    """Async analogue of ``br_drag.round_step`` given the trusted r^t."""
+    """Async analogue of ``br_drag.round_step`` given the trusted r^t.
+    ``weights`` are trust reputations (``repro.trust``); None = uniform."""
     return br_drag.round_step(
-        params, updates_stacked, reference, c=c, discounts=discounts
+        params, updates_stacked, reference, c=c, discounts=discounts,
+        weights=weights,
     )

@@ -1,0 +1,20 @@
+"""Divergence-history trust layer.
+
+Accumulates the paper's per-round degree-of-divergence signal into
+per-client reputations that weight DRAG/BR-DRAG aggregation and
+quarantine persistent outliers — see ``repro.trust.reputation`` for the
+full design and ``repro.adversary`` for the attacks it answers.
+"""
+# NOTE: the ``reputation`` attribute of this package is the SUBMODULE
+# (so ``from repro.trust import reputation as trust_mod`` works); the
+# function of the same name is reached as ``reputation.reputation`` or
+# via the ``reputation_weights`` alias below.
+from repro.trust.reputation import (  # noqa: F401
+    TrustConfig,
+    TrustState,
+    divergence_signals,
+    init_trust,
+    observe,
+    weighted_mean,
+)
+from repro.trust.reputation import reputation as reputation_weights  # noqa: F401

@@ -1,0 +1,162 @@
+"""Divergence-history reputation: turning the paper's own per-round
+signal into cross-round memory.
+
+DRAG / BR-DRAG compute, every round, a degree of divergence
+lambda_m = c * (1 - cos(g_m, r^t)) — and then throw it away.  A single
+round of high divergence is expected under data heterogeneity; *rounds
+of consistently high divergence* are the signature of an attacker
+(FLTrust-style root-trust, arXiv 2403.13374, and learnable aggregation
+weights, arXiv 2511.03529, exploit the same observation).  This module
+maintains that history and feeds it back into the aggregation:
+
+  * :class:`TrustState` keeps, per client, an EMA of the *undiscounted*
+    cosine divergence d_m = 1 - cos(g_m, r^t) in [0, 2] and of the norm
+    ratio ||g_m|| / ||r^t||, plus an observation count and a sticky
+    quarantine flag.  Tracking the undiscounted divergence is what
+    defeats ``staleness_camouflage``: phi(tau) can shrink the
+    calibration's lambda, but it cannot shrink the history.
+  * :func:`reputation` maps history to multiplicative weights in [0, 1]
+    (1 during warmup, 0 when quarantined) which enter DRAG/BR-DRAG as
+    the third factor of the aggregation chain — per-round calibration
+    c*(1-cos), staleness discount phi(tau), and now the cross-round
+    reputation weighting the calibrated update's share of the mean.
+  * quarantine: once a client's reputation falls below
+    ``quarantine_threshold`` (after ``warmup`` observations) it is
+    excluded permanently — weight exactly 0 — instead of lingering with
+    a tiny weight and re-entering when the EMA decays.
+
+Everything is jit/scan-compatible; the table is fixed-size [M] with
+client ids folded in modulo M, so the lazy event stream's unbounded id
+space maps onto a bounded reputation table (a deliberate O(M) cost —
+reputations are the one per-client thing a robust server must remember;
+collisions under folding blend histories, which degrades gracefully
+toward no-trust).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+_EPS = 1e-12
+
+
+class TrustConfig(NamedTuple):
+    """Static hyper-parameters of the trust layer (hashable for jit)."""
+
+    decay: float = 0.8  # EMA decay of the per-client history
+    div_threshold: float = 1.0  # divergence (1 - cos) treated as benign up to here
+    sensitivity: float = 4.0  # exp slope on excess divergence
+    norm_cap: float = 4.0  # ||g||/||r|| treated as benign up to here
+    norm_sensitivity: float = 1.0  # exp slope on excess norm ratio
+    warmup: float = 2.0  # observations before reputation may drop below 1
+    quarantine_threshold: float = 0.05  # rep below this => permanent exclusion
+
+
+class TrustState(NamedTuple):
+    """Per-client divergence history, [M] leaves (see module docstring)."""
+
+    div_ema: jax.Array  # [M] f32 — EMA of 1 - cos(g_m, r^t)
+    norm_ema: jax.Array  # [M] f32 — EMA of ||g_m|| / ||r^t||
+    seen: jax.Array  # [M] f32 — observation count
+    quarantined: jax.Array  # [M] bool — sticky exclusion flag
+
+
+def init_trust(n_clients: int) -> TrustState:
+    return TrustState(
+        div_ema=jnp.zeros((n_clients,), jnp.float32),
+        norm_ema=jnp.ones((n_clients,), jnp.float32),
+        seen=jnp.zeros((n_clients,), jnp.float32),
+        quarantined=jnp.zeros((n_clients,), bool),
+    )
+
+
+def table_size(state: TrustState) -> int:
+    return state.div_ema.shape[0]
+
+
+def _fold(state: TrustState, client_idx) -> jax.Array:
+    return jnp.asarray(client_idx, jnp.int32) % table_size(state)
+
+
+def _raw_reputation(state: TrustState, cfg: TrustConfig) -> jax.Array:
+    """[M] reputation from the history alone (no warmup/quarantine gating)."""
+    excess_div = jax.nn.relu(state.div_ema - cfg.div_threshold)
+    excess_norm = jax.nn.relu(state.norm_ema - cfg.norm_cap)
+    return jnp.exp(
+        -cfg.sensitivity * excess_div - cfg.norm_sensitivity * excess_norm
+    )
+
+
+def reputation(state: TrustState, client_idx, cfg: TrustConfig) -> jax.Array:
+    """Aggregation weights [S] for the clients at ``client_idx`` ([S] int32).
+
+    1.0 during warmup (no evidence, no penalty), 0.0 when quarantined.
+    """
+    idx = _fold(state, client_idx)
+    rep = _raw_reputation(state, cfg)
+    rep = jnp.where(state.seen >= cfg.warmup, rep, 1.0)
+    rep = jnp.where(state.quarantined, 0.0, rep)
+    return rep[idx]
+
+
+def observe(
+    state: TrustState,
+    client_idx,  # [S] int32
+    divergences,  # [S] f32 — 1 - cos(g_m, r^t), UNdiscounted
+    norm_ratios,  # [S] f32 — ||g_m|| / ||r^t||
+    cfg: TrustConfig,
+    gate=True,  # scalar bool: False = no-op (e.g. DRAG bootstrap round)
+) -> TrustState:
+    """Fold one round of divergence observations into the history.
+
+    The first observation seeds the EMA directly (no zero-bias); later
+    ones decay.  Duplicate ids in one batch (a client occupying several
+    buffer slots) keep the last written slot — one observation per
+    flush, which is the semantics of an EMA over server rounds.
+    Quarantine triggers here, using the post-update history.
+    """
+    idx = _fold(state, client_idx)
+    g = jnp.asarray(gate)
+    div = jnp.asarray(divergences, jnp.float32)
+    nr = jnp.asarray(norm_ratios, jnp.float32)
+
+    first = state.seen[idx] == 0.0
+    new_div = jnp.where(first, div, cfg.decay * state.div_ema[idx] + (1.0 - cfg.decay) * div)
+    new_nr = jnp.where(first, nr, cfg.decay * state.norm_ema[idx] + (1.0 - cfg.decay) * nr)
+
+    div_ema = state.div_ema.at[idx].set(jnp.where(g, new_div, state.div_ema[idx]))
+    norm_ema = state.norm_ema.at[idx].set(jnp.where(g, new_nr, state.norm_ema[idx]))
+    # keep-last .set (not .add) so a client occupying several buffer
+    # slots of ONE flush still counts a single observation — otherwise
+    # it could burn through the warmup protection in one round
+    seen = state.seen.at[idx].set(state.seen[idx] + jnp.where(g, 1.0, 0.0))
+
+    interim = TrustState(div_ema, norm_ema, seen, state.quarantined)
+    rep = _raw_reputation(interim, cfg)
+    quarantined = state.quarantined | (
+        (rep < cfg.quarantine_threshold) & (seen >= cfg.warmup)
+    )
+    return TrustState(div_ema, norm_ema, seen, quarantined)
+
+
+def divergence_signals(updates_stacked: pt.Pytree, reference: pt.Pytree):
+    """Per-worker (1 - cos(g_m, r), ||g_m|| / ||r||) — the two history
+    signals, computed once and shared by sync round and async flush."""
+    r_norm = pt.tree_norm(reference, _EPS)
+
+    def one(g):
+        return (
+            1.0 - pt.cosine_similarity(g, reference),
+            pt.tree_norm(g, _EPS) / r_norm,
+        )
+
+    return jax.vmap(one)(updates_stacked)
+
+
+#: reputation-weighted mean with uniform fallback when all weights are
+#: (near-)zero — e.g. every buffered client quarantined
+weighted_mean = pt.tree_weighted_mean

@@ -1,0 +1,265 @@
+"""Adversary engine tests: registry, adaptive attacks, combinators,
+async-native arrival shaping, and engine parity with the legacy
+one-shot ``core.attacks`` injection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary import engine
+from repro.core import attacks as core_attacks
+from repro.core import pytree as pt
+
+
+def _ups(key, s=8):
+    return {
+        "w": jax.random.normal(key, (s, 5, 3)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (s, 2)),
+    }
+
+
+def _ctx(key, ups, mask, rnd=0, **kw):
+    return engine.AttackContext(
+        key=key, updates=ups, malicious_mask=mask,
+        round=jnp.asarray(rnd, jnp.int32), **kw,
+    )
+
+
+MASK = jnp.array([True, True, True, False, False, False, False, False])
+
+
+class TestRegistry:
+    def test_all_names_resolve_and_craft(self):
+        key = jax.random.PRNGKey(0)
+        ups = _ups(key)
+        for name in engine.names():
+            kw = {"phases": ((0, "sign_flipping"),)} if name == "schedule" else None
+            adv = engine.resolve(name, kw)
+            out, state = adv.craft(adv.init(), _ctx(key, ups, MASK))
+            assert jax.tree.structure(out) == jax.tree.structure(ups), name
+            # benign rows never touched, under ANY attack
+            np.testing.assert_allclose(
+                np.asarray(out["w"][3:]), np.asarray(ups["w"][3:]), rtol=1e-6,
+                err_msg=name,
+            )
+
+    def test_unknown_attack_raises(self):
+        with pytest.raises(KeyError, match="unknown attack"):
+            engine.resolve("nope")
+
+    def test_stateless_wrappers_match_core_attacks_bitwise(self):
+        """Legacy configs behave bit-for-bit: the engine's stateless
+        entries ARE core.attacks."""
+        key = jax.random.PRNGKey(1)
+        ups = _ups(key)
+        for name in ("noise_injection", "sign_flipping", "gaussian", "alie", "ipm"):
+            adv = engine.resolve(name)
+            got, _ = adv.craft((), _ctx(key, ups, MASK))
+            want = core_attacks.UPDATE_ATTACKS[name](key, ups, MASK)
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), name
+
+
+class TestMinMax:
+    def test_stays_within_benign_radius(self):
+        """The crafted upload's distance to every benign update is at
+        most the max pairwise benign distance (the defining property)."""
+        key = jax.random.PRNGKey(2)
+        ups = _ups(key)
+        adv = engine.resolve("min_max")
+        out, _ = adv.craft((), _ctx(key, ups, MASK))
+        flat = np.stack([np.asarray(pt.tree_flatten_vector(pt.tree_index(out, i))) for i in range(8)])
+        orig = np.stack([np.asarray(pt.tree_flatten_vector(pt.tree_index(ups, i))) for i in range(8)])
+        benign = orig[3:]
+        d_max = max(
+            np.linalg.norm(a - b) for a in benign for b in benign
+        )
+        crafted = flat[0]
+        for g in benign:
+            assert np.linalg.norm(crafted - g) <= d_max * (1 + 1e-4)
+        # all colluders upload the same crafted vector
+        np.testing.assert_allclose(flat[0], flat[1])
+        # and it actually moved (gamma > 0)
+        assert np.linalg.norm(crafted - orig[0]) > 0
+
+    def test_all_malicious_stack_stays_finite(self):
+        """Empty benign set: gamma has nothing to calibrate against —
+        the craft must degrade gracefully, never emit NaN."""
+        key = jax.random.PRNGKey(8)
+        ups = _ups(key)
+        out, _ = engine.resolve("min_max").craft(
+            (), _ctx(key, ups, jnp.ones(8, bool))
+        )
+        assert not bool(pt.tree_any_nan(out))
+
+    def test_opposes_benign_mean(self):
+        key = jax.random.PRNGKey(3)
+        ups = _ups(key)
+        out, _ = engine.resolve("min_max").craft((), _ctx(key, ups, MASK))
+        mu = np.asarray(
+            pt.tree_flatten_vector(jax.tree.map(lambda x: jnp.mean(x[3:], 0), ups))
+        )
+        crafted = np.asarray(pt.tree_flatten_vector(pt.tree_index(out, 0)))
+        # crafted = mu + gamma * (-mu/||mu||): strictly shorter along mu
+        assert float(crafted @ mu) < float(mu @ mu)
+
+
+class TestMimic:
+    def test_victim_is_benign_and_persistent(self):
+        key = jax.random.PRNGKey(4)
+        adv = engine.resolve("mimic")
+        state = adv.init()
+        ups1 = _ups(key)
+        out1, state = adv.craft(state, _ctx(key, ups1, MASK, rnd=0))
+        victim = int(state["victim"])
+        assert victim >= 3  # a benign stack position
+        assert bool(state["chosen"])
+        # colluders replay the victim's genuine update
+        np.testing.assert_allclose(
+            np.asarray(out1["w"][0]), np.asarray(ups1["w"][victim])
+        )
+        # next round, DIFFERENT updates: victim position must not move
+        ups2 = _ups(jax.random.fold_in(key, 9))
+        out2, state2 = adv.craft(state, _ctx(key, ups2, MASK, rnd=1))
+        assert int(state2["victim"]) == victim
+        np.testing.assert_allclose(
+            np.asarray(out2["w"][1]), np.asarray(ups2["w"][victim])
+        )
+
+
+class TestCombinators:
+    def test_schedule_switches_at_threshold(self):
+        key = jax.random.PRNGKey(5)
+        ups = _ups(key)
+        adv = engine.resolve(
+            "schedule", {"phases": ((2, "sign_flipping"), (5, "ipm"))}
+        )
+        state = adv.init()
+        # t=0: before the first phase -> benign
+        out, state = adv.craft(state, _ctx(key, ups, MASK, rnd=0))
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(ups["w"]))
+        # t=3: sign flipping
+        out, state = adv.craft(state, _ctx(key, ups, MASK, rnd=3))
+        want, _ = engine.resolve("sign_flipping").craft((), _ctx(key, ups, MASK))
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(want["w"]))
+        # t=7: ipm
+        out, state = adv.craft(state, _ctx(key, ups, MASK, rnd=7))
+        want, _ = engine.resolve("ipm").craft((), _ctx(key, ups, MASK))
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want["w"]), rtol=1e-6)
+
+    def test_schedule_works_under_jit_and_scan(self):
+        key = jax.random.PRNGKey(6)
+        ups = _ups(key)
+        adv = engine.resolve("schedule", {"phases": ((1, "sign_flipping"),)})
+
+        def step(state, t):
+            out, state = adv.craft(state, _ctx(key, ups, MASK, rnd=t))
+            return state, jnp.mean(out["w"])
+
+        _, means = jax.lax.scan(step, adv.init(), jnp.arange(3, dtype=jnp.int32))
+        assert np.isfinite(np.asarray(means)).all()
+
+    def test_ramp_monotone_fade_in(self):
+        key = jax.random.PRNGKey(7)
+        ups = _ups(key)
+        adv = engine.resolve("ramp", {"inner": "sign_flipping", "rounds": 4})
+        full, _ = engine.resolve("sign_flipping").craft((), _ctx(key, ups, MASK))
+        dists = []
+        for t in range(5):
+            out, _ = adv.craft(adv.init(), _ctx(key, ups, MASK, rnd=t))
+            dists.append(float(pt.tree_norm(pt.tree_sub(out, ups))))
+        assert dists[0] == 0.0  # t=0: no attack yet
+        assert all(b >= a for a, b in zip(dists, dists[1:]))  # fades in
+        out4, _ = adv.craft(adv.init(), _ctx(key, ups, MASK, rnd=4))
+        np.testing.assert_allclose(
+            np.asarray(out4["w"]), np.asarray(full["w"]), rtol=1e-6
+        )  # saturated
+
+
+class TestStreamAttacks:
+    def test_latency_bias_directions(self):
+        flood = engine.resolve("buffer_flood", {"speedup": 0.1})
+        camo = engine.resolve("staleness_camouflage", {"slowdown": 6.0})
+        for cid in range(20):
+            assert flood.latency_bias(cid, True) < 0.2  # races the buffer
+            assert flood.latency_bias(cid, False) == 1.0
+            assert camo.latency_bias(cid, True) > 4.0  # holds the upload
+            assert camo.latency_bias(cid, False) == 1.0
+        # hash-jittered, deterministic
+        assert flood.latency_bias(3, True) == flood.latency_bias(3, True)
+        assert len({flood.latency_bias(i, True) for i in range(20)}) > 10
+
+    def test_buffer_flood_crowds_the_buffer(self):
+        """With 30% byzantine population, the first K completions under
+        flood bias are majority-byzantine — the attack raises the
+        effective fraction above the population fraction."""
+        from repro.adversary.stream_attacks import BiasedLatency
+        from repro.stream.events import EventStream, make_latency
+
+        adv = engine.resolve("buffer_flood", {"speedup": 0.05})
+        es_ref = EventStream(1000, "constant", seed=3, malicious_fraction=0.3)
+        lat = BiasedLatency(make_latency("constant"), adv, es_ref.is_malicious)
+        es = EventStream(1000, lat, seed=3, malicious_fraction=0.3)
+        for _ in range(64):
+            es.dispatch(0)
+        first = [es.next_completion().malicious for _ in range(16)]
+        assert np.mean(first) > 0.5
+
+    def test_camouflage_arrives_stale(self):
+        """Under camouflage, malicious completions arrive later than the
+        benign median — the phi(tau) discount they hide behind."""
+        from repro.adversary.stream_attacks import BiasedLatency
+        from repro.stream.events import EventStream, make_latency
+
+        adv = engine.resolve("staleness_camouflage", {"slowdown": 8.0})
+        es_ref = EventStream(1000, "constant", seed=4, malicious_fraction=0.3)
+        lat = BiasedLatency(make_latency("constant"), adv, es_ref.is_malicious)
+        es = EventStream(1000, lat, seed=4, malicious_fraction=0.3)
+        for _ in range(64):
+            es.dispatch(0)
+        times = {True: [], False: []}
+        for _ in range(64):
+            ev = es.next_completion()
+            times[ev.malicious].append(ev.completion_time)
+        assert min(times[True]) > max(times[False])
+
+
+class TestRoundIntegration:
+    def test_stateful_attack_through_federated_round(self):
+        """mimic's memory threads through the jitted round via ServerState."""
+        from repro.fl.round import RoundConfig, init_server_state, make_round_fn
+
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+        params = {"w": jnp.zeros((3, 1))}
+        cfg = RoundConfig(algorithm="fedavg", attack="mimic", local_steps=2, lr=0.1)
+        state = init_server_state(params, 6, cfg)
+        fn = make_round_fn(loss_fn, cfg, with_root=False)
+        key = jax.random.PRNGKey(0)
+        batches = {
+            "x": jax.random.normal(key, (6, 2, 4, 3)),
+            "y": jax.random.normal(jax.random.fold_in(key, 1), (6, 2, 4, 1)),
+        }
+        mask = jnp.array([True, True, False, False, False, False])
+        sel = jnp.arange(6, dtype=jnp.int32)
+        state, _ = fn(state, batches, sel, mask, key)
+        assert bool(state.adversary["chosen"])
+        v0 = int(state.adversary["victim"])
+        state, _ = fn(state, batches, sel, mask, jax.random.fold_in(key, 2))
+        assert int(state.adversary["victim"]) == v0
+
+    def test_stateful_attack_without_cfg_init_raises(self):
+        from repro.fl.round import RoundConfig, federated_round, init_server_state
+
+        params = {"w": jnp.zeros((3, 1))}
+        cfg = RoundConfig(algorithm="fedavg", attack="mimic", local_steps=1)
+        state = init_server_state(params, 4)  # no cfg -> empty adversary state
+        key = jax.random.PRNGKey(0)
+        batches = {"x": jnp.zeros((4, 1, 2, 3)), "y": jnp.zeros((4, 1, 2, 1))}
+        with pytest.raises(ValueError, match="carries state"):
+            federated_round(
+                lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2),
+                state, cfg, batches, jnp.arange(4, dtype=jnp.int32),
+                jnp.zeros(4, bool), key,
+            )

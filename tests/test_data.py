@@ -78,3 +78,60 @@ class TestPipeline:
         b1 = data.sample_round(np.random.RandomState(3), [0, 1], 2, 4)
         b2 = data.sample_round(np.random.RandomState(3), [0, 1], 2, 4)
         np.testing.assert_array_equal(b1["x"], b2["x"])
+
+
+class TestLabelFlipping:
+    """ISSUE satellite: the data-space attack flows end to end from
+    ``core.attacks.flip_labels`` through the pipeline into the batches a
+    malicious client trains on."""
+
+    def _paired(self, flip_fraction):
+        import dataclasses
+
+        clean = build_federated_data("cifar10", 6, 0.5, seed=0)
+        poisoned = dataclasses.replace(
+            build_federated_data(
+                "cifar10", 6, 0.5, malicious_fraction=0.5,
+                attack="label_flipping", seed=0,
+            ),
+            flip_fraction=flip_fraction,
+        )
+        # same seed -> identical underlying data and partitions
+        np.testing.assert_array_equal(clean.y, poisoned.y)
+        return clean, poisoned
+
+    def test_malicious_clients_train_on_flipped_labels(self):
+        """With flip_fraction=1 a malicious client's sampled labels are
+        EXACTLY L - l - 1 of the clean pipeline's labels; x untouched."""
+        clean, poisoned = self._paired(flip_fraction=1.0)
+        mal = int(np.where(poisoned.malicious)[0][0])
+        b_clean = clean.sample_round(np.random.RandomState(7), [mal], 3, 5)
+        b_mal = poisoned.sample_round(np.random.RandomState(7), [mal], 3, 5)
+        np.testing.assert_array_equal(b_clean["x"], b_mal["x"])
+        np.testing.assert_array_equal(
+            b_mal["y"], poisoned.n_classes - b_clean["y"] - 1
+        )
+
+    def test_benign_clients_and_root_data_unaffected(self):
+        clean, poisoned = self._paired(flip_fraction=1.0)
+        ben = int(np.where(~poisoned.malicious)[0][0])
+        b_clean = clean.sample_round(np.random.RandomState(9), [ben], 2, 4)
+        b_ben = poisoned.sample_round(np.random.RandomState(9), [ben], 2, 4)
+        np.testing.assert_array_equal(b_clean["y"], b_ben["y"])
+        root = poisoned.root_batches(np.random.RandomState(11), 2, 4, 500)
+        assert root["y"].min() >= 0 and root["y"].max() < poisoned.n_classes
+
+    def test_partial_flip_fraction(self):
+        """The paper's 50% flip: about half the malicious samples move,
+        and every moved label is the involutive L - l - 1 image."""
+        clean, poisoned = self._paired(flip_fraction=0.5)
+        mal = int(np.where(poisoned.malicious)[0][0])
+        b_clean = clean.sample_round(np.random.RandomState(13), [mal], 5, 20)
+        b_mal = poisoned.sample_round(np.random.RandomState(13), [mal], 5, 20)
+        flipped = b_mal["y"] != b_clean["y"]
+        # ~Binomial(100, .5) minus self-flips (l == L - l - 1 is impossible
+        # for even n_classes); allow a wide seeded band
+        assert 0.3 < flipped.mean() < 0.7
+        np.testing.assert_array_equal(
+            b_mal["y"][flipped], poisoned.n_classes - b_clean["y"][flipped] - 1
+        )

@@ -1,0 +1,92 @@
+"""Break-rate invariants on the scenario lab (ISSUE 2 satellite): the
+repo-level guarantees the robustness benchmark sweeps, pinned as tests.
+
+Fast tier: at 40% byzantine on the seeded synthetic federation, plain
+FedAvg's loss DIVERGES under ALIE and (aggregate-reversing) IPM — it
+leaves the attack-free envelope by more than the break factor — while
+BR-DRAG stays within 2x of its own attack-free trajectory, pointwise.
+
+Slow tier (``-m slow``): a miniature scenario matrix through the actual
+benchmark code path, checking the BENCH_robustness acceptance invariant
+(trust-weighted BR-DRAG beats FedAvg in every byzantine cell).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.adversary.scenarios import Scenario, run_cell, run_scenario
+
+BYZ = 0.4
+BREAK_FACTOR = 5.0
+ATTACKS = {
+    "alie": (),
+    "ipm": (("eps", 2.0),),
+}
+
+
+def _pair(aggregator, attack, seed=0, **kw):
+    attacked = run_scenario(
+        Scenario(aggregator=aggregator, attack=attack,
+                 attack_kw=ATTACKS[attack], malicious_fraction=BYZ, seed=seed, **kw)
+    )
+    clean = run_scenario(
+        Scenario(aggregator=aggregator, attack="none",
+                 malicious_fraction=BYZ, seed=seed, **kw)
+    )
+    return attacked, clean
+
+
+@pytest.mark.parametrize("attack", sorted(ATTACKS))
+def test_fedavg_breaks_under_adaptive_attacks(attack):
+    """FedAvg at 40% byzantine: final loss leaves the attack-free
+    envelope (the benchmark's 'broke' definition)."""
+    attacked, clean = _pair("fedavg", attack)
+    assert attacked["final_loss"] > BREAK_FACTOR * clean["final_loss"]
+
+
+@pytest.mark.parametrize("attack", sorted(ATTACKS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_br_drag_stays_within_2x_of_attack_free(attack, seed):
+    """BR-DRAG under the same attacks: the WHOLE trajectory stays within
+    2x of the attack-free trajectory (after the transient of the first
+    few rounds, where both are dominated by the far-out init)."""
+    attacked, clean = _pair("br_drag", attack, seed=seed)
+    ratio = attacked["losses"][3:] / np.maximum(clean["losses"][3:], 1e-9)
+    assert np.isfinite(attacked["losses"]).all()
+    assert float(ratio.max()) <= 2.0
+
+
+def test_break_rate_cell_semantics():
+    """run_cell flags fedavg/ipm as broken on every seed and br_drag on
+    none — the two poles of the benchmark matrix."""
+    sc = Scenario(aggregator="fedavg", attack="ipm", attack_kw=ATTACKS["ipm"],
+                  malicious_fraction=BYZ)
+    cell = run_cell(sc, BREAK_FACTOR, seeds=(0, 1))
+    assert cell["break_rate"] == 1.0
+    cell = run_cell(dataclasses.replace(sc, aggregator="br_drag"),
+                    BREAK_FACTOR, seeds=(0, 1))
+    assert cell["break_rate"] == 0.0
+
+
+@pytest.mark.slow
+def test_mini_scenario_matrix_acceptance():
+    """Miniature sweep through the benchmark's own code path: the
+    acceptance invariant (br_drag_trust < fedavg on final loss in every
+    byzantine cell, sync and async) holds on the reduced grid."""
+    import benchmarks.robustness_bench as bench
+
+    cells = []
+    for agg in ("fedavg", "br_drag_trust"):
+        proto = Scenario(aggregator=agg, heterogeneity=1.0, rounds=30)
+        baselines = {
+            0: run_scenario(dataclasses.replace(proto, attack="none"))["final_loss"]
+        }
+        for attack, kw in bench.ATTACKS:
+            cell = run_cell(
+                dataclasses.replace(proto, attack=attack, attack_kw=kw),
+                bench.BREAK_FACTOR, seeds=(0,), baselines=baselines,
+            )
+            cells.append(cell)
+    acceptance = bench.check_acceptance(cells, [])
+    assert acceptance["br_drag_trust_beats_fedavg"], acceptance["failures"]

@@ -199,7 +199,7 @@ def test_flush_through_every_nonreference_rule():
         for i in range(6):
             g = {"w": jax.random.normal(jax.random.fold_in(key, i), (4, 2))}
             buf = buf_mod.ingest(buf, g, i, False)
-        params, _, rnd, buf2, metrics = flush(
+        params, _, rnd, buf2, _, _, metrics = flush(
             None, cfg, p, drag.init_state(p), jnp.int32(6), buf, key
         )
         assert int(rnd) == 7 and int(buf2.count) == 0
@@ -219,7 +219,7 @@ def test_flush_through_every_nonreference_rule():
     buf = buf_mod.init_buffer(p, 6)
     for i in range(6):
         buf = buf_mod.ingest(buf, {"w": jnp.ones((4, 2))}, i, False)
-    params, dstate, _, _, metrics = flush(
+    params, dstate, _, _, _, _, metrics = flush(
         None, cfg, p, drag.init_state(p), jnp.int32(0), buf, key
     )
     assert bool(dstate.initialized) and float(metrics["delta_norm"]) > 0.0
@@ -365,3 +365,81 @@ class TestAsyncServer:
         )
         h = run_stream_experiment(exp)
         assert max(h["staleness_mean"]) > 0.0
+
+    def test_client_ids_ride_the_buffer(self):
+        p = _params()
+        buf = buf_mod.init_buffer(p, 3)
+        for cid in (11, 5, 7):
+            buf = buf_mod.ingest(buf, p, 0, False, client_id=cid)
+        np.testing.assert_array_equal(np.asarray(buf.client_ids), [11, 5, 7])
+
+    def test_async_attack_with_trust_runs(self):
+        """Async-native attack + trust-weighted BR-DRAG end to end on the
+        real data pipeline."""
+        exp = StreamExperimentConfig(
+            n_workers=10, concurrency=8, flushes=6, buffer_capacity=4,
+            latency="uniform", local_steps=2, batch_size=4,
+            algorithm="br_drag", attack="staleness_camouflage",
+            malicious_fraction=0.3, trust=True,
+            discount="poly", eval_every=6, root_samples=300, seed=3,
+        )
+        h = run_stream_experiment(exp)
+        assert np.isfinite(h["final_accuracy"]) and h["final_accuracy"] > 0.0
+
+
+# ------------------------------------------------------ root-reference cache
+class TestRootReferenceCache:
+    def _setup(self, **cfg_kw):
+        from repro.stream.server import AsyncStreamServer, StreamConfig
+
+        def loss_fn(p, batch):
+            return jnp.mean((p["w"] - batch["x"]) ** 2)
+
+        p = {"w": jnp.arange(8.0)}
+        cfg = StreamConfig(algorithm="br_drag", buffer_capacity=2,
+                           local_steps=2, lr=0.1, **cfg_kw)
+        server = AsyncStreamServer(loss_fn, p, cfg)
+        root = {"x": jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))}
+        return server, root
+
+    def test_hit_serves_bitwise_identical_reference(self):
+        """Cache-hit and cache-miss agree bit-for-bit at one version."""
+        server, root = self._setup()
+        r_miss = server.root_reference(root)
+        assert (server.root_cache.misses, server.root_cache.hits) == (1, 0)
+        r_hit = server.root_reference(root)
+        assert server.root_cache.hits == 1
+        np.testing.assert_array_equal(np.asarray(r_miss["w"]), np.asarray(r_hit["w"]))
+        # a cold recompute (cache cleared) is also bitwise identical
+        server.root_cache.clear()
+        r_cold = server.root_reference(root)
+        np.testing.assert_array_equal(np.asarray(r_hit["w"]), np.asarray(r_cold["w"]))
+
+    def test_refresh_every_amortises_the_root_pass(self):
+        server, root = self._setup(root_refresh_every=3)
+        key = jax.random.PRNGKey(1)
+        for t in range(6):
+            for i in range(2):
+                g = {"w": jax.random.normal(jax.random.fold_in(key, 10 * t + i), (8,))}
+                server.ingest(g, server.t, False, client_id=i)
+            assert server.flush_if_ready(key, root) is not None
+        # versions 0-5 with refresh 3 -> D_root pass at {0,1,2}->1, {3,4,5}->1
+        assert server.root_cache.misses == 2
+        assert server.root_cache.hits == 4
+
+    def test_cache_on_off_parity_bit_for_bit(self):
+        """ISSUE satellite: a cached run (refresh_every=1, the exact
+        setting) and an uncached run produce the identical trajectory."""
+        hists = []
+        for cache in (True, False):
+            exp = StreamExperimentConfig(
+                n_workers=8, concurrency=6, flushes=5, buffer_capacity=3,
+                latency="exponential", local_steps=2, batch_size=4,
+                algorithm="br_drag", discount="poly", eval_every=1,
+                root_samples=200, seed=4, root_cache=cache,
+            )
+            hists.append(run_stream_experiment(exp))
+        a, b = hists
+        assert a["accuracy"] == b["accuracy"]  # exact float equality
+        assert a["update_norm"] == b["update_norm"]
+        assert a["root_cache_misses"] == 5 and b["root_cache_misses"] == 5
