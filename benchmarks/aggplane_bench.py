@@ -1,0 +1,168 @@
+"""Aggregation-plane benchmark: pytree oracle vs flat serving path.
+
+ISSUE 3 satellite.  One trust-enabled, staleness-discounted DRAG flush
+is measured two ways:
+
+  * PYTREE oracle (`core.drag.aggregate` + `trust.divergence_signals`):
+    the pre-refactor serving path.  It traverses the stacked updates
+    four times — dots/norms for the DoD, the blend, the weighted mean
+    over the materialised calibrated stack, and a separate full
+    divergence pass for the trust layer — plus it writes AND re-reads
+    the [S, d]-sized calibrated stack V.
+  * FLAT plane (`core.drag.aggregate_flat` + `trust.signals_from_stats`):
+    two fused kernel passes over G (`dot_norms` + `blend_reduce`), the
+    trust signals reconstructed from the phase-1 scalars for free, V
+    never materialised.
+
+Writes ``BENCH_aggplane.json``::
+
+    {"cells": {cell: {"tree_us", "flat_us", "speedup"}},
+     "hbm_passes": {"tree": .., "flat": 2,
+                    "flush_kernel_calls": {"dot_norms": 1,
+                                           "blend_reduce": 1, "blend": 0}}}
+
+``flush_kernel_calls`` is counted live on a real stream flush with
+trust + staleness enabled — the acceptance evidence that a whole flush
+is exactly two HBM passes over the stacked updates.  CSV rows
+(``benchmarks.common.emit``) ride along.  NOTE: on this CPU container
+the kernels run in interpret mode, so ``*_us`` measures program
+structure, not Mosaic performance; the pass counts are the
+hardware-relevant quantity.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, timeit
+from repro.core import drag
+from repro.core import flat as flat_mod
+from repro.core import pytree as pt
+from repro.trust import reputation as trust_mod
+
+# (S, per-leaf sizes): multi-leaf pytrees so the oracle path pays the
+# per-leaf traversal it pays in production
+CELLS = (
+    [(16, (1 << 12, 1 << 13, 257))]
+    if FAST
+    else [
+        (16, (1 << 12, 1 << 13, 257)),
+        (16, (1 << 16, 1 << 15, 4099)),
+        (64, (1 << 16, 1 << 15, 4099)),
+    ]
+)
+
+
+def _setup(s: int, leaf_sizes: tuple[int, ...]):
+    key = jax.random.PRNGKey(0)
+    ups = {
+        f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i), (s, n))
+        for i, n in enumerate(leaf_sizes)
+    }
+    r = jax.tree.map(lambda x: x[0] * 0.5 + 0.1, ups)
+    discounts = jnp.linspace(1.0, 0.25, s)
+    weights = jnp.linspace(0.2, 1.0, s)
+    return ups, r, discounts, weights
+
+
+def bench_cell(s: int, leaf_sizes: tuple[int, ...]) -> dict:
+    ups, r, discounts, weights = _setup(s, leaf_sizes)
+    d = sum(leaf_sizes)
+
+    @jax.jit
+    def tree_path(ups, r, discounts, weights):
+        delta, lams = drag.aggregate(ups, r, 0.3, discounts, weights)
+        div, nr = trust_mod.divergence_signals(ups, r)
+        return delta, lams, div, nr
+
+    @jax.jit
+    def flat_path(g, r_flat, discounts, weights):
+        delta, lam, stats = drag.aggregate_flat(
+            g, r_flat, 0.3, discounts=discounts, weights=weights
+        )
+        div, nr = trust_mod.signals_from_stats(*stats)
+        return delta, lam, div, nr
+
+    g = flat_mod.flatten_stacked(ups)
+    r_flat = flat_mod.flatten_tree(r)
+
+    iters = 5 if FAST else 20
+    tree_s = timeit(tree_path, ups, r, discounts, weights, iters=iters)
+    flat_s = timeit(flat_path, g, r_flat, discounts, weights, iters=iters)
+    cell = f"S{s}_d{d}"
+    stack_bytes = s * d * 4
+    rec = {
+        "S": s,
+        "d": d,
+        "tree_us": tree_s * 1e6,
+        "flat_us": flat_s * 1e6,
+        "speedup": tree_s / flat_s,
+        "stack_mb": stack_bytes / 1e6,
+        # the roofline quantity (the op is memory-bound): bytes moved
+        # through HBM per flush on real hardware — 4 G reads + V write +
+        # V read for the oracle vs 2 G reads for the fused path
+        "hbm_mb_tree": 6 * stack_bytes / 1e6,
+        "hbm_mb_flat": 2 * stack_bytes / 1e6,
+        "hbm_traffic_ratio": 3.0,
+    }
+    emit(f"aggplane/tree/{cell}", tree_s * 1e6, f"{rec['hbm_mb_tree']:.1f}MB-HBM")
+    emit(f"aggplane/flat/{cell}", flat_s * 1e6, f"{rec['hbm_mb_flat']:.1f}MB-HBM")
+    return cell, rec
+
+
+def count_flush_kernel_calls() -> dict:
+    """Count Pallas kernel invocations in ONE eager stream flush with
+    trust + staleness enabled (the acceptance configuration), using the
+    shared probe in ``repro.kernels.instrument``."""
+    from repro.kernels.instrument import count_kernel_calls
+    from repro.stream import buffer as buf_mod
+    from repro.stream.server import StreamConfig, flush, init_stream_state
+
+    p = {"w": jnp.ones((1 << 10,)), "b": jnp.zeros((37,))}
+    cfg = StreamConfig(algorithm="drag", buffer_capacity=8, trust=True,
+                       discount="poly")
+    state = init_stream_state(p, 8, cfg, n_clients=16)
+    key = jax.random.PRNGKey(1)
+    buf = state.buffer
+    for i in range(8):
+        gi = jax.tree.map(
+            lambda x: x + jax.random.normal(jax.random.fold_in(key, i), x.shape),
+            p,
+        )
+        buf = buf_mod.ingest(buf, gi, 0, False, client_id=i)
+    with count_kernel_calls() as calls:
+        flush(None, cfg, state.params, state.drag, state.round, buf, key,
+              adv_state=state.adversary, trust_state=state.trust)
+    return dict(calls)
+
+
+def run() -> None:
+    cells = {}
+    for s, sizes in CELLS:
+        cell, rec = bench_cell(s, sizes)
+        cells[cell] = rec
+    from repro.kernels.instrument import TWO_PASS_CALLS
+
+    kernel_calls = count_flush_kernel_calls()
+    assert kernel_calls == TWO_PASS_CALLS, (
+        f"flush is no longer two kernel passes: {kernel_calls}"
+    )
+    record = {
+        "cells": cells,
+        "hbm_passes": {
+            # pytree oracle: dots/norms + blend + weighted mean + trust
+            # divergence pass over G, plus write+read of the calibrated V
+            "tree": {"g_passes": 4, "v_write_read": 2},
+            "flat": {"g_passes": 2, "v_write_read": 0},
+            "flush_kernel_calls": kernel_calls,
+        },
+    }
+    with open("BENCH_aggplane.json", "w") as f:
+        json.dump(record, f, indent=2)
+    print("wrote BENCH_aggplane.json", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,7 @@ def main() -> None:
 
     # imports AFTER env so benchmarks.common picks the flags up
     from benchmarks import (
+        aggplane_bench,
         fig3_5_drag,
         fig6_participation,
         fig7_8_hparams,
@@ -50,6 +51,7 @@ def main() -> None:
         "roofline": roofline,
         "stream": stream_bench,
         "robustness": robustness_bench,
+        "aggplane": aggplane_bench,
     }
     selected = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

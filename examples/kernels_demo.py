@@ -42,6 +42,34 @@ def main():
         check(f"drag_calibrate[{mode}] lambda", lam, lam_ref)
     print("  one HBM pass for dots/norms + one for the blend (vs 4 naive)")
 
+    banner("Flat serving path: whole flush = 2 HBM passes (ISSUE 3)")
+    # This is what repro.fl.round / repro.stream.server actually execute:
+    # staleness discounts + trust weights folded into the blend_reduce
+    # epilogue, trust signals free from the phase-1 scalars, and the
+    # calibrated stack V NEVER materialised.
+    from repro.trust.reputation import signals_from_stats
+
+    discounts = jnp.linspace(1.0, 0.5, 8)  # phi(tau) per buffered slot
+    weights = jnp.linspace(0.25, 1.0, 8)  # trust reputations
+    delta, lam, stats = ops.drag_calibrate_reduce(
+        g, r, 0.25, "drag", discounts=discounts, weights=weights
+    )
+    # oracle: materialise V, weighted mean, separate trust pass
+    a, b, lam_ref = ref.calibrate_coeffs(*ref.dot_norms_ref(g, r), 0.25, "drag",
+                                         discounts)
+    v_ref = ref.blend_ref(g, r, a, b)
+    w = weights / jnp.sum(weights)
+    check("flush delta (2-pass vs oracle)", delta, w @ v_ref.astype(jnp.float32))
+    check("flush lambda", lam, lam_ref)
+    div, nr = signals_from_stats(*stats)
+    gn = jnp.linalg.norm(g, axis=1)
+    rn = jnp.linalg.norm(r)
+    check("trust divergence (free from pass 1)", div,
+          1.0 - (g @ r) / (gn * rn), tol=1e-3)
+    check("trust norm ratio (free from pass 1)", nr, gn / rn, tol=1e-3)
+    print("  dot_norms + blend_reduce: 2 HBM passes over G for the WHOLE")
+    print("  trust-weighted staleness-aware flush; V:[S,d] never written")
+
     banner("Weiszfeld geometric median (RFA/RAGA)")
     z = ops.geometric_median(g, iters=8)
     z_ref = g.astype(jnp.float32)

@@ -42,10 +42,19 @@ from repro.core import pytree as pt
 class AttackContext(NamedTuple):
     """Everything the (omniscient) adversary sees when crafting uploads.
 
-    ``updates`` is the honest stacked ``[S, ...]`` pytree *before* any
-    tampering; ``taus``/``discounts`` are the async staleness tags and
-    phi(tau) factors of the buffered slots (None in the synchronous
-    round).  ``round`` is the server version t as an int32 scalar.
+    ``updates`` is the honest stack *before* any tampering.  On the
+    serving path this is the flat ``[S, d]`` update matrix
+    (``repro.core.flat``) — a single-leaf pytree, so every attack built
+    from pytree algebra works on it unchanged while adaptive attacks
+    (ALIE / IPM / min-max / mimic) reduce to simple row algebra with no
+    per-leaf walking.  Attacks also accept stacked ``[S, ...]`` update
+    pytrees (the oracle path and the attack unit tests).
+
+    ``taus``/``discounts`` are the async staleness tags and phi(tau)
+    factors of the buffered slots (None in the synchronous round);
+    ``round`` is the server version t as an int32 scalar; ``spec``
+    (flat path only) is the static :class:`~repro.core.flat.StackSpec`
+    should an attack need the row -> pytree correspondence.
     """
 
     key: object
@@ -54,6 +63,7 @@ class AttackContext(NamedTuple):
     round: object  # [] int32
     taus: object = None  # [S] int32 | None
     discounts: object = None  # [S] float32 | None
+    spec: object = None  # StackSpec | None (flat serving path)
 
 
 class Adversary:

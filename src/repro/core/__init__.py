@@ -1,3 +1,7 @@
 """Core: the paper's contribution — DRAG / BR-DRAG aggregation — plus the
-baseline aggregators and attack models it is evaluated against."""
-from repro.core import aggregators, attacks, br_drag, drag, pytree  # noqa: F401
+baseline aggregators and attack models it is evaluated against.
+
+``flat`` is the canonical serving representation (the [S, d] update
+plane); the stacked-pytree forms are retained as the numerical oracle.
+"""
+from repro.core import aggregators, attacks, br_drag, drag, flat, pytree  # noqa: F401

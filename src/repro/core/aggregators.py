@@ -9,6 +9,15 @@ All aggregators share one signature over *stacked* update pytrees
 
     delta = AGGREGATORS[name](updates_stacked, **kwargs)
 
+The SERVING representation is the flat ``[S, d]`` plane
+(``repro.core.flat``): every rule also has a flat twin in
+:data:`FLAT_AGGREGATORS` operating on the raw update matrix and
+returning a flat ``[d]`` delta — trimmed mean and the geometric median
+route through the Pallas kernels (``repro.kernels``), the distance
+rules become plain row algebra.  The pytree forms below are retained as
+the numerical oracle the flat tier is pinned against
+(``tests/test_flat.py``).
+
 Client-side algorithm variants (FedProx, SCAFFOLD, FedACG local terms)
 live in ``repro.fl.client`` since they modify the local objective, not
 the reduction.
@@ -22,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import br_drag, drag
 from repro.core import pytree as pt
+from repro.kernels import ops as kops
 
 EPS = 1e-12
 
@@ -97,17 +107,36 @@ raga = geometric_median
 
 
 # ------------------------------------------------------------------ Krum
+def _krum_scores(flat: jax.Array, n_byzantine: int) -> jax.Array:
+    """Per-worker Krum scores over the flat [S, d] stack (shared by the
+    pytree and flat tiers of krum / multi_krum / bulyan).
+
+    Pairwise distances via the Gram matrix — O(S d + S^2) memory, never
+    the [S, S, d] broadcast difference tensor (4 GB at S=64, d=2^18;
+    same trick as the min_max attack in ``repro.adversary.attacks``).
+    """
+    s = flat.shape[0]
+    f32 = flat.astype(jnp.float32)
+    sq = jnp.sum(f32 * f32, axis=-1)  # [S]
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (f32 @ f32.T), 0.0)
+    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)  # exclude self
+    k = max(s - n_byzantine - 2, 1)
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+
+
 def krum(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
     """Krum [26]: select the update closest to its S-f-2 nearest peers."""
     flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)  # [S, d]
-    s = flat.shape[0]
-    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)  # [S,S]
-    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)  # exclude self
-    k = max(s - n_byzantine - 2, 1)
-    nearest = jnp.sort(d2, axis=1)[:, :k]
-    scores = jnp.sum(nearest, axis=1)
-    best = jnp.argmin(scores)
+    best = jnp.argmin(_krum_scores(flat, n_byzantine))
     return pt.tree_index(updates_stacked, best)
+
+
+def _multi_krum_weights(flat: jax.Array, n_byzantine: int, m: int = 0) -> jax.Array:
+    s = flat.shape[0]
+    scores = _krum_scores(flat, n_byzantine)
+    m = m or max(s - n_byzantine - 2, 1)
+    sel = jnp.argsort(scores)[:m]  # m best
+    return jnp.zeros((s,)).at[sel].set(1.0 / m)
 
 
 def multi_krum(updates_stacked: pt.Pytree, n_byzantine: int, m: int = 0) -> pt.Pytree:
@@ -116,14 +145,7 @@ def multi_krum(updates_stacked: pt.Pytree, n_byzantine: int, m: int = 0) -> pt.P
     m = 0 selects the standard S - f - 2 (clamped to >= 1).
     """
     flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)  # [S, d]
-    s = flat.shape[0]
-    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
-    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)
-    k = max(s - n_byzantine - 2, 1)
-    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
-    m = m or max(s - n_byzantine - 2, 1)
-    sel = jnp.argsort(scores)[:m]  # m best
-    w = jnp.zeros((s,)).at[sel].set(1.0 / m)
+    w = _multi_krum_weights(flat, n_byzantine, m)
 
     def avg(x):
         return jnp.tensordot(w, x, axes=(0, 0))
@@ -131,21 +153,22 @@ def multi_krum(updates_stacked: pt.Pytree, n_byzantine: int, m: int = 0) -> pt.P
     return jax.tree.map(avg, updates_stacked)
 
 
+def _bulyan_selection(flat: jax.Array, n_byzantine: int):
+    """(selected row indices [theta], trim beta) for Bulyan."""
+    s = flat.shape[0]
+    theta = max(s - 2 * n_byzantine, 1)
+    scores = _krum_scores(flat, n_byzantine)
+    sel = jnp.argsort(scores)[:theta]  # theta best by Krum score
+    beta = min(n_byzantine, max((theta - 1) // 2, 0))
+    return sel, theta, beta
+
+
 def bulyan(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
     """Bulyan [El Mhamdi et al. 2018]: Multi-Krum selection of
     theta = S - 2f candidates, then coordinate-wise trimmed mean with
     beta = f over the selected set."""
     flat = jax.vmap(pt.tree_flatten_vector)(updates_stacked)
-    s = flat.shape[0]
-    f = n_byzantine
-    theta = max(s - 2 * f, 1)
-    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
-    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)
-    k = max(s - f - 2, 1)
-    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
-    sel = jnp.argsort(scores)[:theta]  # theta best by Krum score
-
-    beta = min(f, max((theta - 1) // 2, 0))
+    sel, theta, beta = _bulyan_selection(flat, n_byzantine)
 
     def tm(x):
         xs = jnp.sort(x[sel], axis=0)  # [theta, ...]
@@ -202,6 +225,99 @@ AGGREGATORS = {
 
 #: aggregators that consume a server reference direction r^t
 NEEDS_REFERENCE = {"fltrust", "drag", "br_drag"}
+
+
+# -------------------------------------------------- flat update plane tier
+# Flat twins over the raw [S, d] matrix -> [d] delta: the serving tier
+# both dispatchers (repro.fl.round / repro.stream.server) actually call.
+# trimmed_mean and geomed hit the Pallas kernels; the rest is row algebra
+# the flat representation makes trivial.
+
+def fedavg_flat(g: jax.Array) -> jax.Array:
+    return jnp.mean(g, axis=0)
+
+
+def fedexp_flat(g: jax.Array, eps: float = 1e-3) -> jax.Array:
+    mean = jnp.mean(g, axis=0)
+    s = g.shape[0]
+    sq_norms = jnp.sum(g * g, axis=1)
+    eta_g = jnp.maximum(
+        1.0, jnp.sum(sq_norms) / (2.0 * s * (jnp.sum(mean * mean) + eps))
+    )
+    return mean * eta_g
+
+
+def fltrust_flat(g: jax.Array, reference: jax.Array, interpret=None) -> jax.Array:
+    """FLTrust on the flat plane: the phase-1 kernel pass yields the
+    cosine trust scores AND the norm-match factors, the phase-2
+    ``blend_reduce`` epilogue emits the trust-weighted mean — the same
+    two-HBM-pass structure as the DRAG flush."""
+    dots, gsq, rsq = kops.dot_norms_stats(g, reference, interpret=interpret)
+    gn = jnp.sqrt(gsq + EPS)
+    rn = jnp.sqrt(rsq + EPS)
+    scores = jax.nn.relu(dots / (gn * rn))
+    wsum = jnp.sum(scores) + EPS
+    aw = scores / wsum * (rn / gn)  # trust-weighted, norm-matched rows
+    return kops.blend_reduce(g, reference, aw, jnp.zeros_like(aw), interpret=interpret)
+
+
+def geometric_median_flat(g: jax.Array, iters: int = 8) -> jax.Array:
+    return kops.geometric_median(g, iters=iters)
+
+
+def krum_flat(g: jax.Array, n_byzantine: int) -> jax.Array:
+    return g[jnp.argmin(_krum_scores(g, n_byzantine))]
+
+
+def multi_krum_flat(g: jax.Array, n_byzantine: int, m: int = 0) -> jax.Array:
+    return _multi_krum_weights(g, n_byzantine, m) @ g
+
+
+def bulyan_flat(g: jax.Array, n_byzantine: int) -> jax.Array:
+    sel, theta, beta = _bulyan_selection(g, n_byzantine)
+    gs = jnp.sort(g[sel], axis=0)  # [theta, d]
+    return jnp.mean(gs[beta : theta - beta], axis=0)
+
+
+def trimmed_mean_flat(g: jax.Array, trim: int) -> jax.Array:
+    if trim == 0:  # kernel requires trim > 0; trim=0 IS the mean
+        return jnp.mean(g, axis=0)
+    return kops.trimmed_mean(g, trim)
+
+
+def coordinate_median_flat(g: jax.Array) -> jax.Array:
+    return jnp.median(g, axis=0)
+
+
+def drag_agg_flat(g, reference, c: float = 0.1):
+    delta, _, _ = drag.aggregate_flat(g, reference, c)
+    return delta
+
+
+def br_drag_agg_flat(g, reference, c: float = 0.5):
+    delta, _, _ = br_drag.aggregate_flat(g, reference, c)
+    return delta
+
+
+FLAT_AGGREGATORS = {
+    "fedavg": fedavg_flat,
+    "fedexp": fedexp_flat,
+    "fltrust": fltrust_flat,
+    "geomed": geometric_median_flat,
+    "rfa": geometric_median_flat,
+    "raga": geometric_median_flat,
+    "krum": krum_flat,
+    "multi_krum": multi_krum_flat,
+    "bulyan": bulyan_flat,
+    "trimmed_mean": trimmed_mean_flat,
+    "median": coordinate_median_flat,
+    "drag": drag_agg_flat,
+    "br_drag": br_drag_agg_flat,
+}
+
+#: rules servable natively on the [S, d] plane (all of them — new rules
+#: should land in both tiers, with the pytree form as the oracle)
+FLAT_CAPABLE = frozenset(FLAT_AGGREGATORS)
 
 #: client-side algorithm variants whose server reduction is the plain mean
 MEAN_REDUCED = {"fedavg", "fedprox", "scaffold", "fedacg"}

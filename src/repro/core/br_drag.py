@@ -24,8 +24,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.core.drag import EPS, degree_of_divergence
+from repro.kernels import ops as kops
 
 
 class BRDragConfig(NamedTuple):
@@ -51,20 +53,20 @@ def aggregate(
     """PS-side calibration of all S uploads + mean (eq. 14).
 
     ``discounts`` (optional [S] float32) are staleness factors phi(tau_m)
-    from the async engine; None = fresh uploads (synchronous paper form).
+    from the async engine; None is folded into phi = 1 (bit-exact the
+    synchronous paper form — one code path, no fresh/stale branch).
     ``weights`` (optional [S] float32) are trust reputations
     (``repro.trust``) making the aggregate a reputation-weighted mean of
     the calibrated updates; None = the paper's uniform mean, bit-for-bit.
     """
-    if discounts is None:
-        vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
-    else:
+    s = jax.tree.leaves(updates_stacked)[0].shape[0]
+    phi = jnp.ones((s,), jnp.float32) if discounts is None else discounts
 
-        def one(g, phi):
-            lam = degree_of_divergence(g, r, c, phi)
-            return calibrate(g, r, lam), lam
+    def one(g, phi_m):
+        lam = degree_of_divergence(g, r, c, phi_m)
+        return calibrate(g, r, lam), lam
 
-        vs, lams = jax.vmap(one)(updates_stacked, discounts)
+    vs, lams = jax.vmap(one)(updates_stacked, phi)
     if weights is None:
         delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
     else:
@@ -112,6 +114,48 @@ def round_step(
         "ref_norm": pt.tree_norm(reference),
     }
     return new_params, metrics
+
+
+# ------------------------------------------------------- flat update plane
+
+def aggregate_flat(
+    g: jax.Array, r: jax.Array, c, discounts=None, weights=None, interpret=None
+) -> tuple[jax.Array, jax.Array, tuple]:
+    """:func:`aggregate` on the flat plane: G [S, d], r [d].
+
+    Two HBM passes over G via the fused kernels; returns (delta [d] f32,
+    lam [S], (dots, g_sq, r_sq)) — the stats feed
+    ``trust.signals_from_stats`` so the trust layer costs no extra pass.
+    """
+    return kops.drag_calibrate_reduce(
+        g, r, c, "br_drag", discounts=discounts, weights=weights, interpret=interpret
+    )
+
+
+def round_step_flat(
+    params: pt.Pytree,
+    stack: flat_mod.UpdateStack,
+    reference_flat: jax.Array,
+    *,
+    c: float,
+    discounts=None,
+    weights=None,
+    interpret=None,
+) -> tuple[pt.Pytree, dict, tuple]:
+    """:func:`round_step` on the flat plane given the flat trusted r^t.
+
+    Returns (params', metrics, (dots, g_sq, r_sq))."""
+    delta_flat, lams, stats = aggregate_flat(
+        stack.data, reference_flat, c, discounts, weights, interpret=interpret
+    )
+    new_params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, stack.spec))
+    metrics = {
+        "dod_mean": jnp.mean(lams),
+        "dod_max": jnp.max(lams),
+        "delta_norm": jnp.linalg.norm(delta_flat),
+        "ref_norm": jnp.linalg.norm(reference_flat),
+    }
+    return new_params, metrics, stats
 
 
 def c_schedule(w: float, x: float) -> float:

@@ -19,7 +19,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import flat as flat_mod
 from repro.core import pytree as pt
+from repro.kernels import ops as kops
 
 EPS = 1e-12
 
@@ -75,7 +77,9 @@ def aggregate(
 
     ``discounts`` (optional [S] float32) are per-update staleness factors
     phi(tau_m) from the async engine (``repro.stream.staleness``); None
-    means fresh updates — the synchronous paper setting.
+    means fresh updates — folded into phi = 1, which recovers the
+    synchronous paper setting bit-for-bit (x * 1.0 is exact in IEEE
+    float), so fresh and discounted updates share ONE code path.
 
     ``weights`` (optional [S] float32) are cross-round reputation weights
     from the trust layer (``repro.trust``): the aggregate becomes the
@@ -84,15 +88,14 @@ def aggregate(
 
     Returns (Delta^t, lambdas[S]).
     """
-    if discounts is None:
-        vs, lams = jax.vmap(lambda g: calibrate_worker(g, r, c))(updates_stacked)
-    else:
+    s = jax.tree.leaves(updates_stacked)[0].shape[0]
+    phi = jnp.ones((s,), jnp.float32) if discounts is None else discounts
 
-        def one(g, phi):
-            lam = degree_of_divergence(g, r, c, phi)
-            return calibrate(g, r, lam), lam
+    def one(g, phi_m):
+        lam = degree_of_divergence(g, r, c, phi_m)
+        return calibrate(g, r, lam), lam
 
-        vs, lams = jax.vmap(one)(updates_stacked, discounts)
+    vs, lams = jax.vmap(one)(updates_stacked, phi)
     if weights is None:
         delta = jax.tree.map(lambda x: jnp.mean(x, axis=0), vs)
     else:
@@ -151,3 +154,72 @@ def round_step(
         "ref_norm": pt.tree_norm(new_state.reference),
     }
     return new_params, new_state, metrics
+
+
+# ------------------------------------------------------- flat update plane
+
+def aggregate_flat(
+    g: jax.Array, r: jax.Array, c, discounts=None, weights=None, interpret=None
+) -> tuple[jax.Array, jax.Array, tuple]:
+    """:func:`aggregate` on the flat plane: G [S, d], r [d].
+
+    Dispatches to the fused Pallas kernels (``repro.kernels.ops``) —
+    exactly two HBM passes over G.  Returns (delta [d] f32, lam [S],
+    (dots, g_sq, r_sq)); the phase-1 stats feed the trust layer's
+    divergence signals for free (``trust.signals_from_stats``).
+    """
+    return kops.drag_calibrate_reduce(
+        g, r, c, "drag", discounts=discounts, weights=weights, interpret=interpret
+    )
+
+
+def round_step_flat(
+    params: pt.Pytree,
+    state: DragState,
+    stack: flat_mod.UpdateStack,
+    *,
+    alpha: float,
+    c: float,
+    discounts=None,
+    weights=None,
+    interpret=None,
+) -> tuple[pt.Pytree, "DragState", dict, tuple]:
+    """:func:`round_step` on the flat plane — the serving path.
+
+    Same semantics (bootstrap = uniform raw mean seeding r^0, eq. 5a;
+    afterwards calibrated weighted mean + reference EMA, eqs. 5b/6/10/11)
+    but expressed as TWO HBM passes over the [S, d] stack: the bootstrap
+    switch is a select on the [S]-sized blend coefficients, never a
+    separate raw-mean pass, and the reference round-trips through its
+    flat form so only [d]-sized vectors are unflattened.
+
+    Returns (params', state', metrics, (dots, g_sq, r_sq)) — the stats
+    are against the PRE-update reference, exactly what the trust layer
+    observes.
+    """
+    g = stack.data
+    s = g.shape[0]
+    r_flat = flat_mod.flatten_tree(state.reference)
+    dots, gsq, rsq = kops.dot_norms_stats(g, r_flat, interpret=interpret)
+    a, b, lam = kops.calibrate_coeffs(dots, gsq, rsq, c, "drag", discounts)
+    w = kops.normalize_weights(weights, s)
+    init = state.initialized
+    # bootstrap (eq. 5a): uniform raw mean — a = 1, b = 0, w = 1/S
+    aw = jnp.where(init, w * a, 1.0 / s)
+    bw = jnp.where(init, w * b, 0.0)
+    lam = jnp.where(init, lam, 0.0)
+    delta_flat = kops.blend_reduce(g, r_flat, aw, bw, interpret=interpret)
+    ema = (1.0 - alpha) * r_flat + alpha * delta_flat
+    new_ref_flat = jnp.where(init, ema, delta_flat)
+    new_params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, stack.spec))
+    new_state = DragState(
+        reference=flat_mod.unflatten_tree(new_ref_flat, stack.spec),
+        initialized=jnp.asarray(True),
+    )
+    metrics = {
+        "dod_mean": jnp.mean(lam),
+        "dod_max": jnp.max(lam),
+        "delta_norm": jnp.linalg.norm(delta_flat),
+        "ref_norm": jnp.linalg.norm(new_ref_flat),
+    }
+    return new_params, new_state, metrics, (dots, gsq, rsq)

@@ -1,8 +1,10 @@
 """The jitted federated round — simulation regime.
 
-One call = one full paper round: S parallel (vmapped) local-SGD clients
--> optional Byzantine update attack -> server aggregation (any rule in
-``repro.core.aggregators``) -> global model + server-state update.
+One call = one full paper round: S parallel local-SGD clients ->
+flatten onto the [S, d] update plane (``repro.core.flat``) -> optional
+Byzantine update attack (flat rows) -> server aggregation (flat-tier
+rules / fused two-pass DRAG kernels) -> one unflatten of the [d] delta
+-> global model + server-state update.
 
 The production-regime round (clients = mesh axis groups, collectives
 instead of vmap) lives in ``repro.launch.train``; both share the same
@@ -19,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.adversary import engine as adversary_engine
 from repro.core import aggregators, br_drag, drag
+from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.fl.client import local_update
 from repro.trust import reputation as trust_mod
@@ -145,6 +148,13 @@ def federated_round(
     s = malicious_mask.shape[0]
     g_stacked, aux = _client_updates(loss_fn, state, cfg, batches, selected_idx)
 
+    # ---- THE flatten boundary (repro.core.flat): the S uploads enter
+    # the flat [S, d] update plane here and stay flat through attack
+    # crafting, calibration, trust signals, and reduction; only the
+    # aggregated [d] delta is unflattened, once, onto the params
+    stack = flat_mod.stack_updates(g_stacked, client_ids=selected_idx)
+    spec = stack.spec
+
     # ---- Byzantine update-space attack: the adversary engine sees the
     # honest stack (omniscient threat model) and threads its memory
     # through the server state
@@ -155,10 +165,11 @@ def federated_round(
             "with init_server_state(params, n_workers, cfg)"
         )
     ctx = adversary_engine.AttackContext(
-        key=key, updates=g_stacked, malicious_mask=malicious_mask,
-        round=state.round,
+        key=key, updates=stack.data, malicious_mask=malicious_mask,
+        round=state.round, spec=spec,
     )
-    g_stacked, new_adv = adv.craft(state.adversary, ctx)
+    g_flat, new_adv = adv.craft(state.adversary, ctx)
+    stack = dataclasses.replace(stack, data=g_flat)
 
     # ---- trust layer: reputation weights from PAST rounds' divergence
     # history weight this round's aggregation; this round's divergences
@@ -176,7 +187,9 @@ def federated_round(
         )
     tcfg = trust_mod.TrustConfig(**dict(cfg.trust_kw)) if use_trust else None
     weights = (
-        trust_mod.reputation(state.trust, selected_idx, tcfg) if use_trust else None
+        # stack.client_ids IS selected_idx — the stack metadata is the
+        # single source the trust layer indexes by
+        trust_mod.reputation(state.trust, stack.client_ids, tcfg) if use_trust else None
     )
 
     metrics: dict = {}
@@ -186,50 +199,55 @@ def federated_round(
     new_hm = state.control_workers
     new_trust = state.trust
     params = state.params
+    update_norms = None  # [S] row norms; free from the kernel stats below
 
     if cfg.algorithm == "drag":
-        params, new_drag, dm = drag.round_step(
-            params, state.drag, g_stacked, alpha=cfg.alpha, c=cfg.c,
+        params, new_drag, dm, stats = drag.round_step_flat(
+            params, state.drag, stack, alpha=cfg.alpha, c=cfg.c,
             weights=weights,
         )
         metrics.update(dm)
+        update_norms = jnp.sqrt(stats[1])
         if use_trust:
-            div, nr = trust_mod.divergence_signals(g_stacked, state.drag.reference)
+            div, nr = trust_mod.signals_from_stats(*stats)
             # no reference on the bootstrap round -> no observation
             new_trust = trust_mod.observe(
-                state.trust, selected_idx, div, nr, tcfg, gate=state.drag.initialized
+                state.trust, stack.client_ids, div, nr, tcfg, gate=state.drag.initialized
             )
     elif cfg.algorithm in ("br_drag", "fltrust"):
         assert root_batches is not None, f"{cfg.algorithm} needs a root dataset"
         grad_fn = jax.grad(loss_fn)
         reference = br_drag.root_reference(params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr)
+        r_flat = flat_mod.flatten_tree(reference)
         if cfg.algorithm == "br_drag":
-            params, dm = br_drag.round_step(
-                params, g_stacked, reference, c=cfg.c_br, weights=weights
+            params, dm, stats = br_drag.round_step_flat(
+                params, stack, r_flat, c=cfg.c_br, weights=weights
             )
             metrics.update(dm)
+            update_norms = jnp.sqrt(stats[1])
             if use_trust:
-                div, nr = trust_mod.divergence_signals(g_stacked, reference)
-                new_trust = trust_mod.observe(state.trust, selected_idx, div, nr, tcfg)
+                div, nr = trust_mod.signals_from_stats(*stats)
+                new_trust = trust_mod.observe(state.trust, stack.client_ids, div, nr, tcfg)
         else:
-            delta = aggregators.fltrust(g_stacked, reference)
-            params = pt.tree_add(params, delta)
-            metrics["delta_norm"] = pt.tree_norm(delta)
+            delta_flat = aggregators.fltrust_flat(stack.data, r_flat)
+            params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, spec))
+            metrics["delta_norm"] = jnp.linalg.norm(delta_flat)
     else:
-        # registry-driven dispatch: every non-reference rule in
-        # ``aggregators.AGGREGATORS`` is reachable by name; the client-side
-        # variants (fedprox/scaffold/fedacg) reduce with the plain mean.
+        # registry-driven dispatch: every non-reference rule is reachable
+        # by name through the FLAT tier; the client-side variants
+        # (fedprox/scaffold/fedacg) reduce with the plain mean.
         rule = "fedavg" if cfg.algorithm in aggregators.MEAN_REDUCED else cfg.algorithm
-        if rule not in aggregators.AGGREGATORS or rule in aggregators.NEEDS_REFERENCE:
+        if rule not in aggregators.FLAT_CAPABLE or rule in aggregators.NEEDS_REFERENCE:
             raise ValueError(f"unknown algorithm {cfg.algorithm}")
-        delta = aggregators.AGGREGATORS[rule](
-            g_stacked,
+        delta_flat = aggregators.FLAT_AGGREGATORS[rule](
+            stack.data,
             **aggregators.rule_kwargs(
                 rule, n_byzantine=cfg.n_byzantine_hint, geomed_iters=cfg.geomed_iters
             ),
         )
+        delta = flat_mod.unflatten_tree(delta_flat, spec)
         params = pt.tree_add(params, delta)
-        metrics["delta_norm"] = pt.tree_norm(delta)
+        metrics["delta_norm"] = jnp.linalg.norm(delta_flat)
         if cfg.algorithm == "fedacg":
             new_momentum = pt.tree_axpy(cfg.acg_lambda, state.momentum, delta)
         if cfg.algorithm == "scaffold":
@@ -250,7 +268,9 @@ def federated_round(
     if use_trust:
         metrics["trust_weight_mean"] = jnp.mean(weights)
         metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
-    metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g_stacked))
+    if update_norms is None:
+        update_norms = jnp.linalg.norm(stack.data, axis=1)
+    metrics["update_norm_mean"] = jnp.mean(update_norms)
     new_state = ServerState(
         params=params,
         round=state.round + 1,

@@ -11,6 +11,7 @@ recurrence — both with VMEM-resident state.
 from repro.kernels import (  # noqa: F401
     drag_calibrate,
     flash_attention,
+    instrument,
     linear_recurrence,
     ops,
     ref,

@@ -11,6 +11,14 @@ scale, blend).  Two kernels bring that to two passes:
   * ``blend``      — one pass: v_m = a_m * g_m + b_m * r with the per-
     worker coefficients a, b computed on-host from the phase-1 scalars
     (a [S]-sized vector; negligible).
+  * ``blend_reduce`` — one pass: the *serving* epilogue.  Instead of
+    materialising V:[S, d] (an extra [S, d] HBM write nobody reads —
+    the flush only needs Delta), it folds the weighted-mean reduction
+    into the blend: Delta = sum_s aw_s * g_s + (sum_s bw_s) * r, where
+    aw = w * a and bw = w * b carry the staleness discounts and trust
+    weights pre-multiplied into the blend coefficients on-host.  A
+    whole DRAG/BR-DRAG flush is then exactly two HBM passes over G:
+    dot_norms + blend_reduce.
 
 Block sizes default to (8, 1024): G tile 8x1024xf32 = 32 KiB VMEM, r
 tile 4 KiB — well inside the ~16 MiB VMEM budget, lane-dim 1024 is a
@@ -107,3 +115,49 @@ def blend(g, r, a, b, *, block_s: int = DEF_BS, block_d: int = DEF_BD, interpret
         out_shape=jax.ShapeDtypeStruct((s, d), g.dtype),
         interpret=interpret,
     )(g, r, a, b)
+
+
+# --------------------------------------------------------- blend_reduce
+
+def _blend_reduce_kernel(g_ref, r_ref, aw_ref, bw_ref, out_ref):
+    i = pl.program_id(1)  # worker-tile index (reduction axis, innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # [bs, bd]
+    r = r_ref[...].astype(jnp.float32)  # [bd]
+    aw = aw_ref[...].astype(jnp.float32)  # [bs]
+    bw = bw_ref[...].astype(jnp.float32)  # [bs]
+    # sum_s aw_s g_s + (sum_s bw_s) r, accumulated per worker tile; the
+    # [bd] output block stays VMEM-resident across the inner i loop
+    out_ref[...] += aw @ g + jnp.sum(bw) * r
+
+
+def blend_reduce(g, r, aw, bw, *, block_s: int = DEF_BS, block_d: int = DEF_BD,
+                 interpret: bool = False):
+    """Fused blend + weighted reduction: Delta = sum_s (aw_s g_s + bw_s r).
+
+    The calibrated stack V is never materialised — one HBM read pass
+    over G, one [d] write.  ``aw``/``bw`` are the blend coefficients
+    with the aggregation weights (uniform 1/S, staleness discounts,
+    trust reputations) already multiplied in on-host.
+    """
+    s, d = g.shape
+    bs, bd = min(block_s, s), min(block_d, d)
+    assert s % bs == 0 and d % bd == 0, (s, d, bs, bd)
+    grid = (d // bd, s // bs)  # d outer so the out tile stays resident
+    return pl.pallas_call(
+        _blend_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda j, i: (i, j)),
+            pl.BlockSpec((bd,), lambda j, i: (j,)),
+            pl.BlockSpec((bs,), lambda j, i: (i,)),
+            pl.BlockSpec((bs,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(g, r, aw, bw)

@@ -1,0 +1,48 @@
+"""Kernel-call instrumentation: the two-HBM-pass acceptance probe.
+
+The flat update plane's headline invariant — a whole DRAG/BR-DRAG flush
+is exactly two kernel passes over the stacked updates (``dot_norms`` +
+``blend_reduce``, never ``blend``) — is asserted in tests AND measured
+in ``benchmarks/aggplane_bench.py``.  This context manager is the one
+shared probe both use, so a future third kernel in the flush changes
+the counted set in exactly one place.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.kernels import drag_calibrate as dk
+
+#: the calibration kernels a flush may invoke (counted per call)
+FLUSH_KERNELS = ("dot_norms", "blend_reduce", "blend")
+
+#: what one fused serving flush must invoke — the two-pass invariant
+TWO_PASS_CALLS = {"dot_norms": 1, "blend_reduce": 1, "blend": 0}
+
+
+@contextlib.contextmanager
+def count_kernel_calls():
+    """Counts invocations of every :data:`FLUSH_KERNELS` entry.
+
+    Yields a mutable ``{kernel_name: count}`` dict, live-updated while
+    the context is open; the originals are restored on exit.  Counts
+    are per *call site* (trace-time under jit), which is exactly the
+    program-structure quantity the two-pass invariant is about.
+    """
+    calls = {name: 0 for name in FLUSH_KERNELS}
+    originals = {name: getattr(dk, name) for name in FLUSH_KERNELS}
+
+    def wrap(name):
+        def fn(*args, **kwargs):
+            calls[name] += 1
+            return originals[name](*args, **kwargs)
+
+        return fn
+
+    try:
+        for name in FLUSH_KERNELS:
+            setattr(dk, name, wrap(name))
+        yield calls
+    finally:
+        for name, fn in originals.items():
+            setattr(dk, name, fn)

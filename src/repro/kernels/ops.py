@@ -41,6 +41,81 @@ def _pad_to(x, mult, axis):
 
 # ------------------------------------------------------- matrix-level ops
 
+#: lane-tile ceiling: bs=8 x 65536 x f32 = 2 MiB per G tile — comfortably
+#: inside the ~16 MiB VMEM budget with r/out tiles and double buffering
+_MAX_LANE_TILE = 1 << 16
+
+
+def _lane_mult(d: int) -> int:
+    """Lane-padding target for a d-lane problem.
+
+    Small problems pad to one aligned tile (multiple of 128); large ones
+    pad to a multiple of 8 KiLanes so ``_lane_block`` is guaranteed a
+    >= 8192 tile that divides d_pad — padding to the bare next 128/1024
+    multiple can land on a prime-ish quotient whose only aligned
+    divisor is the 128/1024 unit itself, exploding the grid.
+    """
+    return 128 if d <= _MAX_LANE_TILE else (1 << 13)
+
+
+def _lane_block(d: int, cap: int = _MAX_LANE_TILE) -> int:
+    """Largest lane tile that divides an ALIGNED d, capped for VMEM.
+
+    Lane-dim multiples of 128 are a hard Mosaic tiling requirement; a
+    big tile additionally keeps the grid small (fewer accumulator
+    revisits — and far less per-step overhead in interpret mode).
+    """
+    unit = 1024 if d % 1024 == 0 and cap >= 1024 else 128
+    n = d // unit
+    best, i = 1, 1
+    while i * i <= n:
+        if n % i == 0:
+            for m in (i, n // i):
+                if m > best and m * unit <= cap:
+                    best = m
+        i += 1
+    return best * unit
+
+
+def _block_sizes(s: int, d: int) -> tuple[int, int]:
+    """Clean (worker, lane) tile sizes for an ALIGNED [S, d] problem.
+
+    Callers align first (``_pad_grid``): S to a multiple of 8 once it
+    exceeds one sublane tile, d to a lane-aligned multiple — real-TPU
+    Mosaic tiling needs lane-dim multiples of 128 and f32 sublane
+    multiples of 8, and an unaligned fallback tile of bd = d would also
+    blow the VMEM budget for large models.
+    """
+    if s % 8 == 0:
+        bs = 8
+    elif s <= 8:
+        bs = s
+    else:  # exact-divisor fallback (Weiszfeld path, which cannot S-pad)
+        bs = 4 if s % 4 == 0 else (2 if s % 2 == 0 else 1)
+    return bs, _lane_block(d) if d % 128 == 0 else d
+
+
+def _pad_grid(g, r, pad_s: bool = True):
+    """Zero-pad G (rows and/or lanes) and r (lanes) to tile-aligned shapes.
+
+    Lanes pad to a multiple of 1024 (128 for small d) so ``_lane_block``
+    always finds a large aligned tile.  Padding with ZEROS is exact for
+    every op in this file that uses it: zero lanes add 0.0 to
+    dots/norms/blends (r is padded alongside g), and zero rows are
+    sliced off / carry zero reduction weights — the invariants pinned by
+    the padding regression tests.  Alignment costs one extra copy of G
+    only when the model size is not already aligned; callers slice
+    outputs back to the true (S, d).
+    """
+    s, d = g.shape
+    lane_mult = _lane_mult(d)
+    g, _ = _pad_to(g, lane_mult, axis=1)
+    r, _ = _pad_to(r, lane_mult, axis=0)
+    if pad_s and s > 8:
+        g, _ = _pad_to(g, 8, axis=0)
+    return g, r, s, d
+
+
 @partial(jax.jit, static_argnames=("c", "mode", "interpret"))
 def drag_calibrate(g, r, c: float, mode: str = "drag", interpret: bool | None = None):
     """Fused eqs. (10)+(11)/(15) over G:[S,d], r:[d].
@@ -48,41 +123,118 @@ def drag_calibrate(g, r, c: float, mode: str = "drag", interpret: bool | None = 
     Returns (v [S,d], lam [S], delta [d]) where delta = mean_s v_s.
     """
     interpret = _interpret_default() if interpret is None else interpret
-    s0, d0 = g.shape
-    bs = 8 if s0 % 8 == 0 else (s0 if s0 <= 8 else 1)
-    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
-    dots, gsq, rsq = dk.dot_norms(g, r, block_s=bs, block_d=bd, interpret=interpret)
-    a, b, lam = calibrate_coeffs(dots, gsq, rsq, c, mode)
-    v = dk.blend(g, r, a, b, block_s=bs, block_d=bd, interpret=interpret)
+    gp, rp, s, d = _pad_grid(g, r)
+    bs, bd = _block_sizes(*gp.shape)
+    dots, gsq, rsq = dk.dot_norms(gp, rp, block_s=bs, block_d=bd, interpret=interpret)
+    a, b, lam = calibrate_coeffs(dots[:s], gsq[:s], rsq, c, mode)
+    if gp.shape[0] != s:  # padded rows blend with zero coefficients
+        a, _ = _pad_to(a, gp.shape[0], axis=0)
+        b, _ = _pad_to(b, gp.shape[0], axis=0)
+    v = dk.blend(gp, rp, a, b, block_s=bs, block_d=bd, interpret=interpret)
+    v = v[:s, :d]
     delta = jnp.mean(v, axis=0)
     return v, lam, delta
+
+
+def dot_norms_stats(g, r, interpret: bool | None = None):
+    """Phase-1 scalars over G:[S,d], r:[d] — one HBM pass.
+
+    Returns (dots [S], g_sq [S], r_sq []): everything the DoD
+    calibration, the trust layer's divergence signals, AND the flush
+    metrics need — computed once and shared (``repro.trust``'s
+    ``signals_from_stats`` is the other consumer).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, rp, s, _ = _pad_grid(g, r)
+    bs, bd = _block_sizes(*gp.shape)
+    dots, gsq, rsq = dk.dot_norms(gp, rp, block_s=bs, block_d=bd, interpret=interpret)
+    return dots[:s], gsq[:s], rsq  # padded zero rows sliced off
+
+
+def blend_reduce(g, r, aw, bw, interpret: bool | None = None):
+    """Phase-2 fused blend + reduction — one HBM pass, Delta [d] out.
+
+    Padded worker rows (alignment) get ZERO coefficients, so they are
+    excluded from the reduction exactly, not approximately.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, rp, s, d = _pad_grid(g, r)
+    if gp.shape[0] != s:
+        aw, _ = _pad_to(aw, gp.shape[0], axis=0)
+        bw, _ = _pad_to(bw, gp.shape[0], axis=0)
+    bs, bd = _block_sizes(*gp.shape)
+    out = dk.blend_reduce(gp, rp, aw, bw, block_s=bs, block_d=bd, interpret=interpret)
+    return out[:d]
+
+
+def normalize_weights(weights, s: int) -> jnp.ndarray:
+    """[S] aggregation weights summing to 1; None = uniform mean.
+
+    Mirrors ``pytree.tree_weighted_mean``: near-zero total (every client
+    quarantined) falls back to uniform rather than a zero/NaN step.
+    """
+    if weights is None:
+        return jnp.full((s,), 1.0 / s, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    wsum = jnp.sum(w)
+    eps = 1e-12
+    return jnp.where(wsum > eps, w / jnp.maximum(wsum, eps), jnp.full((s,), 1.0 / s))
+
+
+def drag_calibrate_reduce(
+    g, r, c: float, mode: str = "drag", discounts=None, weights=None,
+    interpret: bool | None = None,
+):
+    """The whole DRAG/BR-DRAG flush over flat G:[S,d] — two HBM passes.
+
+    Pass 1 (``dot_norms``) produces the per-worker scalars; the blend
+    coefficients, staleness discounts phi(tau), and normalised
+    aggregation weights (uniform / trust reputations) are folded into
+    [S]-sized vectors on-host; pass 2 (``blend_reduce``) emits Delta
+    without materialising the calibrated stack.
+
+    Returns (delta [d] f32, lam [S], (dots, g_sq, r_sq)).
+    """
+    s = g.shape[0]
+    dots, gsq, rsq = dot_norms_stats(g, r, interpret=interpret)
+    a, b, lam = calibrate_coeffs(dots, gsq, rsq, c, mode, discounts)
+    w = normalize_weights(weights, s)
+    delta = blend_reduce(g, r, w * a, w * b, interpret=interpret)
+    return delta, lam, (dots, gsq, rsq)
 
 
 @partial(jax.jit, static_argnames=("iters", "interpret"))
 def geometric_median(g, iters: int = 8, eps: float = 1e-8, interpret: bool | None = None):
     """Weiszfeld iterations over G:[S,d] using the two Pallas kernels."""
     interpret = _interpret_default() if interpret is None else interpret
-    s0, d0 = g.shape
-    bs = 8 if s0 % 8 == 0 else (s0 if s0 <= 8 else 1)
-    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
-    z = jnp.mean(g.astype(jnp.float32), axis=0)
+    # lane-align only: padded zero COLUMNS stay exactly zero through the
+    # iteration; padded rows would enter the Weiszfeld weights, so the
+    # worker axis keeps its exact-divisor tiling instead
+    gp, d0 = _pad_to(g, _lane_mult(g.shape[1]), axis=1)
+    bs, bd = _block_sizes(*gp.shape)
+    z = jnp.mean(gp.astype(jnp.float32), axis=0)
 
     def body(z, _):
-        d2 = wk.sq_dists(g, z, block_s=bs, block_d=bd, interpret=interpret)
+        d2 = wk.sq_dists(gp, z, block_s=bs, block_d=bd, interpret=interpret)
         w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
-        num = wk.weighted_sum(g, w, block_s=bs, block_d=bd, interpret=interpret)
+        num = wk.weighted_sum(gp, w, block_s=bs, block_d=bd, interpret=interpret)
         return num / jnp.sum(w), None
 
     z, _ = jax.lax.scan(body, z, None, length=iters)
-    return z.astype(g.dtype)
+    return z[:d0].astype(g.dtype)
 
 
 @partial(jax.jit, static_argnames=("trim", "interpret"))
 def trimmed_mean(g, trim: int, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
-    d0 = g.shape[1]
-    bd = 1024 if d0 % 1024 == 0 else (128 if d0 % 128 == 0 else d0)
-    return tk.trimmed_mean(g, trim, block_d=bd, interpret=interpret)
+    # lane-align; padded zero columns are trimmed/averaged among
+    # themselves and sliced off — real coordinates never see them
+    s = g.shape[0]
+    gp, d0 = _pad_to(g, _lane_mult(g.shape[1]), axis=1)
+    # whole worker axis is tile-resident here: cap the lane tile so the
+    # [S, bd] f32 block stays ~512 KiB
+    bd = _lane_block(gp.shape[1], cap=max(128, (1 << 17) // s))
+    return tk.trimmed_mean(gp, trim, block_d=bd, interpret=interpret)[:d0]
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
@@ -143,6 +295,9 @@ def linear_recurrence(a, g, *, block_w: int = 512, chunk: int = 256,
 
 
 # ------------------------------------------------------- pytree-level ops
+# Convenience wrappers for callers still holding stacked pytrees.  The
+# SERVING path does not use these: it flattens once at the boundary
+# (repro.core.flat) and calls the matrix-level ops above directly.
 
 def _stack_flatten(updates_stacked):
     """Stacked pytree (leading S axis) -> [S, d_padded] matrix + meta."""

@@ -21,12 +21,19 @@ def dot_norms_ref(g: jnp.ndarray, r: jnp.ndarray):
     return dots, g_sq, r_sq
 
 
-def calibrate_coeffs(dots, g_sq, r_sq, c: float, mode: str):
-    """Per-worker blend coefficients (a, b, lam): v = a*g + b*r."""
+def calibrate_coeffs(dots, g_sq, r_sq, c: float, mode: str, discounts=None):
+    """Per-worker blend coefficients (a, b, lam): v = a*g + b*r.
+
+    ``discounts`` (optional [S] f32) are staleness factors phi(tau_m)
+    folded into the DoD: lam = c * (1 - cos) * phi.  None means fresh
+    updates — phi = 1, bit-exact the synchronous coefficients.
+    """
     gn = jnp.sqrt(g_sq + EPS)
     rn = jnp.sqrt(r_sq + EPS)
     cos = dots / (gn * rn)
     lam = c * (1.0 - cos)
+    if discounts is not None:
+        lam = lam * jnp.asarray(discounts, jnp.float32)
     if mode == "drag":  # eq. (11)
         a = 1.0 - lam
         b = lam * gn / rn
@@ -50,6 +57,15 @@ def drag_calibrate_ref(g, r, c: float, mode: str = "drag"):
     dots, g_sq, r_sq = dot_norms_ref(g, r)
     a, b, lam = calibrate_coeffs(dots, g_sq, r_sq, c, mode)
     return blend_ref(g, r, a, b), lam
+
+
+def blend_reduce_ref(g, r, aw, bw):
+    """Delta = sum_s (aw_s g_s + bw_s r)  -> [d]  (f32)."""
+    gf = g.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+    return jnp.einsum("s,sd->d", aw.astype(jnp.float32), gf) + jnp.sum(
+        bw.astype(jnp.float32)
+    ) * rf
 
 
 def weiszfeld_distances_ref(g, z):

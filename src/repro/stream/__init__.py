@@ -2,11 +2,20 @@
 
 Event-driven serving shape for the paper's aggregation math: a
 virtual-time client simulator (``events``), a fixed-capacity donated
-ingest buffer (``buffer``), staleness-aware DRAG/BR-DRAG calibration
-(``staleness``), and the async server loop (``server``).  The sync
-bridge lives in ``repro.fl.bridge``.
+ingest buffer (``buffer`` — a flat [K, d] slot matrix, THE async
+flatten boundary of the flat update plane in ``repro.core.flat``),
+staleness-aware DRAG/BR-DRAG calibration (``staleness``), and the
+async server loop (``server``, flushing through the fused two-pass
+kernels).  The sync bridge lives in ``repro.fl.bridge``.
 """
-from repro.stream.buffer import BufferState, init_buffer, ingest, make_ingest_fn, reset  # noqa: F401
+from repro.stream.buffer import (  # noqa: F401
+    BufferState,
+    as_stack,
+    init_buffer,
+    ingest,
+    make_ingest_fn,
+    reset,
+)
 from repro.stream.events import (  # noqa: F401
     LATENCIES,
     ClientEvent,

@@ -1,31 +1,37 @@
 """Fixed-capacity jitted ingest buffer for the async server.
 
-The buffer is device-resident: one pre-allocated ``[K, ...]`` pytree of
-update slots plus per-slot metadata (dispatch-round tag, Byzantine flag).
-``ingest`` is a donated jitted write — ``.at[slot].set`` on the donated
-arrays lowers to an in-place dynamic-update-slice, so accepting an upload
-costs one slot write, never a buffer copy.  ``reset`` only zeroes the
-fill count; slot contents are overwritten by subsequent ingests.
+The buffer IS the flat update plane (``repro.core.flat``): a single
+pre-allocated ``[K, d]`` f32 slot matrix plus per-slot metadata
+(dispatch-round tag, Byzantine flag, client id).  Uploads are flattened
+ONCE at ingest — the flatten boundary of the async regime — and the
+flush hands ``slots`` straight to the fused aggregation kernels and the
+flat aggregator tier (``aggregators.FLAT_AGGREGATORS``) without ever
+rebuilding a pytree; only the aggregated ``[d]`` delta is unflattened.
 
-Flushing hands the stacked ``[K, ...]`` slots directly to any rule in
-``repro.core.aggregators.AGGREGATORS`` (see ``repro.stream.server``) —
-the buffer layout IS the stacked-worker layout used by every aggregator.
+``ingest`` is a donated jitted write — ``.at[slot].set`` on the donated
+arrays lowers to an in-place dynamic-update-slice, so accepting an
+upload costs one row write, never a buffer copy.  ``reset`` only zeroes
+the fill count; slot contents are overwritten by subsequent ingests.
+
+A flat row buffer is also what the ROADMAP's sharded-ingest direction
+needs: ``[K, d]`` rows shard over a mesh axis trivially, per-leaf
+pytree buffers do not.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 
 
 class BufferState(NamedTuple):
     """Device-side ingest buffer (capacity K = leading axis of slots)."""
 
-    slots: pt.Pytree  # [K, ...] update slots
+    slots: jax.Array  # [K, d] f32 — flat update rows (repro.core.flat)
     dispatch_rounds: jax.Array  # [K] int32 — server version tags
     malicious: jax.Array  # [K] bool — for Byzantine injection at flush
     count: jax.Array  # [] int32 — filled slots
@@ -33,15 +39,14 @@ class BufferState(NamedTuple):
 
 
 def capacity_of(buf: BufferState) -> int:
-    return jax.tree.leaves(buf.slots)[0].shape[0]
+    return buf.slots.shape[0]
 
 
 def init_buffer(params_like: pt.Pytree, capacity: int) -> BufferState:
-    """Allocates an empty K-slot buffer shaped like the param pytree."""
+    """Allocates an empty K-slot flat buffer sized from the param pytree."""
+    d = pt.tree_size(params_like)
     return BufferState(
-        slots=jax.tree.map(
-            lambda x: jnp.zeros((capacity,) + x.shape, x.dtype), params_like
-        ),
+        slots=jnp.zeros((capacity, d), jnp.float32),
         dispatch_rounds=jnp.zeros((capacity,), jnp.int32),
         malicious=jnp.zeros((capacity,), bool),
         count=jnp.zeros((), jnp.int32),
@@ -54,10 +59,12 @@ def ingest(
 ) -> BufferState:
     """Write one update into the next free slot (drops if already full).
 
-    ``client_id`` tags the slot with the uploader's identity so the
-    flush can index the trust layer's reputation table; 0 when no trust
-    is configured.
+    ``g`` may be an update pytree (flattened here — THE boundary) or an
+    already-flat ``[d]`` row.  ``client_id`` tags the slot with the
+    uploader's identity so the flush can index the trust layer's
+    reputation table; 0 when no trust is configured.
     """
+    row = g if isinstance(g, jax.Array) and g.ndim == 1 else flat_mod.flatten_tree(g)
     k = capacity_of(buf)
     slot = jnp.minimum(buf.count, k - 1)
     keep = buf.count < k  # full buffer: refuse the write, don't clobber
@@ -65,11 +72,10 @@ def ingest(
     # select at SLOT granularity so the slot write stays a single in-place
     # dynamic-update-slice on the donated arrays (a whole-buffer where
     # would materialise a copy and break the donation fast path)
-    def write(s, x):
-        return s.at[slot].set(jnp.where(keep, x.astype(s.dtype), s[slot]))
-
     return BufferState(
-        slots=jax.tree.map(write, buf.slots, g),
+        slots=buf.slots.at[slot].set(
+            jnp.where(keep, row.astype(jnp.float32), buf.slots[slot])
+        ),
         dispatch_rounds=buf.dispatch_rounds.at[slot].set(
             jnp.where(keep, jnp.asarray(dispatch_round, jnp.int32), buf.dispatch_rounds[slot])
         ),
@@ -91,6 +97,16 @@ def reset(buf: BufferState) -> BufferState:
 def staleness(buf: BufferState, server_round) -> jax.Array:
     """tau_m = current version - dispatch version, per slot, [K] int32."""
     return jnp.maximum(jnp.asarray(server_round, jnp.int32) - buf.dispatch_rounds, 0)
+
+
+def as_stack(buf: BufferState, spec: flat_mod.StackSpec, server_round) -> flat_mod.UpdateStack:
+    """View the full buffer as an :class:`~repro.core.flat.UpdateStack`."""
+    return flat_mod.UpdateStack(
+        data=buf.slots,
+        client_ids=buf.client_ids,
+        staleness=staleness(buf, server_round),
+        spec=spec,
+    )
 
 
 def make_ingest_fn():

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.adversary import engine as adversary_engine
 from repro.core import aggregators, br_drag, drag
+from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.fl.client import local_update
 from repro.stream import buffer as buf_mod
@@ -132,8 +133,21 @@ def flush(
 ):
     """One global step from a full buffer; returns
     (params', drag', round+1, reset buffer, adv_state', trust_state',
-    metrics)."""
-    taus = buf_mod.staleness(buf, rnd)
+    metrics).
+
+    The whole step runs on the flat update plane (``repro.core.flat``):
+    ``buf.slots`` is already the [K, d] stack, the adversary crafts flat
+    rows, DRAG/BR-DRAG dispatch to the fused two-HBM-pass kernels with
+    the staleness discounts and trust weights folded into the reduction
+    epilogue, and the trust signals reuse the calibration's phase-1
+    scalars — only the aggregated [d] delta is ever unflattened.
+    """
+    # the buffer IS the flat plane: view it as the UpdateStack whose
+    # metadata (staleness tags, client ids) is THE source the discounts
+    # and the trust layer consume below
+    stack = buf_mod.as_stack(buf, flat_mod.spec_of(params), rnd)
+    spec = stack.spec
+    taus = stack.staleness
     discounts = stale.make_discount(cfg.discount, cfg.discount_a)(taus)
 
     # ---- Byzantine update-space attack over the buffered stack: the
@@ -145,10 +159,11 @@ def flush(
             "with init_stream_state(params, capacity, cfg)"
         )
     ctx = adversary_engine.AttackContext(
-        key=key, updates=buf.slots, malicious_mask=buf.malicious, round=rnd,
-        taus=taus, discounts=discounts,
+        key=key, updates=stack.data, malicious_mask=buf.malicious, round=rnd,
+        taus=taus, discounts=discounts, spec=spec,
     )
     g, new_adv = adv.craft(adv_state, ctx)
+    stack = dataclasses.replace(stack, data=g)
 
     # ---- trust layer: PAST flushes' divergence history weights this one
     use_trust = cfg.trust and cfg.algorithm in ("drag", "br_drag")
@@ -164,7 +179,7 @@ def flush(
         )
     tcfg = trust_mod.TrustConfig(**dict(cfg.trust_kw)) if use_trust else None
     weights = (
-        trust_mod.reputation(trust_state, buf.client_ids, tcfg) if use_trust else None
+        trust_mod.reputation(trust_state, stack.client_ids, tcfg) if use_trust else None
     )
 
     metrics: dict = {
@@ -174,17 +189,19 @@ def flush(
     }
     new_drag = drag_state
     new_trust = trust_state
+    update_norms = None  # [K] row norms; free from the kernel stats below
 
     if cfg.algorithm == "drag":
-        params, new_drag, dm = stale.drag_round_step(
-            params, drag_state, g, discounts, alpha=cfg.alpha, c=cfg.c,
-            weights=weights,
+        params, new_drag, dm, stats = drag.round_step_flat(
+            params, drag_state, stack, alpha=cfg.alpha, c=cfg.c,
+            discounts=discounts, weights=weights,
         )
         metrics.update(dm)
+        update_norms = jnp.sqrt(stats[1])
         if use_trust:
-            div, nr = trust_mod.divergence_signals(g, drag_state.reference)
+            div, nr = trust_mod.signals_from_stats(*stats)
             new_trust = trust_mod.observe(
-                trust_state, buf.client_ids, div, nr, tcfg,
+                trust_state, stack.client_ids, div, nr, tcfg,
                 gate=drag_state.initialized,
             )
     elif cfg.algorithm in ("br_drag", "fltrust"):
@@ -194,20 +211,23 @@ def flush(
             reference = br_drag.root_reference(
                 params, lambda p, b: grad_fn(p, b), root_batches, cfg.lr
             )
+        r_flat = flat_mod.flatten_tree(reference)
         if cfg.algorithm == "br_drag":
-            params, dm = stale.br_drag_round_step(
-                params, g, reference, discounts, c=cfg.c_br, weights=weights
+            params, dm, stats = br_drag.round_step_flat(
+                params, stack, r_flat, c=cfg.c_br, discounts=discounts,
+                weights=weights,
             )
             metrics.update(dm)
+            update_norms = jnp.sqrt(stats[1])
             if use_trust:
-                div, nr = trust_mod.divergence_signals(g, reference)
+                div, nr = trust_mod.signals_from_stats(*stats)
                 new_trust = trust_mod.observe(
-                    trust_state, buf.client_ids, div, nr, tcfg
+                    trust_state, stack.client_ids, div, nr, tcfg
                 )
         else:
-            delta = aggregators.fltrust(g, reference)
-            params = pt.tree_add(params, delta)
-            metrics["delta_norm"] = pt.tree_norm(delta)
+            delta_flat = aggregators.fltrust_flat(g, r_flat)
+            params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, spec))
+            metrics["delta_norm"] = jnp.linalg.norm(delta_flat)
     else:
         if cfg.algorithm in aggregators.MEAN_REDUCED and cfg.algorithm != "fedavg":
             # unlike fl.round, there is no client-variant objective here —
@@ -218,21 +238,23 @@ def flush(
                 "stream clients run plain SGD — use the synchronous regime"
             )
         rule = cfg.algorithm
-        if rule not in aggregators.AGGREGATORS or rule in aggregators.NEEDS_REFERENCE:
+        if rule not in aggregators.FLAT_CAPABLE or rule in aggregators.NEEDS_REFERENCE:
             raise ValueError(f"unknown stream algorithm {cfg.algorithm}")
-        delta = aggregators.AGGREGATORS[rule](
+        delta_flat = aggregators.FLAT_AGGREGATORS[rule](
             g,
             **aggregators.rule_kwargs(
                 rule, n_byzantine=cfg.n_byzantine_hint, geomed_iters=cfg.geomed_iters
             ),
         )
-        params = pt.tree_add(params, delta)
-        metrics["delta_norm"] = pt.tree_norm(delta)
+        params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, spec))
+        metrics["delta_norm"] = jnp.linalg.norm(delta_flat)
 
     if use_trust:
         metrics["trust_weight_mean"] = jnp.mean(weights)
         metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
-    metrics["update_norm_mean"] = jnp.mean(jax.vmap(pt.tree_norm)(g))
+    if update_norms is None:
+        update_norms = jnp.linalg.norm(g, axis=1)
+    metrics["update_norm_mean"] = jnp.mean(update_norms)
     return params, new_drag, rnd + 1, buf_mod.reset(buf), new_adv, new_trust, metrics
 
 

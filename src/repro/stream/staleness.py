@@ -61,6 +61,11 @@ def make_discount(name: str, a: float = 0.5):
 # async paths share ONE implementation — these wrappers just fix the
 # async argument order.  With discounts = 1 they match the synchronous
 # calls bit-for-bit.
+#
+# These are the PYTREE-ORACLE forms.  The serving flush
+# (``repro.stream.server.flush``) runs the flat update plane instead:
+# ``drag.round_step_flat`` / ``br_drag.round_step_flat`` fold phi(tau)
+# and the trust weights into the fused two-pass kernels.
 
 
 def drag_aggregate(

@@ -145,7 +145,10 @@ def observe(
 
 def divergence_signals(updates_stacked: pt.Pytree, reference: pt.Pytree):
     """Per-worker (1 - cos(g_m, r), ||g_m|| / ||r||) — the two history
-    signals, computed once and shared by sync round and async flush."""
+    signals over stacked pytrees (the ORACLE path; costs a full pass
+    over the stack).  The serving path gets the same signals for free
+    from the calibration kernel's phase-1 scalars via
+    :func:`signals_from_stats`."""
     r_norm = pt.tree_norm(reference, _EPS)
 
     def one(g):
@@ -155,6 +158,21 @@ def divergence_signals(updates_stacked: pt.Pytree, reference: pt.Pytree):
         )
 
     return jax.vmap(one)(updates_stacked)
+
+
+def signals_from_stats(dots, g_sq, r_sq):
+    """Divergence signals from the DoD calibration's phase-1 scalars.
+
+    The fused flush (``kernels.ops.drag_calibrate_reduce`` or the
+    ``round_step_flat`` entry points) already computed <g_m, r>,
+    ||g_m||^2, and ||r||^2 in its first HBM pass — re-deriving
+    (1 - cos, norm ratio) from them makes the trust layer FREE: no
+    second walk over the stacked updates.  Same EPS regularisation as
+    the pytree oracle, so values agree to float tolerance.
+    """
+    gn = jnp.sqrt(g_sq + _EPS)
+    rn = jnp.sqrt(r_sq + _EPS)
+    return 1.0 - dots / (gn * rn), gn / rn
 
 
 #: reputation-weighted mean with uniform fallback when all weights are

@@ -168,6 +168,102 @@ def test_flash_attention_rows_in_v_hull(m):
     assert bool(jnp.all(out >= lo[None, :])) and bool(jnp.all(out <= hi[None, :]))
 
 
+# ------------------------------------------------- flat plane round trips
+# ISSUE 3 satellite: tree_unflatten_vector(tree_flatten_vector(t), t) == t
+# bit-for-bit across mixed dtypes, empty leaves, scalar leaves, and
+# non-contiguous layouts — the invariant the whole flat update plane
+# (repro.core.flat) rests on.
+
+_FLOAT_DTYPES = (np.float32, np.float16, "bfloat16")
+
+_leaf_shape = st.sampled_from(
+    [(), (1,), (3,), (0,), (2, 3), (4, 1, 2), (1, 0, 5), (3, 2, 1, 2)]
+)
+
+
+@st.composite
+def _leaf(draw):
+    shape = draw(_leaf_shape)
+    dtype = draw(st.sampled_from(_FLOAT_DTYPES))
+    base = draw(
+        hnp.arrays(
+            np.float32,
+            shape,
+            elements=st.floats(-1e4, 1e4, width=32, allow_nan=False,
+                               allow_subnormal=False),
+        )
+    )
+    arr = jnp.asarray(base).astype(dtype)
+    if draw(st.booleans()) and len(shape) >= 2:
+        # non-contiguous layout: flattening must follow the LOGICAL
+        # (row-major) order, not whatever the buffer happens to be
+        arr = jnp.swapaxes(arr, 0, 1)
+    return arr
+
+
+@st.composite
+def _tree(draw):
+    n = draw(st.integers(1, 5))
+    leaves = [draw(_leaf()) for _ in range(n)]
+    kind = draw(st.sampled_from(["dict", "list", "nested"]))
+    if kind == "dict":
+        return {f"k{i}": x for i, x in enumerate(leaves)}
+    if kind == "list":
+        return leaves
+    return {"a": leaves[0], "b": {"c": leaves[1:]}}
+
+
+def _assert_trees_bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32)
+        )
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=_tree())
+def test_flatten_unflatten_roundtrip_bitwise(t):
+    """f32 staging is lossless for every <=32-bit float dtype."""
+    vec = pt.tree_flatten_vector(t)
+    assert vec.dtype == jnp.float32
+    assert vec.shape == (pt.tree_size(t),)
+    back = pt.tree_unflatten_vector(vec, t)
+    _assert_trees_bitwise_equal(back, t)
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=_tree())
+def test_flat_spec_roundtrip_bitwise(t):
+    """core.flat's spec-based unflatten agrees with the template-based
+    one and restores shapes/dtypes exactly."""
+    from repro.core import flat as flat_mod
+
+    spec = flat_mod.spec_of(t)
+    assert spec.d == pt.tree_size(t)
+    back = flat_mod.unflatten_tree(flat_mod.flatten_tree(t), spec)
+    _assert_trees_bitwise_equal(back, t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=_tree(), s=st.integers(1, 5))
+def test_update_stack_roundtrip_bitwise(t, s):
+    """Stacked pytree -> UpdateStack -> stacked pytree is the identity,
+    metadata included."""
+    from repro.core import flat as flat_mod
+
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (s,) + x.shape), t)
+    cids = jnp.arange(s, dtype=jnp.int32) * 7 + 3
+    taus = jnp.arange(s, dtype=jnp.int32) % 3
+    stack = flat_mod.stack_updates(stacked, client_ids=cids, staleness=taus)
+    assert stack.data.shape == (s, pt.tree_size(t))
+    _assert_trees_bitwise_equal(stack.to_stacked_pytree(), stacked)
+    np.testing.assert_array_equal(np.asarray(stack.client_ids), np.asarray(cids))
+    np.testing.assert_array_equal(np.asarray(stack.staleness), np.asarray(taus))
+
+
 @settings(max_examples=15, deadline=None)
 @given(m=mat)
 def test_linear_recurrence_zero_decay_is_identity(m):

@@ -84,10 +84,19 @@ def _params():
     return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": jnp.ones(2)}
 
 
+def _flat(tree):
+    from repro.core import flat as flat_mod
+
+    return np.asarray(flat_mod.flatten_tree(tree))
+
+
 class TestBuffer:
     def test_ingest_fill_and_stack(self):
+        """Slots are the flat [K, d] update plane: row i == the flattened
+        i-th upload, bit-for-bit."""
         p = _params()
         buf = buf_mod.init_buffer(p, capacity=4)
+        assert buf.slots.shape == (4, 8)  # d = 6 + 2
         for i in range(4):
             g = jax.tree.map(lambda x: x * (i + 1.0), p)
             buf = buf_mod.ingest(buf, g, dispatch_round=i, is_malicious=(i == 2))
@@ -95,8 +104,8 @@ class TestBuffer:
         np.testing.assert_array_equal(np.asarray(buf.dispatch_rounds), [0, 1, 2, 3])
         np.testing.assert_array_equal(np.asarray(buf.malicious), [0, 0, 1, 0])
         for i in range(4):
-            np.testing.assert_allclose(
-                np.asarray(buf.slots["w"][i]), np.asarray(p["w"]) * (i + 1.0)
+            np.testing.assert_array_equal(
+                np.asarray(buf.slots[i]), _flat(p) * (i + 1.0)
             )
 
     def test_ingest_overflow_drops(self):
@@ -105,14 +114,14 @@ class TestBuffer:
         for i in range(3):
             buf = buf_mod.ingest(buf, jax.tree.map(lambda x: x + i, p), i, False)
         assert int(buf.count) == 2  # third write refused
-        np.testing.assert_allclose(np.asarray(buf.slots["b"][1]), np.asarray(p["b"]) + 1)
+        np.testing.assert_allclose(np.asarray(buf.slots[1]), _flat(p) + 1)
 
     def test_reset_keeps_storage(self):
         p = _params()
         buf = buf_mod.ingest(buf_mod.init_buffer(p, 2), p, 5, True)
         buf2 = buf_mod.reset(buf)
         assert int(buf2.count) == 0
-        np.testing.assert_allclose(np.asarray(buf2.slots["w"][0]), np.asarray(p["w"]))
+        np.testing.assert_allclose(np.asarray(buf2.slots[0]), _flat(p))
 
     def test_staleness_tags(self):
         p = _params()
@@ -129,7 +138,34 @@ class TestBuffer:
         for i in range(8):
             buf = fn(buf, jax.tree.map(lambda x: x * i, p), i, False)
         assert int(buf.count) == 8
-        np.testing.assert_allclose(np.asarray(buf.slots["b"][3]), 3.0 * np.asarray(p["b"]))
+        np.testing.assert_allclose(np.asarray(buf.slots[3]), 3.0 * _flat(p))
+
+    def test_ingest_accepts_already_flat_rows(self):
+        """The flatten boundary is idempotent: a pre-flattened [d] row
+        ingests identically to its pytree form."""
+        p = _params()
+        b1 = buf_mod.ingest(buf_mod.init_buffer(p, 2), p, 0, False)
+        from repro.core import flat as flat_mod
+
+        b2 = buf_mod.ingest(
+            buf_mod.init_buffer(p, 2), flat_mod.flatten_tree(p), 0, False
+        )
+        np.testing.assert_array_equal(np.asarray(b1.slots), np.asarray(b2.slots))
+
+    def test_as_stack_round_trips_metadata(self):
+        from repro.core import flat as flat_mod
+        from repro.stream import buffer as bm
+
+        p = _params()
+        buf = bm.init_buffer(p, 3)
+        for i, t in enumerate((0, 2, 4)):
+            buf = bm.ingest(buf, p, t, False, client_id=10 + i)
+        stack = bm.as_stack(buf, flat_mod.spec_of(p), server_round=4)
+        np.testing.assert_array_equal(np.asarray(stack.staleness), [4, 2, 0])
+        np.testing.assert_array_equal(np.asarray(stack.client_ids), [10, 11, 12])
+        back = stack.row_tree(1)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # --------------------------------------------------------------- staleness
