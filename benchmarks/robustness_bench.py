@@ -7,7 +7,9 @@ Each synchronous cell runs the synthetic least-squares federation from
 break rate (fraction of seeds whose final loss left the attack-free
 envelope).  The async cells drive the two stream-native attacks
 (``buffer_flood``, ``staleness_camouflage``) through the real
-``repro.stream`` engine.
+``repro.stream`` engine; the sharded cells re-run ``buffer_flood``
+against the pod-sharded buffer + hierarchical one-psum flush
+(``repro.stream.sharded``, ``SHARDED_PODS`` pods).
 
 The headline acceptance invariant — checked and recorded under
 ``acceptance`` in the JSON — is that trust-weighted BR-DRAG
@@ -59,6 +61,10 @@ AGGREGATORS_FULL = AGGREGATORS_SMOKE + ["trimmed_mean", "geomed"]
 ASYNC_ATTACKS = ["buffer_flood", "staleness_camouflage"]
 ASYNC_AGGREGATORS = ["fedavg", "br_drag", "br_drag_trust"]
 
+#: pod count of the sharded async cells (``repro.stream.sharded``):
+#: buffer_flood vs the pod-sharded buffer + hierarchical one-psum flush
+SHARDED_PODS = 2
+
 BREAK_FACTOR = 5.0
 
 
@@ -97,29 +103,39 @@ def sync_matrix(smoke: bool) -> list[dict]:
     return cells
 
 
-def async_matrix(smoke: bool) -> list[dict]:
+def async_matrix(smoke: bool, shards: int = 0) -> list[dict]:
     seeds = (0,) if smoke else (0, 1, 2)
     flushes = 30 if smoke else 60
+    regime = f"async_sharded_p{shards}" if shards else "async"
+    attacks = ["buffer_flood"] if shards else ASYNC_ATTACKS
     cells = []
-    for attack in ASYNC_ATTACKS:
+    for attack in attacks:
         for agg in ASYNC_AGGREGATORS:
             finals = []
             for seed in seeds:
                 sc = Scenario(aggregator=agg, attack=attack, seed=seed)
-                finals.append(run_stream_scenario(sc, flushes=flushes)["final_loss"])
+                finals.append(
+                    run_stream_scenario(sc, flushes=flushes, shards=shards)[
+                        "final_loss"
+                    ]
+                )
             cell = {
-                "aggregator": agg, "attack": attack, "regime": "async",
+                "aggregator": agg, "attack": attack, "regime": regime,
                 "heterogeneity": 1.0, "malicious_fraction": 0.4,
                 "final_loss": sum(finals) / len(finals),
                 "final_loss_per_seed": finals, "seeds": len(seeds),
             }
             cells.append(cell)
-            emit(f"robustness/async/{attack}/{agg}", 0.0, f"loss={cell['final_loss']:.4g}")
+            emit(f"robustness/{regime}/{attack}/{agg}", 0.0,
+                 f"loss={cell['final_loss']:.4g}")
     return cells
 
 
-def check_acceptance(cells: list[dict], async_cells: list[dict]) -> dict:
-    """br_drag_trust < fedavg on final loss in every byzantine cell."""
+def check_acceptance(cells: list[dict], *cell_groups: list[dict]) -> dict:
+    """br_drag_trust < fedavg on final loss in every byzantine cell.
+
+    Each group (sync / async / async-sharded) is checked independently —
+    keys collide across regimes, never within one."""
     def by(cs, agg):
         return {
             (c["attack"], c["heterogeneity"]): c["final_loss"]
@@ -127,11 +143,15 @@ def check_acceptance(cells: list[dict], async_cells: list[dict]) -> dict:
         }
 
     failures = []
-    for cs in (cells, async_cells):
+    for cs in (cells,) + cell_groups:
         trust, fedavg = by(cs, "br_drag_trust"), by(cs, "fedavg")
         for k in fedavg:
             if k in trust and not trust[k] < fedavg[k]:
-                failures.append({"cell": list(k), "br_drag_trust": trust[k], "fedavg": fedavg[k]})
+                regime = next((c.get("regime", "sync") for c in cs), "sync")
+                failures.append({
+                    "cell": list(k), "regime": regime,
+                    "br_drag_trust": trust[k], "fedavg": fedavg[k],
+                })
     return {"br_drag_trust_beats_fedavg": not failures, "failures": failures}
 
 
@@ -139,22 +159,25 @@ def run_matrix(smoke: bool, out: str) -> dict:
     t0 = time.time()
     cells = sync_matrix(smoke)
     async_cells = async_matrix(smoke)
-    acceptance = check_acceptance(cells, async_cells)
+    sharded_cells = async_matrix(smoke, shards=SHARDED_PODS)
+    acceptance = check_acceptance(cells, async_cells, sharded_cells)
     record = {
         "meta": {
             "smoke": smoke,
             "break_factor": BREAK_FACTOR,
             "attacks": [a for a, _ in ATTACKS] + ASYNC_ATTACKS,
             "aggregators": sorted({c["aggregator"] for c in cells}),
+            "sharded_pods": SHARDED_PODS,
             "wall_s": time.time() - t0,
         },
         "cells": cells,
         "async_cells": async_cells,
+        "sharded_cells": sharded_cells,
         "acceptance": acceptance,
     }
     with open(out, "w") as f:
         json.dump(record, f, indent=2)
-    n = len(cells) + len(async_cells)
+    n = len(cells) + len(async_cells) + len(sharded_cells)
     print(f"wrote {out}: {n} cells, acceptance={acceptance['br_drag_trust_beats_fedavg']}",
           flush=True)
     if not acceptance["br_drag_trust_beats_fedavg"]:

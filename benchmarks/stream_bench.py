@@ -2,10 +2,12 @@
 
 Measures the two serving hot paths — donated buffer INGEST (one slot
 write per accepted upload) and threshold FLUSH (staleness-aware
-calibration + any registry rule) — plus the end-to-end event loop, and
-writes ``BENCH_stream.json``::
+calibration + any registry rule) — plus the end-to-end event loop and
+the SHARDED flush (per-pod sub-buffers + hierarchical one-psum flush,
+``repro.stream.sharded``), and writes ``BENCH_stream.json``::
 
-    {"ingest": {...}, "flush": {rule: {...}}, "e2e": {...}}
+    {"ingest": {...}, "flush": {rule: {...}}, "e2e": {...},
+     "sharded": {"p1": {...}, "p4": {...}}}
 
 CSV rows (``benchmarks.common.emit``) ride along for the harness.
 Scale via REPRO_BENCH_FAST=1 / REPRO_BENCH_ROUNDS.
@@ -125,6 +127,58 @@ def bench_flush(iters: int = 20) -> dict:
     return out
 
 
+def bench_sharded_flush(iters: int = 20, pods=(1, 4)) -> dict:
+    """Hierarchical (one-psum) drag flush over p pod sub-buffers.
+
+    On this CPU container the pods run the emulation path on one
+    device; the measured quantity is the per-pod two-pass structure
+    (p x [K/p, d] kernel sweeps + one reduction) against the single
+    [K, d] flush above.  On a real pod mesh the same program shard_maps
+    with ONE psum of the [d] partials.
+    """
+    from repro.stream import sharded as sharded_mod
+
+    key = jax.random.PRNGKey(0)
+    p = _params(DIM)
+    out: dict = {}
+    for n_pods in pods:
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=CAPACITY, discount="poly",
+            shards=n_pods,
+        )
+        fn = make_flush_fn(None, cfg, with_root=False)
+        ingest = sharded_mod.make_ingest_fn()
+        buf = sharded_mod.init_sharded_buffer(p, CAPACITY, n_pods)
+        for i in range(CAPACITY):
+            gi = {"w": jax.random.normal(jax.random.fold_in(key, i), (DIM,))}
+            buf = ingest(buf, gi, i, False, i)
+        dstate = drag.init_state(p)
+        params, rnd = p, jnp.zeros((), jnp.int32)
+
+        params, dstate, rnd, buf, _, _, m = fn(params, dstate, rnd, buf, key, (), ())
+        jax.block_until_ready(params)
+        t0 = time.time()
+        for _ in range(iters):
+            params, dstate, rnd, buf, _, _, m = fn(
+                params, dstate, rnd, buf, key, (), ()
+            )
+        jax.block_until_ready(params)
+        sec = (time.time() - t0) / iters
+        out[f"p{n_pods}"] = {
+            "pods": n_pods,
+            "pod_capacity": CAPACITY // n_pods,
+            "us_per_flush": sec * 1e6,
+            "flushes_per_s": 1.0 / sec,
+            "updates_per_s": CAPACITY / sec,
+        }
+        emit(
+            f"stream/sharded_flush/drag/p{n_pods}_K{CAPACITY}_d{DIM}",
+            sec * 1e6,
+            f"{CAPACITY / sec:.0f}upd/s",
+        )
+    return out
+
+
 def bench_e2e() -> dict:
     from repro.stream.server import StreamExperimentConfig, run_stream_experiment
 
@@ -159,6 +213,7 @@ def run() -> None:
     record = {
         "ingest": bench_ingest(128 if FAST else 512),
         "flush": bench_flush(5 if FAST else 20),
+        "sharded": bench_sharded_flush(5 if FAST else 20),
         "e2e": bench_e2e(),
     }
     with open("BENCH_stream.json", "w") as f:

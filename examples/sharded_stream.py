@@ -1,0 +1,96 @@
+"""Sharded ingest buffer walkthrough — the hierarchical one-psum flush.
+
+    PYTHONPATH=src python examples/sharded_stream.py
+
+Demonstrates, on one CPU device (the emulation path — on a pod mesh the
+same program shard_maps with a real psum):
+
+  1. hash routing: client ids spread over per-pod [K/p, d] sub-buffers,
+     with the least-full fallback soaking up a crowded pod;
+  2. the hierarchical flush: each pod runs the SAME two fused HBM passes
+     as the single-buffer serving path (dot_norms + blend_reduce) over
+     its own rows, and everything cross-pod — the partial [d] weighted
+     sums, the scattered DoD/trust scalars — meets in exactly ONE psum;
+  3. parity: p = 1 is bit-for-bit the single-buffer flush, p > 1 is the
+     same math reassociated across pods (~1e-7).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flat_mod
+from repro.kernels import instrument
+from repro.kernels import ops as kops
+from repro.stream import buffer as buf_mod
+from repro.stream import sharded
+
+
+def banner(s):
+    print(f"\n=== {s} " + "=" * max(8, 60 - len(s)))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((2048,)), "b": jnp.zeros((64,))}
+    K, P = 16, 4
+
+    banner(f"1. hash-routed ingest: K={K} uploads into {P} pods of {K // P}")
+    buf = sharded.init_sharded_buffer(params, K, P)
+    single = buf_mod.init_buffer(params, K)
+    # a crowded tenant: half the clients share pod route_pod(cid)=home
+    cids = list(range(100, 100 + K))
+    for i, cid in enumerate(cids):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (2048,)),
+             "b": jax.random.normal(jax.random.fold_in(key, 500 + i), (64,))}
+        home = int(sharded.route_pod(cid, P))
+        buf = sharded.ingest(buf, g, i % 3, False, cid)
+        single = buf_mod.ingest(single, g, i % 3, False, cid)
+        print(f"  client {cid}: home pod {home}, counts now "
+              f"{np.asarray(buf.counts).tolist()}")
+    assert int(sharded.total_count(buf)) == K  # fallback => nothing dropped
+
+    banner("2. hierarchical flush: two passes per pod, ONE psum")
+    r = jax.random.normal(jax.random.fold_in(key, 999), (2048 + 64,))
+    disc = (1.0 + sharded.staleness(buf, 3).astype(jnp.float32)) ** -0.5
+    with instrument.count_collective_calls() as coll:
+        with instrument.count_kernel_calls() as kern:
+            delta, lam, stats = sharded.hierarchical_flush(
+                buf.slots, r, mode="drag", c=0.3, discounts2=disc,
+            )
+    print(f"  kernel calls: {kern}  (dot_norms + blend_reduce per pod)")
+    print(f"  cross-pod reductions: {coll}  <- the ONE psum")
+    assert coll == instrument.ONE_PSUM_CALLS
+    assert kern["dot_norms"] == P and kern["blend_reduce"] == P
+    print(f"  per-flush collective traffic: one [d]={r.shape[0]} partial sum "
+          f"+ {3 * K} scalars — O(d), independent of K")
+
+    banner("3. parity vs the single-buffer oracle")
+    phi = (1.0 + buf_mod.staleness(single, 3).astype(jnp.float32)) ** -0.5
+    d_single = kops.drag_calibrate_reduce(
+        single.slots, r, 0.3, "drag", discounts=phi
+    )[0]
+    err = float(jnp.max(jnp.abs(delta - d_single)))
+    print(f"  p={P} vs single buffer: max|err| = {err:.2e} (reassociation)")
+    assert err < 1e-5
+
+    buf1 = sharded.init_sharded_buffer(params, K, 1)
+    for i, cid in enumerate(cids):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (2048,)),
+             "b": jax.random.normal(jax.random.fold_in(key, 500 + i), (64,))}
+        buf1 = sharded.ingest(buf1, g, i % 3, False, cid)
+    d_p1 = sharded.hierarchical_flush(
+        buf1.slots, r, mode="drag", c=0.3, discounts2=phi[None],
+    )[0]
+    exact = bool((np.asarray(d_p1) == np.asarray(d_single)).all())
+    print(f"  p=1 vs single buffer: bit-for-bit = {exact}")
+    assert exact
+
+    # egress: the ONE unflatten of the aggregated [d] delta
+    delta_tree = flat_mod.unflatten_tree(delta, flat_mod.spec_of(params))
+    print(f"  egress unflatten -> {list(delta_tree)} leaves, "
+          f"delta_norm = {float(jnp.linalg.norm(delta)):.4f}")
+    print("\nsharded plane matches the single-buffer oracle.")
+
+
+if __name__ == "__main__":
+    main()

@@ -238,11 +238,17 @@ def run_stream_scenario(
     discount: str = "poly",
     discount_a: float = 0.5,
     latency: str = "exponential",
+    shards: int = 0,
 ) -> dict:
     """The same objective served through the REAL async engine
     (``repro.stream``): event stream + biased arrivals + ingest buffer +
     staleness-discounted flushes.  This is where ``buffer_flood`` and
     ``staleness_camouflage`` actually bite.
+
+    ``shards > 0`` serves the cell through the pod-sharded buffer and
+    the hierarchical one-psum flush (``repro.stream.sharded``) — the
+    layout ``buffer_flood``'s hash-biased arrivals can crowd a single
+    pod of.
     """
     from repro.adversary.stream_attacks import BiasedLatency
     from repro.stream.events import EventStream, make_latency
@@ -276,6 +282,7 @@ def run_stream_scenario(
         if sc.malicious_fraction > 0 else 0,
         trust=use_trust,
         trust_kw=sc.trust_kw,
+        shards=shards,
     )
     server = AsyncStreamServer(loss_fn, {"w": w0}, cfg, n_clients=sc.n_clients)
     lookup = lambda m: bool(malicious[m])  # noqa: E731

@@ -12,6 +12,13 @@ equivalence is asserted by tests/test_stream.py).
 ``to_stream_state`` / ``to_sync_state`` convert server state both ways so
 a deployment can warm up synchronously and then go async (or drain the
 buffer and fall back) without restarting training.
+
+The equivalence extends to the SHARDED plane (``repro.stream.sharded``):
+``streamed_round(..., shards=1)`` runs the same round through the
+pod-sharded buffer and the hierarchical one-psum flush and still matches
+``federated_round`` bit-for-bit (a single pod runs the identical fused
+passes); ``shards=p`` reassociates the reduction across pods (~1e-5,
+pinned by tests/test_sharded_buffer.py).
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.core import pytree as pt
 from repro.fl.round import RoundConfig, ServerState
 from repro.stream import buffer as buf_mod
 from repro.stream import server as stream_server
+from repro.stream import sharded as sharded_mod
 from repro.stream.events import Constant, EventStream
 
 #: algorithms whose clients are plain local SGD — exactly the server-side
@@ -33,7 +41,9 @@ from repro.stream.events import Constant, EventStream
 STREAMABLE = frozenset(aggregators.AGGREGATORS)
 
 
-def stream_config_from_round(cfg: RoundConfig, capacity: int) -> stream_server.StreamConfig:
+def stream_config_from_round(
+    cfg: RoundConfig, capacity: int, shards: int = 0
+) -> stream_server.StreamConfig:
     """RoundConfig -> StreamConfig with zero-staleness semantics (phi=none)."""
     if cfg.algorithm not in STREAMABLE:
         raise ValueError(
@@ -41,6 +51,7 @@ def stream_config_from_round(cfg: RoundConfig, capacity: int) -> stream_server.S
             f"cannot run through the stream engine; streamable: {sorted(STREAMABLE)}"
         )
     return stream_server.StreamConfig(
+        shards=shards,
         algorithm=cfg.algorithm,
         buffer_capacity=capacity,
         local_steps=cfg.local_steps,
@@ -58,14 +69,23 @@ def stream_config_from_round(cfg: RoundConfig, capacity: int) -> stream_server.S
     )
 
 
-def to_stream_state(state: ServerState, capacity: int) -> stream_server.StreamState:
+def to_stream_state(
+    state: ServerState, capacity: int, shards: int = 0, mesh=None
+) -> stream_server.StreamState:
     """Adopt a synchronous server's model + reference EMA into the async
-    engine (buffer starts empty)."""
+    engine (buffer starts empty; ``shards > 0`` allocates the pod-sharded
+    sub-buffers instead of the flat [K, d] plane)."""
+    if shards > 0:
+        buffer = sharded_mod.init_sharded_buffer(
+            state.params, capacity, shards, mesh
+        )
+    else:
+        buffer = buf_mod.init_buffer(state.params, capacity)
     return stream_server.StreamState(
         params=state.params,
         round=state.round,
         drag=state.drag,
-        buffer=buf_mod.init_buffer(state.params, capacity),
+        buffer=buffer,
         adversary=state.adversary,
         trust=state.trust,
     )
@@ -101,6 +121,8 @@ def streamed_round(
     key,
     root_batches=None,
     jit_client: bool = True,
+    shards: int = 0,
+    mesh=None,
 ) -> tuple[ServerState, dict]:
     """One ``federated_round`` driven through the stream engine.
 
@@ -112,23 +134,34 @@ def streamed_round(
     the two trajectories comparable bit-for-bit (a jitted program may
     fuse/contract differently and drift by ~1 ulp while staying
     mathematically identical).
+
+    ``shards > 0`` routes the round through the SHARDED ingest buffer
+    and the hierarchical one-psum flush (``repro.stream.sharded``) —
+    S must divide into the pods.  ``shards=1`` extends the bit-for-bit
+    equivalence proof to the sharded plane (the single-pod flush is the
+    single-buffer flush operation-for-operation); ``shards > 1`` is the
+    same math reassociated across pods (~1e-5).
     """
     s = int(malicious_mask.shape[0])
-    scfg = stream_config_from_round(cfg, capacity=s)
+    scfg = stream_config_from_round(cfg, capacity=s, shards=shards)
     if jit_client:
         client_fn = stream_server.make_client_fn(loss_fn, scfg)
     else:
         from repro.fl.client import local_update
 
         client_fn = lambda p, b: local_update(loss_fn, p, b, scfg.lr, variant="sgd")[0]
-    ingest_fn = buf_mod.make_ingest_fn()
 
     es = EventStream(n_clients=max(s, 1), latency=Constant(0.0), seed=0)
     rnd_host = int(state.round)
     for i in range(s):
         es.dispatch(rnd_host, client_id=int(selected_idx[i]))
 
-    buf = buf_mod.init_buffer(state.params, s)
+    if shards > 0:
+        ingest_fn = sharded_mod.make_ingest_fn()
+        buf = sharded_mod.init_sharded_buffer(state.params, s, shards, mesh)
+    else:
+        ingest_fn = buf_mod.make_ingest_fn()
+        buf = buf_mod.init_buffer(state.params, s)
     for i in range(s):
         ev = es.next_completion()  # FIFO at zero latency -> worker order
         g = client_fn(state.params, pt.tree_index(batches, ev.seq))
@@ -139,7 +172,7 @@ def streamed_round(
     flush_args = [loss_fn, scfg, state.params, state.drag, state.round, buf, key]
     params, new_drag, rnd, _, new_adv, new_trust, metrics = stream_server.flush(
         *flush_args, root_batches=root_batches,
-        adv_state=state.adversary, trust_state=state.trust,
+        adv_state=state.adversary, trust_state=state.trust, mesh=mesh,
     )
     new_state = ServerState(
         params=params,

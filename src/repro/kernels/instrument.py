@@ -1,4 +1,4 @@
-"""Kernel-call instrumentation: the two-HBM-pass acceptance probe.
+"""Kernel-call instrumentation: the two-HBM-pass and one-psum probes.
 
 The flat update plane's headline invariant — a whole DRAG/BR-DRAG flush
 is exactly two kernel passes over the stacked updates (``dot_norms`` +
@@ -6,6 +6,12 @@ is exactly two kernel passes over the stacked updates (``dot_norms`` +
 in ``benchmarks/aggplane_bench.py``.  This context manager is the one
 shared probe both use, so a future third kernel in the flush changes
 the counted set in exactly one place.
+
+The sharded plane (``repro.stream.sharded``) adds the cross-pod
+invariant: a hierarchical flush performs exactly ONE cross-pod
+reduction (``psum_bundle``).  :func:`count_collective_calls` counts the
+call sites and :func:`count_primitive` counts the lowered ``psum``
+primitives in a jaxpr — program-structure quantities, both.
 """
 from __future__ import annotations
 
@@ -46,3 +52,52 @@ def count_kernel_calls():
     finally:
         for name, fn in originals.items():
             setattr(dk, name, fn)
+
+
+#: what one hierarchical (sharded) flush must invoke — the one-psum
+#: invariant: every cross-pod partial rides a single reduction
+ONE_PSUM_CALLS = {"psum_bundle": 1}
+
+
+@contextlib.contextmanager
+def count_collective_calls():
+    """Counts :func:`repro.stream.sharded.psum_bundle` invocations.
+
+    Same per-call-site (trace-time under jit) semantics as
+    :func:`count_kernel_calls`; the sharded flush must match
+    :data:`ONE_PSUM_CALLS` — both on the mesh path (a real ``psum``)
+    and on the single-device emulation path.
+    """
+    from repro.stream import sharded
+
+    calls = {"psum_bundle": 0}
+    original = sharded.psum_bundle
+
+    def fn(*args, **kwargs):
+        calls["psum_bundle"] += 1
+        return original(*args, **kwargs)
+
+    try:
+        sharded.psum_bundle = fn
+        yield calls
+    finally:
+        sharded.psum_bundle = original
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in a jaxpr, nested eqns included.
+
+    ``count_primitive(jax.make_jaxpr(flush_fn)(...).jaxpr, "psum")`` is
+    the lowered-program form of the one-psum assertion: shard_map /
+    scan / cond bodies are walked recursively.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for sub in v if isinstance(v, (list, tuple)) else (v,):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    n += count_primitive(inner, name)
+    return n

@@ -22,6 +22,18 @@ def make_test_mesh(devices=None):
     return jax.make_mesh((d, n // d), ("data", "model"), devices=devices[: d * (n // d)])
 
 
+def make_pod_mesh(n_pods: int, devices=None):
+    """1-D ``("pod",)`` mesh for the sharded ingest buffer
+    (``repro.stream.sharded``): one pod per device, rows = clients shard
+    over it.  Uses the first ``n_pods`` local devices."""
+    devices = devices if devices is not None else jax.devices()
+    if len(devices) < n_pods:
+        raise ValueError(
+            f"need {n_pods} devices for {n_pods} pods, have {len(devices)}"
+        )
+    return jax.make_mesh((n_pods,), ("pod",), devices=devices[:n_pods])
+
+
 def batch_axes_of(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

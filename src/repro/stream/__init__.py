@@ -4,9 +4,11 @@ Event-driven serving shape for the paper's aggregation math: a
 virtual-time client simulator (``events``), a fixed-capacity donated
 ingest buffer (``buffer`` — a flat [K, d] slot matrix, THE async
 flatten boundary of the flat update plane in ``repro.core.flat``),
-staleness-aware DRAG/BR-DRAG calibration (``staleness``), and the
-async server loop (``server``, flushing through the fused two-pass
-kernels).  The sync bridge lives in ``repro.fl.bridge``.
+staleness-aware DRAG/BR-DRAG calibration (``staleness``), the async
+server loop (``server``, flushing through the fused two-pass kernels),
+and the mesh-sharded buffer (``sharded`` — per-pod [K/p, d] sub-buffers,
+hash-routed ingest, hierarchical one-psum flush).  The sync bridge
+lives in ``repro.fl.bridge``.
 """
 from repro.stream.buffer import (  # noqa: F401
     BufferState,
@@ -21,6 +23,12 @@ from repro.stream.events import (  # noqa: F401
     ClientEvent,
     EventStream,
     make_latency,
+)
+from repro.stream.sharded import (  # noqa: F401
+    ShardedBufferState,
+    hierarchical_flush,
+    init_sharded_buffer,
+    route_pod,
 )
 from repro.stream.server import (  # noqa: F401
     AsyncStreamServer,

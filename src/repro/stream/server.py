@@ -51,6 +51,7 @@ from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.fl.client import local_update
 from repro.stream import buffer as buf_mod
+from repro.stream import sharded as sharded_mod
 from repro.stream import staleness as stale
 from repro.stream.events import EventStream
 from repro.trust import reputation as trust_mod
@@ -77,6 +78,8 @@ class StreamConfig:
     trust: bool = False  # divergence-history reputation (drag/br_drag)
     trust_kw: tuple = ()  # TrustConfig overrides
     root_refresh_every: int = 1  # reuse cached r^t across this many versions
+    shards: int = 0  # p — per-pod sub-buffers + hierarchical one-psum
+    #                    flush (repro.stream.sharded); 0 = single buffer
 
 
 class StreamState(NamedTuple):
@@ -95,11 +98,15 @@ def init_stream_state(
     capacity: int,
     cfg: StreamConfig | None = None,
     n_clients: int | None = None,
+    mesh=None,
 ) -> StreamState:
     # Copy params for the same aliasing reason as fl.round.init_server_state.
     #
     # ``cfg`` sizes the adversary memory and (with ``n_clients``) the
     # trust table; without it both stay empty — the pre-engine behaviour.
+    # ``cfg.shards > 0`` swaps the flat [K, d] buffer for p pod-sharded
+    # [K/p, d] sub-buffers (``repro.stream.sharded``); ``mesh`` places
+    # them over its "pod" axis.
     adv_state: pt.Pytree = ()
     trust_state: pt.Pytree = ()
     if cfg is not None:
@@ -108,11 +115,15 @@ def init_stream_state(
             if not n_clients:
                 raise ValueError("cfg.trust=True needs n_clients for the trust table")
             trust_state = trust_mod.init_trust(n_clients)
+    if cfg is not None and cfg.shards > 0:
+        buffer = sharded_mod.init_sharded_buffer(params, capacity, cfg.shards, mesh)
+    else:
+        buffer = buf_mod.init_buffer(params, capacity)
     return StreamState(
         params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
         round=jnp.zeros((), jnp.int32),
         drag=drag.init_state(params),
-        buffer=buf_mod.init_buffer(params, capacity),
+        buffer=buffer,
         adversary=adv_state,
         trust=trust_state,
     )
@@ -130,6 +141,7 @@ def flush(
     adv_state: pt.Pytree = (),  # adversary memory (repro.adversary)
     trust_state: pt.Pytree = (),  # TrustState | ()
     reference=None,  # precomputed r^t (RootReferenceCache); overrides root_batches
+    mesh=None,  # pod mesh for the sharded buffer (repro.stream.sharded)
 ):
     """One global step from a full buffer; returns
     (params', drag', round+1, reset buffer, adv_state', trust_state',
@@ -141,7 +153,16 @@ def flush(
     the staleness discounts and trust weights folded into the reduction
     epilogue, and the trust signals reuse the calibration's phase-1
     scalars — only the aggregated [d] delta is ever unflattened.
+
+    A sharded buffer (``cfg.shards > 0``) takes the hierarchical path:
+    per-pod fused passes whose partials meet in one psum.
     """
+    if isinstance(buf, sharded_mod.ShardedBufferState):
+        return _flush_sharded(
+            loss_fn, cfg, params, drag_state, rnd, buf, key,
+            root_batches=root_batches, adv_state=adv_state,
+            trust_state=trust_state, reference=reference, mesh=mesh,
+        )
     # the buffer IS the flat plane: view it as the UpdateStack whose
     # metadata (staleness tags, client ids) is THE source the discounts
     # and the trust layer consume below
@@ -258,7 +279,132 @@ def flush(
     return params, new_drag, rnd + 1, buf_mod.reset(buf), new_adv, new_trust, metrics
 
 
-def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
+#: stream algorithms with a hierarchical (one-psum) sharded flush —
+#: per-row blend coefficients are pod-local for these, so the cross-pod
+#: traffic is exactly the partial [d] sums
+SHARDABLE = ("fedavg", "drag", "br_drag")
+
+
+def _flush_sharded(
+    loss_fn: Callable,
+    cfg: StreamConfig,
+    params: pt.Pytree,
+    drag_state: drag.DragState,
+    rnd: jax.Array,
+    buf: sharded_mod.ShardedBufferState,
+    key,
+    root_batches=None,
+    adv_state: pt.Pytree = (),
+    trust_state: pt.Pytree = (),
+    reference=None,
+    mesh=None,
+):
+    """:func:`flush` on the sharded plane (``repro.stream.sharded``).
+
+    Same contract and return signature; the aggregation core is the
+    hierarchical per-pod two-pass flush whose partials meet in one psum.
+    Rows are in POD-MAJOR order (the row order of the sharded plane);
+    at p = 1 that is arrival order and the whole flush is bit-for-bit
+    the single-buffer flush.  Adversary crafting and the trust update
+    run on the replicated [K]-sized quantities / the [K, d] pod-major
+    view OUTSIDE the manual region — the serving reduction itself stays
+    one psum.
+    """
+    p, kp, d = buf.slots.shape
+    k = p * kp
+    spec = flat_mod.spec_of(params)
+    taus2 = sharded_mod.staleness(buf, rnd)  # [p, K/p], replicated metadata
+    discounts2 = stale.make_discount(cfg.discount, cfg.discount_a)(taus2)
+    taus, discounts = taus2.reshape(k), discounts2.reshape(k)
+    client_ids = buf.client_ids.reshape(k)
+
+    adv = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
+    if jax.tree.structure(adv_state) != jax.tree.structure(adv.init()):
+        raise ValueError(
+            f"attack {cfg.attack!r} carries state; build the stream state "
+            "with init_stream_state(params, capacity, cfg)"
+        )
+    ctx = adversary_engine.AttackContext(
+        key=key, updates=buf.slots.reshape(k, d),
+        malicious_mask=buf.malicious.reshape(k), round=rnd,
+        taus=taus, discounts=discounts, spec=spec,
+    )
+    g, new_adv = adv.craft(adv_state, ctx)
+    slots3 = g.reshape(p, kp, d)
+
+    use_trust = cfg.trust and cfg.algorithm in ("drag", "br_drag")
+    if cfg.trust and not use_trust:
+        raise ValueError(
+            f"trust reputation needs a reference direction; stream algorithm "
+            f"{cfg.algorithm!r} has none (use drag or br_drag)"
+        )
+    if use_trust and not isinstance(trust_state, trust_mod.TrustState):
+        raise ValueError(
+            "cfg.trust=True needs a trust table; build the stream state "
+            "with init_stream_state(params, capacity, cfg, n_clients)"
+        )
+    tcfg = trust_mod.TrustConfig(**dict(cfg.trust_kw)) if use_trust else None
+    weights = (
+        trust_mod.reputation(trust_state, client_ids, tcfg) if use_trust else None
+    )
+
+    metrics: dict = {
+        "staleness_mean": jnp.mean(taus.astype(jnp.float32)),
+        "staleness_max": jnp.max(taus),
+        "discount_mean": jnp.mean(discounts),
+    }
+    new_drag = drag_state
+    new_trust = trust_state
+
+    if cfg.algorithm == "drag":
+        params, new_drag, dm, stats = sharded_mod.drag_round_step(
+            params, drag_state, slots3, alpha=cfg.alpha, c=cfg.c,
+            discounts2=discounts2, weights=weights, mesh=mesh,
+        )
+        metrics.update(dm)
+        if use_trust:
+            div, nr = trust_mod.signals_from_stats(*stats)
+            new_trust = trust_mod.observe(
+                trust_state, client_ids, div, nr, tcfg,
+                gate=drag_state.initialized,
+            )
+    elif cfg.algorithm == "br_drag":
+        if reference is None:
+            assert root_batches is not None, "br_drag needs a root dataset"
+            grad_fn = jax.grad(loss_fn)
+            reference = br_drag.root_reference(
+                params, lambda p_, b: grad_fn(p_, b), root_batches, cfg.lr
+            )
+        r_flat = flat_mod.flatten_tree(reference)
+        params, dm, stats = sharded_mod.br_drag_round_step(
+            params, slots3, r_flat, c=cfg.c_br, discounts2=discounts2,
+            weights=weights, mesh=mesh,
+        )
+        metrics.update(dm)
+        if use_trust:
+            div, nr = trust_mod.signals_from_stats(*stats)
+            new_trust = trust_mod.observe(trust_state, client_ids, div, nr, tcfg)
+    elif cfg.algorithm == "fedavg":
+        delta_flat, stats = sharded_mod.mean_flush(slots3, mesh=mesh)
+        params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, spec))
+        metrics["delta_norm"] = jnp.linalg.norm(delta_flat)
+    else:
+        raise ValueError(
+            f"stream algorithm {cfg.algorithm!r} has no hierarchical sharded "
+            f"flush (shardable: {SHARDABLE}); use shards=0"
+        )
+
+    if use_trust:
+        metrics["trust_weight_mean"] = jnp.mean(weights)
+        metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
+    metrics["update_norm_mean"] = jnp.mean(jnp.sqrt(stats[1]))
+    return (
+        params, new_drag, rnd + 1, sharded_mod.reset(buf), new_adv, new_trust,
+        metrics,
+    )
+
+
+def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool, mesh=None):
     """Jitted flush.  The BUFFER is donated (its slot storage is reused by
     the reset buffer); params are NOT — in-flight dispatch snapshots alias
     the pre-flush params and must stay valid.
@@ -266,7 +412,10 @@ def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
     The with-root variant takes the PRECOMPUTED reference r^t (from
     :class:`RootReferenceCache` via :func:`make_root_fn`) instead of raw
     root batches, so the D_root SGD pass is not baked into — and re-run
-    by — every flush."""
+    by — every flush.
+
+    ``mesh`` (sharded buffers only) is the pod mesh the hierarchical
+    flush shard_maps over; None runs the single-device emulation."""
     if with_root:
 
         @partial(jax.jit, donate_argnums=(3,))
@@ -274,6 +423,7 @@ def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
             return flush(
                 loss_fn, cfg, params, drag_state, rnd, buf, key,
                 adv_state=adv_state, trust_state=trust_state, reference=reference,
+                mesh=mesh,
             )
 
     else:
@@ -282,7 +432,7 @@ def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool):
         def fn(params, drag_state, rnd, buf, key, adv_state, trust_state):
             return flush(
                 loss_fn, cfg, params, drag_state, rnd, buf, key,
-                adv_state=adv_state, trust_state=trust_state,
+                adv_state=adv_state, trust_state=trust_state, mesh=mesh,
             )
 
     return fn
@@ -366,13 +516,19 @@ class AsyncStreamServer:
         cfg: StreamConfig,
         n_clients: int | None = None,
         root_cache: bool = True,
+        mesh=None,  # pod mesh for cfg.shards > 0 (None = emulation path)
     ):
         self.cfg = cfg
         self.with_root = cfg.algorithm in ("br_drag", "fltrust")
         self.adversary = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
-        self.state = init_stream_state(params, cfg.buffer_capacity, cfg, n_clients)
-        self._ingest = buf_mod.make_ingest_fn()
-        self._flush = make_flush_fn(loss_fn, cfg, self.with_root)
+        self.state = init_stream_state(
+            params, cfg.buffer_capacity, cfg, n_clients, mesh
+        )
+        self._ingest = (
+            sharded_mod.make_ingest_fn() if cfg.shards > 0
+            else buf_mod.make_ingest_fn()
+        )
+        self._flush = make_flush_fn(loss_fn, cfg, self.with_root, mesh)
         self._client = make_client_fn(loss_fn, cfg)
         self.root_cache = RootReferenceCache(
             make_root_fn(loss_fn, cfg), cfg.root_refresh_every, enabled=root_cache
@@ -466,6 +622,7 @@ class StreamExperimentConfig:
     root_samples: int = 3000
     root_refresh_every: int = 1  # r^t cache coarsening (1 = exact)
     root_cache: bool = True  # disable to force a D_root pass per flush
+    shards: int = 0  # pod-sharded ingest buffer (repro.stream.sharded)
     eval_every: int = 10  # in flushes
     seed: int = 0
 
@@ -523,6 +680,7 @@ def run_stream_experiment(
         trust=exp.trust,
         trust_kw=exp.trust_kw,
         root_refresh_every=exp.root_refresh_every,
+        shards=exp.shards,
     )
     from repro.adversary.stream_attacks import BiasedLatency
     from repro.stream.events import make_latency

@@ -264,6 +264,81 @@ def test_update_stack_roundtrip_bitwise(t, s):
     np.testing.assert_array_equal(np.asarray(stack.staleness), np.asarray(taus))
 
 
+# ---------------------------------------------- sharded ingest round trips
+# ISSUE 4 satellite: ANY arrival order and client-id distribution,
+# hash-routed into p pods (with least-full overflow fallback) and
+# flushed hierarchically, matches the single flat buffer fed the same
+# arrivals — the sharded plane is a pure re-layout of the flat plane.
+
+_K_SHARD = 8  # buffer capacity (fixed so jit caches per p, not per draw)
+_D_SHARD = 12
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=hnp.arrays(
+        np.float32,
+        (_K_SHARD, _D_SHARD),
+        elements=st.floats(-50, 50, width=32, allow_nan=False,
+                           allow_subnormal=False),
+    ),
+    client_ids=st.lists(
+        st.integers(0, 2**31 - 1), min_size=_K_SHARD, max_size=_K_SHARD
+    ),
+    dispatch_rounds=st.lists(
+        st.integers(0, 3), min_size=_K_SHARD, max_size=_K_SHARD
+    ),
+    pods=st.sampled_from([1, 2, 4]),
+)
+def test_sharded_ingest_flush_matches_single_buffer(
+    rows, client_ids, dispatch_rounds, pods
+):
+    from repro.kernels import ops as kops
+    from repro.stream import buffer as buf_mod
+    from repro.stream import sharded
+    from repro.stream.staleness import make_discount
+
+    hypothesis.assume(all(_nonzero(r) for r in rows))
+    params = {"w": jnp.zeros((_D_SHARD,), jnp.float32)}
+    b0 = buf_mod.init_buffer(params, _K_SHARD)
+    bs = sharded.init_sharded_buffer(params, _K_SHARD, pods)
+    for i in range(_K_SHARD):
+        g = jnp.asarray(rows[i])
+        b0 = buf_mod.ingest(b0, g, dispatch_rounds[i], False, client_ids[i])
+        bs = sharded.ingest(bs, g, dispatch_rounds[i], False, client_ids[i])
+    # every arrival accepted on both layouts (fallback => no early drops)
+    assert int(b0.count) == int(sharded.total_count(bs)) == _K_SHARD
+    # same multiset of (client, row): pod-major is a permutation of arrival
+    def canon(cids, slots):
+        a = np.concatenate(
+            [np.asarray(cids, np.float64)[:, None], np.asarray(slots, np.float64)],
+            axis=1,
+        )
+        return a[np.lexsort(a.T[::-1])]  # full-row lexicographic order
+
+    np.testing.assert_array_equal(
+        canon(b0.client_ids, b0.slots),
+        canon(np.asarray(bs.client_ids).reshape(-1),
+              np.asarray(bs.slots).reshape(_K_SHARD, -1)),
+    )
+    # hierarchical flush == single-buffer two-pass flush on the same data
+    rnd = 3
+    r = jnp.asarray(np.roll(rows[0], 1) + 0.25)
+    phi = make_discount("poly", 0.5)
+    d0 = kops.drag_calibrate_reduce(
+        b0.slots, r, 0.3, "drag",
+        discounts=phi(buf_mod.staleness(b0, rnd)),
+    )[0]
+    ds = sharded.hierarchical_flush(
+        bs.slots, r, mode="drag", c=0.3,
+        discounts2=phi(sharded.staleness(bs, rnd)),
+    )[0]
+    scale = max(float(jnp.max(jnp.abs(d0))), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(ds), np.asarray(d0), rtol=1e-4, atol=1e-4 * scale
+    )
+
+
 @settings(max_examples=15, deadline=None)
 @given(m=mat)
 def test_linear_recurrence_zero_decay_is_identity(m):

@@ -70,6 +70,36 @@ def test_break_rate_cell_semantics():
 
 
 @pytest.mark.slow
+def test_sharded_buffer_flood_invariant():
+    """ISSUE 4 satellite: ``buffer_flood``'s hash-biased fast arrivals
+    crowd a single pod's sub-buffer on the SHARDED async path — and the
+    robustness-bench acceptance invariant must survive the layout
+    change: trust-weighted BR-DRAG still beats plain FedAvg on final
+    loss, and stays inside the break envelope of its own un-sharded
+    run."""
+    from repro.adversary.scenarios import run_stream_scenario
+
+    flushes, shards = 30, 2
+    finals = {}
+    for agg in ("fedavg", "br_drag_trust"):
+        finals[agg] = run_stream_scenario(
+            Scenario(aggregator=agg, attack="buffer_flood", seed=0),
+            flushes=flushes, shards=shards,
+        )["final_loss"]
+    assert np.isfinite(finals["br_drag_trust"])
+    assert finals["br_drag_trust"] < finals["fedavg"], finals
+    # sharding is a layout change, not a robustness change: the sharded
+    # trust run stays within the BREAK_FACTOR envelope of the un-sharded
+    unsharded = run_stream_scenario(
+        Scenario(aggregator="br_drag_trust", attack="buffer_flood", seed=0),
+        flushes=flushes,
+    )["final_loss"]
+    assert finals["br_drag_trust"] <= BREAK_FACTOR * max(unsharded, 1e-6), (
+        finals, unsharded
+    )
+
+
+@pytest.mark.slow
 def test_mini_scenario_matrix_acceptance():
     """Miniature sweep through the benchmark's own code path: the
     acceptance invariant (br_drag_trust < fedavg on final loss in every

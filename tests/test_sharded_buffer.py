@@ -1,0 +1,390 @@
+"""Mesh-sharded ingest buffer tests (ISSUE 4 tentpole).
+
+Pins the sharded plane (``repro.stream.sharded``) against the
+single-buffer oracle the same way ``tests/test_flat.py`` pins flat vs
+pytree:
+
+  * hash routing + the least-full overflow fallback (an upload is
+    dropped only when the WHOLE buffer is full);
+  * p = 1 flush == single-buffer flush BIT-FOR-BIT (same kernels, same
+    block sizes, same operation order);
+  * p in {1, 2, 4} host devices (via ``tests/multidevice.py``): the
+    shard_map flush matches the single-buffer flush at 1e-5 (exactly at
+    p = 1 under the same jit discipline);
+  * the one-psum invariant: a hierarchical flush performs exactly ONE
+    cross-pod reduction — counted at the ``psum_bundle`` call site
+    (``kernels.instrument``) and as ``psum`` primitives in the jaxpr;
+  * the sync bridge extends to the sharded plane
+    (``streamed_round(shards=1)`` bit-for-bit).
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import instrument
+from repro.launch.mesh import make_pod_mesh
+from repro.stream import buffer as buf_mod
+from repro.stream import sharded
+from repro.stream.server import StreamConfig, flush, init_stream_state
+from tests.multidevice import run_multidevice_json
+
+D_W, D_B = 8, 3  # tiny param tree; d = 11
+
+
+def _params():
+    return {"w": jnp.ones((D_W,)), "b": jnp.zeros((D_B,))}
+
+
+def _upload(i, key=jax.random.PRNGKey(0)):
+    return {
+        "w": jax.random.normal(jax.random.fold_in(key, i), (D_W,)),
+        "b": jax.random.normal(jax.random.fold_in(key, 100 + i), (D_B,)),
+    }
+
+
+def _fill(buf, ingest_fn, k, client_ids=None, dispatch_rounds=None):
+    for i in range(k):
+        cid = i if client_ids is None else client_ids[i]
+        dr = 0 if dispatch_rounds is None else dispatch_rounds[i]
+        buf = ingest_fn(buf, _upload(i), dr, False, cid)
+    return buf
+
+
+def _leaves_flat(tree):
+    return np.concatenate([np.asarray(x).ravel() for x in jax.tree.leaves(tree)])
+
+
+# ----------------------------------------------------------------- routing
+class TestRouting:
+    def test_deterministic_and_in_range(self):
+        for p in (1, 2, 4, 7):
+            pods = [int(sharded.route_pod(i, p)) for i in range(64)]
+            assert pods == [int(sharded.route_pod(i, p)) for i in range(64)]
+            assert all(0 <= q < p for q in pods)
+
+    def test_hash_spreads_contiguous_ids(self):
+        """A contiguous id range (the structured case a modulo would map
+        onto one pod) spreads across all pods."""
+        pods = [int(sharded.route_pod(i, 4)) for i in range(256)]
+        counts = [pods.count(q) for q in range(4)]
+        assert all(c > 0 for c in counts)
+        assert max(counts) < 0.5 * 256  # no pod hoards the range
+
+    def test_single_pod_routes_everything_home(self):
+        assert all(int(sharded.route_pod(i, 1)) == 0 for i in range(32))
+
+
+# ------------------------------------------------------------------ ingest
+class TestShardedIngest:
+    def test_routed_placement_and_metadata(self):
+        """Each upload lands in its home pod's next slot, flattened
+        bit-for-bit, with its metadata tags."""
+        from repro.core import flat as flat_mod
+
+        p = _params()
+        buf = sharded.init_sharded_buffer(p, 8, 2)
+        cids = list(range(6))
+        buf = _fill(buf, sharded.ingest, 6, client_ids=cids,
+                    dispatch_rounds=[i % 3 for i in range(6)])
+        slot_of = {q: 0 for q in range(2)}
+        for i, cid in enumerate(cids):
+            q = int(sharded.route_pod(cid, 2))
+            s = slot_of[q]
+            slot_of[q] += 1
+            np.testing.assert_array_equal(
+                np.asarray(buf.slots[q, s]),
+                np.asarray(flat_mod.flatten_tree(_upload(i))),
+            )
+            assert int(buf.client_ids[q, s]) == cid
+            assert int(buf.dispatch_rounds[q, s]) == i % 3
+        np.testing.assert_array_equal(
+            np.asarray(buf.counts), [slot_of[0], slot_of[1]]
+        )
+
+    def test_overflow_falls_back_to_least_full_pod(self):
+        """Ids homed on one pod overflow into the other once the home
+        sub-buffer fills; nothing is dropped before the buffer is full."""
+        p = _params()
+        buf = sharded.init_sharded_buffer(p, 8, 2)  # K/p = 4
+        pod0_ids = [i for i in range(200) if int(sharded.route_pod(i, 2)) == 0][:8]
+        buf = _fill(buf, sharded.ingest, 8, client_ids=pod0_ids)
+        np.testing.assert_array_equal(np.asarray(buf.counts), [4, 4])
+        # overflowed ids live in pod 1
+        assert set(int(c) for c in np.asarray(buf.client_ids[1])) == set(pod0_ids[4:])
+        assert int(sharded.total_count(buf)) == 8
+
+    def test_drop_only_when_totally_full(self):
+        p = _params()
+        buf = sharded.init_sharded_buffer(p, 4, 2)
+        buf = _fill(buf, sharded.ingest, 4)
+        before = np.asarray(buf.slots).copy()
+        buf2 = sharded.ingest(buf, _upload(99), 0, True, 99)
+        assert int(sharded.total_count(buf2)) == 4  # refused
+        np.testing.assert_array_equal(np.asarray(buf2.slots), before)
+
+    def test_reset_keeps_storage(self):
+        p = _params()
+        buf = _fill(sharded.init_sharded_buffer(p, 4, 2), sharded.ingest, 4)
+        buf2 = sharded.reset(buf)
+        assert int(sharded.total_count(buf2)) == 0
+        np.testing.assert_array_equal(np.asarray(buf2.slots), np.asarray(buf.slots))
+
+    def test_capacity_must_divide(self):
+        with pytest.raises(ValueError, match="divide"):
+            sharded.init_sharded_buffer(_params(), 10, 4)
+
+    def test_donated_ingest_fn(self):
+        p = _params()
+        ingest = sharded.make_ingest_fn()
+        buf = sharded.init_sharded_buffer(p, 4, 2)
+        buf = _fill(buf, ingest, 4, client_ids=[3, 9, 12, 2])
+        assert int(sharded.total_count(buf)) == 4
+
+
+# --------------------------------------------------- p=1 bit-for-bit oracle
+def _flush_pair(alg, shards, key=jax.random.PRNGKey(7), k=8, rnd=3):
+    """(single-buffer flush outputs, sharded flush outputs) on identical
+    arrivals with trust + poly staleness discounts enabled (the full
+    serving path).  ``rnd=3`` with dispatch rounds i%3 makes the
+    staleness tags — and so the discounts — non-trivial."""
+    p = _params()
+    trust = alg in ("drag", "br_drag")
+    cfg0 = StreamConfig(algorithm=alg, buffer_capacity=k, trust=trust,
+                        discount="poly")
+    cfgs = StreamConfig(algorithm=alg, buffer_capacity=k, trust=trust,
+                        discount="poly", shards=shards)
+    s0 = init_stream_state(p, k, cfg0, n_clients=k)
+    ss = init_stream_state(p, k, cfgs, n_clients=k)
+    drs = [i % 3 for i in range(k)]
+    b0 = _fill(s0.buffer, buf_mod.ingest, k, dispatch_rounds=drs)
+    bs = _fill(ss.buffer, sharded.ingest, k, dispatch_rounds=drs)
+    kw = {}
+    if alg == "br_drag":
+        kw["reference"] = {"w": jnp.ones((D_W,)) * 0.1, "b": jnp.ones((D_B,)) * 0.1}
+    r = jnp.asarray(rnd, jnp.int32)
+    out0 = flush(None, cfg0, s0.params, s0.drag, r, b0, key,
+                 adv_state=s0.adversary, trust_state=s0.trust, **kw)
+    outs = flush(None, cfgs, ss.params, ss.drag, r, bs, key,
+                 adv_state=ss.adversary, trust_state=ss.trust, **kw)
+    return out0, outs
+
+
+class TestP1BitForBit:
+    """ISSUE acceptance: the single-pod sharded flush IS the
+    single-buffer flush, bit-for-bit — params, reference EMA, trust
+    state, and metrics."""
+
+    @pytest.mark.parametrize("alg", ["drag", "br_drag"])
+    def test_flush_bitwise(self, alg):
+        out0, outs = _flush_pair(alg, shards=1)
+        np.testing.assert_array_equal(_leaves_flat(out0[0]), _leaves_flat(outs[0]))
+        np.testing.assert_array_equal(
+            _leaves_flat(out0[1].reference), _leaves_flat(outs[1].reference)
+        )
+        np.testing.assert_array_equal(_leaves_flat(out0[5]), _leaves_flat(outs[5]))
+        for key in ("delta_norm", "dod_mean", "update_norm_mean", "discount_mean"):
+            assert float(out0[6][key]) == float(outs[6][key]), key
+
+    @pytest.mark.parametrize("alg", ["drag", "br_drag", "fedavg"])
+    @pytest.mark.parametrize("shards", [2, 4])
+    def test_flush_close_at_higher_p(self, alg, shards):
+        """p > 1 reassociates the reduction across pods: allclose at
+        1e-5 (the acceptance tolerance), arrival order permuted into
+        pod-major order."""
+        out0, outs = _flush_pair(alg, shards=shards)
+        np.testing.assert_allclose(
+            _leaves_flat(out0[0]), _leaves_flat(outs[0]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_non_shardable_algorithm_rejected(self):
+        p = _params()
+        cfg = StreamConfig(algorithm="trimmed_mean", buffer_capacity=4, shards=2,
+                           n_byzantine_hint=1)
+        state = init_stream_state(p, 4, cfg)
+        buf = _fill(state.buffer, sharded.ingest, 4)
+        with pytest.raises(ValueError, match="shards=0"):
+            flush(None, cfg, state.params, state.drag, state.round, buf,
+                  jax.random.PRNGKey(0), adv_state=state.adversary)
+
+
+# ------------------------------------------------------- one-psum invariant
+class TestOnePsum:
+    """ISSUE acceptance: exactly one cross-pod reduction per flush —
+    counted at the ``psum_bundle`` call site AND as ``psum`` primitives
+    in the lowered jaxpr; per pod the flush stays the two fused HBM
+    passes (``dot_norms`` + ``blend_reduce``, never ``blend``)."""
+
+    def test_emulation_flush_is_one_bundle(self):
+        key = jax.random.PRNGKey(2)
+        slots3 = jax.random.normal(key, (2, 4, 16))
+        r = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+        with instrument.count_collective_calls() as calls:
+            sharded.hierarchical_flush(slots3, r, mode="drag", c=0.3)
+        assert calls == instrument.ONE_PSUM_CALLS, calls
+
+    def test_full_sharded_flush_one_bundle_two_passes_per_pod(self):
+        """The whole trust-enabled staleness-aware sharded flush: one
+        psum_bundle, and per pod exactly one dot_norms + one
+        blend_reduce (the PR-3 invariant, now per sub-buffer)."""
+        from repro.kernels.instrument import count_kernel_calls
+
+        shards = 2
+        with instrument.count_collective_calls() as coll:
+            with count_kernel_calls() as kern:
+                _flush_pair("drag", shards=shards)
+        assert coll == instrument.ONE_PSUM_CALLS, coll
+        # _flush_pair also runs the single-buffer oracle flush (1 call
+        # of each kernel) next to the sharded one (1 per pod)
+        assert kern["dot_norms"] == shards + 1
+        assert kern["blend_reduce"] == shards + 1
+        assert kern["blend"] == 0
+
+    def test_mesh_flush_lowers_to_one_psum(self):
+        """On a real (single-device, p=1) pod mesh the jaxpr contains
+        exactly one psum primitive — shard_map body included."""
+        mesh = make_pod_mesh(1)
+        key = jax.random.PRNGKey(3)
+        slots3 = jax.random.normal(key, (1, 8, 16))
+        r = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+
+        def fn(s, rr):
+            return sharded.hierarchical_flush(
+                s, rr, mode="br_drag", c=0.5, mesh=mesh
+            )[0]
+
+        with instrument.count_collective_calls() as calls:
+            jaxpr = jax.make_jaxpr(fn)(slots3, r)
+        assert calls == instrument.ONE_PSUM_CALLS, calls
+        assert instrument.count_primitive(jaxpr.jaxpr, "psum") == 1
+
+
+# ------------------------------------------------- multi-device (subprocess)
+_PARITY_CODE = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.kernels import instrument, ops as kops
+from repro.launch.mesh import make_pod_mesh
+from repro.stream import buffer as buf_mod, sharded
+from repro.stream.server import StreamConfig, flush, init_stream_state
+
+P = {pods}
+K, DW, DB = 8, 33, 7
+assert len(jax.devices()) >= P, jax.devices()
+mesh = make_pod_mesh(P)
+key = jax.random.PRNGKey(0)
+params = {{"w": jnp.ones((DW,)), "b": jnp.zeros((DB,))}}
+
+def upload(i):
+    return {{"w": jax.random.normal(jax.random.fold_in(key, i), (DW,)),
+             "b": jax.random.normal(jax.random.fold_in(key, 100 + i), (DB,))}}
+
+result = {{"pods": P}}
+for alg in ("drag", "br_drag"):
+    cfg0 = StreamConfig(algorithm=alg, buffer_capacity=K, trust=True, discount="poly")
+    cfgs = StreamConfig(algorithm=alg, buffer_capacity=K, trust=True, discount="poly",
+                        shards=P)
+    s0 = init_stream_state(params, K, cfg0, n_clients=K)
+    ss = init_stream_state(params, K, cfgs, n_clients=K, mesh=mesh)
+    b0, bs = s0.buffer, ss.buffer
+    for i in range(K):
+        b0 = buf_mod.ingest(b0, upload(i), i % 3, False, i)
+        bs = sharded.ingest(bs, upload(i), i % 3, False, i)
+    kw = {{}}
+    if alg == "br_drag":
+        kw["reference"] = {{"w": jnp.ones((DW,)) * 0.1, "b": jnp.ones((DB,)) * 0.1}}
+    rnd = jnp.asarray(3, jnp.int32)
+    kf = jax.random.PRNGKey(7)
+    # SAME jit discipline on both sides: eager-vs-jit fusion drifts ~1 ulp
+    # (see fl.bridge's jit_client note), and p=1 must be exact
+    f0 = jax.jit(lambda pa, dr, bu, tr: flush(
+        None, cfg0, pa, dr, rnd, bu, kf, adv_state=(), trust_state=tr, **kw))
+    fs = jax.jit(lambda pa, dr, bu, tr: flush(
+        None, cfgs, pa, dr, rnd, bu, kf, adv_state=(), trust_state=tr,
+        mesh=mesh, **kw))
+    out0 = f0(s0.params, s0.drag, b0, s0.trust)
+    outs = fs(ss.params, ss.drag, bs, ss.trust)
+    flat = lambda t: np.concatenate([np.asarray(x).ravel() for x in jax.tree.leaves(t)])
+    result[alg] = {{
+        "err_params": float(np.max(np.abs(flat(out0[0]) - flat(outs[0])))),
+        "err_ref": float(np.max(np.abs(flat(out0[1].reference) - flat(outs[1].reference)))),
+        "bitwise": bool((flat(out0[0]) == flat(outs[0])).all()),
+    }}
+    jaxpr = jax.make_jaxpr(lambda bu: flush(
+        None, cfgs, ss.params, ss.drag, rnd, bu, kf, adv_state=(),
+        trust_state=ss.trust, mesh=mesh, **kw)[0])(bs)
+    result[alg]["psum_eqns"] = instrument.count_primitive(jaxpr.jaxpr, "psum")
+print(json.dumps(result))
+"""
+
+
+@pytest.mark.multidevice
+class TestMultiDeviceParity:
+    """ISSUE acceptance: sharded flush parity on real device meshes via
+    the subprocess helper — bit-for-bit at p=1, <= 1e-5 at p in {2, 4},
+    one psum primitive per flush."""
+
+    @pytest.mark.parametrize("pods", [1, 2, 4])
+    def test_parity(self, pods):
+        res = run_multidevice_json(
+            textwrap.dedent(_PARITY_CODE.format(pods=pods)), devices=max(pods, 2)
+        )
+        assert res["pods"] == pods
+        for alg in ("drag", "br_drag"):
+            cell = res[alg]
+            assert cell["psum_eqns"] == 1, cell
+            if pods == 1:
+                assert cell["bitwise"], cell
+            assert cell["err_params"] <= 1e-5, cell
+            assert cell["err_ref"] <= 1e-5, cell
+
+
+# ----------------------------------------------------------- bridge parity
+class TestBridgeSharded:
+    def test_streamed_round_shards1_bitwise(self):
+        """The sync<->async equivalence proof extends to the sharded
+        plane: shards=1 reproduces the single-buffer streamed round —
+        itself pinned bit-for-bit against federated_round — exactly."""
+        from repro.fl import bridge
+        from repro.fl.round import RoundConfig, init_server_state
+
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+        params = {"w": jnp.zeros((3, 1))}
+        cfg = RoundConfig(algorithm="drag", local_steps=1, lr=0.1)
+        key = jax.random.PRNGKey(0)
+        states = [init_server_state(params, 4) for _ in range(2)]
+        for t in range(2):
+            kb = jax.random.fold_in(key, t)
+            batches = {
+                "x": jax.random.normal(kb, (4, 1, 2, 3)),
+                "y": jax.random.normal(jax.random.fold_in(kb, 1), (4, 1, 2, 1)),
+            }
+            args = [batches, jnp.arange(4, dtype=jnp.int32),
+                    jnp.zeros(4, bool), jax.random.fold_in(kb, 2)]
+            states[0], _ = bridge.streamed_round(
+                loss_fn, states[0], cfg, *args, jit_client=False
+            )
+            states[1], _ = bridge.streamed_round(
+                loss_fn, states[1], cfg, *args, jit_client=False, shards=1
+            )
+            np.testing.assert_array_equal(
+                _leaves_flat(states[0].params), _leaves_flat(states[1].params)
+            )
+            np.testing.assert_array_equal(
+                _leaves_flat(states[0].drag.reference),
+                _leaves_flat(states[1].drag.reference),
+            )
+
+    def test_to_stream_state_sharded(self):
+        from repro.fl import bridge
+        from repro.fl.round import init_server_state
+
+        params = {"w": jnp.ones((4, 2))}
+        st = bridge.to_stream_state(init_server_state(params, 6), capacity=6,
+                                    shards=2)
+        assert isinstance(st.buffer, sharded.ShardedBufferState)
+        assert st.buffer.slots.shape == (2, 3, 8)
