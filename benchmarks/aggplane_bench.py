@@ -116,13 +116,20 @@ def count_flush_kernel_calls() -> dict:
     """Count Pallas kernel invocations in ONE eager stream flush with
     trust + staleness enabled (the acceptance configuration), using the
     shared probe in ``repro.kernels.instrument``."""
+    from repro.api import AggregationSpec, AsyncRegime, ExperimentSpec, TrustSpec
+    from repro.api import lowering
     from repro.kernels.instrument import count_kernel_calls
     from repro.stream import buffer as buf_mod
-    from repro.stream.server import StreamConfig, flush, init_stream_state
+    from repro.stream.server import flush, init_stream_state
 
     p = {"w": jnp.ones((1 << 10,)), "b": jnp.zeros((37,))}
-    cfg = StreamConfig(algorithm="drag", buffer_capacity=8, trust=True,
-                       discount="poly")
+    # the acceptance configuration, declared on the spec plane
+    spec = ExperimentSpec(
+        aggregation=AggregationSpec(algorithm="drag"),
+        trust=TrustSpec(enabled=True),
+        regime=AsyncRegime(buffer_capacity=8, discount="poly"),
+    ).validate()
+    cfg = lowering.stream_config(spec)
     state = init_stream_state(p, 8, cfg, n_clients=16)
     key = jax.random.PRNGKey(1)
     buf = state.buffer

@@ -24,6 +24,52 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+#: flat figure-benchmark kwarg -> (sub-spec, field) routing of fl_spec
+_FL_SPEC_FIELDS = {
+    "data": ("dataset", "n_workers", "beta", "malicious_fraction", "root_samples"),
+    "aggregation": ("algorithm", "alpha", "c", "c_br"),
+    "regime": ("rounds", "n_selected", "local_steps", "batch_size", "lr",
+               "eval_every"),
+}
+
+
+def fl_spec(**kw):
+    """The declarative form of one figure-benchmark run: flat
+    legacy-style kwargs routed onto a ``repro.api.ExperimentSpec``
+    directly (the spec-matrix CI job validates these grids without
+    training)."""
+    from repro.api import (
+        AggregationSpec,
+        AttackSpec,
+        DataSpec,
+        ExperimentSpec,
+        ModelSpec,
+        SyncRegime,
+        TrustSpec,
+    )
+
+    kw.setdefault("rounds", ROUNDS)
+    kw.setdefault("eval_every", max(ROUNDS // 3, 1))
+    parts = {
+        group: {f: kw.pop(f) for f in fields if f in kw}
+        for group, fields in _FL_SPEC_FIELDS.items()
+    }
+    # the figure grids' historical defaults (legacy ExperimentConfig)
+    parts["data"].setdefault("dataset", "cifar10")
+    spec = ExperimentSpec(
+        data=DataSpec(**parts["data"]),
+        model=ModelSpec(kw.pop("model", "cifar10_cnn")),
+        aggregation=AggregationSpec(**parts["aggregation"]),
+        attack=AttackSpec(kw.pop("attack", "none"), dict(kw.pop("attack_kw", ()))),
+        trust=TrustSpec(kw.pop("trust", False), dict(kw.pop("trust_kw", ()))),
+        regime=SyncRegime(**parts["regime"]),
+        seed=kw.pop("seed", 0),
+    )
+    if kw:
+        raise TypeError(f"fl_spec: unknown experiment kwargs {sorted(kw)}")
+    return spec
+
+
 def run_fl(name: str, **kw):
     """Run one FL experiment and emit its CSV rows.
 
@@ -32,13 +78,13 @@ def run_fl(name: str, **kw):
     convergence *speed*, which the early-round accuracy captures even
     when every algorithm saturates by the final round.
     """
-    from repro.fl import ExperimentConfig, run_experiment
+    from repro.fl import run_experiment
 
-    exp = ExperimentConfig(rounds=ROUNDS, eval_every=max(ROUNDS // 3, 1), **kw)
+    spec = fl_spec(**kw)
     t0 = time.time()
-    hist = run_experiment(exp)
+    hist = run_experiment(spec)
     wall = time.time() - t0
-    emit(name, wall / max(exp.rounds, 1) * 1e6, f"{hist['final_accuracy']:.4f}")
+    emit(name, wall / max(spec.regime.rounds, 1) * 1e6, f"{hist['final_accuracy']:.4f}")
     if hist["accuracy"]:
         emit(name + "@early", 0.0, f"{hist['accuracy'][0]:.4f}")
     return hist

@@ -19,22 +19,25 @@ GRID = [
 ]
 
 
-def run() -> None:
-    grid = [("cifar10", "cifar10_cnn", 0.1)] if FAST else GRID
-    for dataset, model, beta in grid:
+def grid(fast: bool = FAST) -> list[tuple[str, dict]]:
+    """(name, run_fl kwargs) cells — the spec-matrix CI job validates
+    exactly these through ``benchmarks.common.fl_spec``."""
+    cells = []
+    for dataset, model, beta in ([("cifar10", "cifar10_cnn", 0.1)] if fast else GRID):
         for alg in ALGS:
             # paper §VI-A: c=0.25 strong heterogeneity, 0.1 moderate
             c = 0.25 if beta == 0.1 else 0.1
-            run_fl(
+            cells.append((
                 f"fig3_5/{dataset}/beta{beta}/{alg}",
-                dataset=dataset,
-                model=model,
-                beta=beta,
-                algorithm=alg,
-                c=c,
-                alpha=0.25,
-                seed=7,
-            )
+                dict(dataset=dataset, model=model, beta=beta, algorithm=alg,
+                     c=c, alpha=0.25, seed=7),
+            ))
+    return cells
+
+
+def run() -> None:
+    for name, kw in grid():
+        run_fl(name, **kw)
 
 
 if __name__ == "__main__":

@@ -5,19 +5,19 @@ from __future__ import annotations
 from benchmarks.common import FAST, run_fl
 
 
+def grid(fast: bool = FAST) -> list[tuple[str, dict]]:
+    """(name, run_fl kwargs) cells (validated by the spec-matrix job)."""
+    s_values = [5, 25] if fast else [5, 15, 25, 35]
+    return [(
+        f"fig6/cifar10/S{s}",
+        dict(dataset="cifar10", model="cifar10_cnn", beta=0.1,
+             algorithm="drag", c=0.25, n_selected=s, seed=7),
+    ) for s in s_values]
+
+
 def run() -> None:
-    s_values = [5, 25] if FAST else [5, 15, 25, 35]
-    for s in s_values:
-        run_fl(
-            f"fig6/cifar10/S{s}",
-            dataset="cifar10",
-            model="cifar10_cnn",
-            beta=0.1,
-            algorithm="drag",
-            c=0.25,
-            n_selected=s,
-            seed=7,
-        )
+    for name, kw in grid():
+        run_fl(name, **kw)
 
 
 if __name__ == "__main__":

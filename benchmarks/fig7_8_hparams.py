@@ -8,21 +8,21 @@ ALPHAS = [0.01, 0.1, 0.25, 0.5]
 CS = [0.01, 0.1, 0.25, 0.75]
 
 
+def grid(fast: bool = FAST) -> list[tuple[str, dict]]:
+    """(name, run_fl kwargs) cells (validated by the spec-matrix job)."""
+    alphas = [0.01, 0.25] if fast else ALPHAS
+    cs = [0.01, 0.25] if fast else CS
+    base = dict(dataset="cifar10", model="cifar10_cnn", beta=0.1,
+                algorithm="drag", seed=7)
+    return (
+        [(f"fig7/alpha{a}", dict(base, alpha=a, c=0.25)) for a in alphas]
+        + [(f"fig8/c{c}", dict(base, alpha=0.25, c=c)) for c in cs]
+    )
+
+
 def run() -> None:
-    alphas = [0.01, 0.25] if FAST else ALPHAS
-    cs = [0.01, 0.25] if FAST else CS
-    for a in alphas:
-        run_fl(
-            f"fig7/alpha{a}",
-            dataset="cifar10", model="cifar10_cnn", beta=0.1,
-            algorithm="drag", alpha=a, c=0.25, seed=7,
-        )
-    for c in cs:
-        run_fl(
-            f"fig8/c{c}",
-            dataset="cifar10", model="cifar10_cnn", beta=0.1,
-            algorithm="drag", alpha=0.25, c=c, seed=7,
-        )
+    for name, kw in grid():
+        run_fl(name, **kw)
 
 
 if __name__ == "__main__":

@@ -12,13 +12,14 @@ ALGS = ["fedavg", "fltrust", "rfa", "raga", "br_drag"]
 ATTACKS = ["noise_injection", "sign_flipping", "label_flipping"]
 
 
-def run() -> None:
-    grid = []
-    datasets = [("cifar10", "cifar10_cnn")] if FAST else [
+def grid(fast: bool = FAST) -> list[tuple[str, dict]]:
+    """(name, run_fl kwargs) cells (validated by the spec-matrix job)."""
+    cells = []
+    datasets = [("cifar10", "cifar10_cnn")] if fast else [
         ("cifar10", "cifar10_cnn"),
         ("cifar100", "cifar100_cnn"),
     ]
-    attacks = ["sign_flipping"] if FAST else ATTACKS
+    attacks = ["sign_flipping"] if fast else ATTACKS
     ratios = [0.3, 0.6]
     for dataset, model in datasets:
         for attack in attacks:
@@ -28,19 +29,18 @@ def run() -> None:
                 if dataset != "cifar10" and not (attack == "sign_flipping" and ratio == 0.3):
                     continue
                 for alg in ALGS:
-                    grid.append((dataset, model, attack, ratio, alg))
-    for dataset, model, attack, ratio, alg in grid:
-        run_fl(
-            f"fig9_17/{dataset}/{attack}/mal{int(ratio*100)}/{alg}",
-            dataset=dataset,
-            model=model,
-            beta=0.1,
-            algorithm=alg,
-            attack=attack,
-            malicious_fraction=ratio,
-            c_br=0.5,
-            seed=7,
-        )
+                    cells.append((
+                        f"fig9_17/{dataset}/{attack}/mal{int(ratio*100)}/{alg}",
+                        dict(dataset=dataset, model=model, beta=0.1,
+                             algorithm=alg, attack=attack,
+                             malicious_fraction=ratio, c_br=0.5, seed=7),
+                    ))
+    return cells
+
+
+def run() -> None:
+    for name, kw in grid():
+        run_fl(name, **kw)
 
 
 if __name__ == "__main__":

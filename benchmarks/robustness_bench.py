@@ -40,6 +40,8 @@ from repro.adversary.scenarios import (
     run_cell,
     run_scenario,
     run_stream_scenario,
+    stream_spec,
+    sync_spec,
 )
 
 #: (name, attack_kw) — ipm at eps=2 is the aggregate-reversing variant
@@ -66,6 +68,41 @@ ASYNC_AGGREGATORS = ["fedavg", "br_drag", "br_drag_trust"]
 SHARDED_PODS = 2
 
 BREAK_FACTOR = 5.0
+
+
+def matrix_specs(smoke: bool) -> list[tuple[str, object]]:
+    """Every cell of the matrix as a named ``repro.api.ExperimentSpec``.
+
+    This is the grid the fast ``spec-matrix`` CI job instantiates and
+    validates (no training): attack names, aggregator capability tiers,
+    trust knobs, and sharded-regime structure all checked against the
+    live registries in seconds.  The async/sharded specs are exactly
+    what ``run_stream_scenario`` lowers its engine config from.
+    """
+    hets = [0.5, 1.5] if smoke else [0.3, 1.0, 3.0]
+    rounds = 40 if smoke else 80
+    aggs = AGGREGATORS_SMOKE if smoke else AGGREGATORS_FULL
+    flushes = 30 if smoke else 60
+    specs = []
+    for h in hets:
+        for agg in aggs:
+            proto = Scenario(aggregator=agg, heterogeneity=h, rounds=rounds)
+            specs.append((f"sync/none/{agg}/h{h}",
+                          sync_spec(dataclasses.replace(proto, attack="none"))))
+            for attack, kw in ATTACKS:
+                sc = dataclasses.replace(proto, attack=attack, attack_kw=kw)
+                specs.append((f"sync/{attack}/{agg}/h{h}", sync_spec(sc)))
+    for attack in ASYNC_ATTACKS:
+        for agg in ASYNC_AGGREGATORS:
+            sc = Scenario(aggregator=agg, attack=attack)
+            specs.append((f"async/{attack}/{agg}", stream_spec(sc, flushes=flushes)))
+    for agg in ASYNC_AGGREGATORS:
+        sc = Scenario(aggregator=agg, attack="buffer_flood")
+        specs.append((
+            f"async_sharded_p{SHARDED_PODS}/buffer_flood/{agg}",
+            stream_spec(sc, flushes=flushes, shards=SHARDED_PODS),
+        ))
+    return specs
 
 
 def sync_matrix(smoke: bool) -> list[dict]:

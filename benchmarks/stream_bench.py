@@ -21,9 +21,18 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import FAST, emit
+from repro.api import (
+    AggregationSpec,
+    AsyncRegime,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    ShardedRegime,
+    lowering,
+)
 from repro.core import drag
 from repro.stream import buffer as buf_mod
-from repro.stream.server import StreamConfig, flush, make_flush_fn, make_root_fn
+from repro.stream.server import flush, make_flush_fn, make_root_fn
 
 CAPACITY = 16 if FAST else 64
 DIM = 1 << 14 if FAST else 1 << 18
@@ -70,18 +79,32 @@ def bench_ingest(iters: int = 512) -> dict:
     return rec
 
 
+def flush_spec(rule: str) -> ExperimentSpec:
+    """Declarative form of one flush-benchmark cell."""
+    return ExperimentSpec(
+        aggregation=AggregationSpec(
+            algorithm=rule, n_byzantine_hint=max(CAPACITY // 8, 1), geomed_iters=4
+        ),
+        regime=AsyncRegime(buffer_capacity=CAPACITY, discount="poly"),
+    )
+
+
+def sharded_flush_spec(n_pods: int) -> ExperimentSpec:
+    """Declarative form of one sharded-flush cell (emulation path)."""
+    return ExperimentSpec(
+        aggregation=AggregationSpec(algorithm="drag"),
+        regime=ShardedRegime(
+            shards=n_pods, buffer_capacity=CAPACITY, discount="poly"
+        ),
+    )
+
+
 def bench_flush(iters: int = 20) -> dict:
     key = jax.random.PRNGKey(0)
     p = _params(DIM)
     out: dict = {}
     for rule in RULES:
-        cfg = StreamConfig(
-            algorithm=rule,
-            buffer_capacity=CAPACITY,
-            discount="poly",
-            n_byzantine_hint=max(CAPACITY // 8, 1),
-            geomed_iters=4,
-        )
+        cfg = lowering.stream_config(flush_spec(rule))
         # br_drag needs a root pass — give it a trivial quadratic loss
         with_root = rule in ("br_drag", "fltrust")
 
@@ -142,10 +165,7 @@ def bench_sharded_flush(iters: int = 20, pods=(1, 4)) -> dict:
     p = _params(DIM)
     out: dict = {}
     for n_pods in pods:
-        cfg = StreamConfig(
-            algorithm="drag", buffer_capacity=CAPACITY, discount="poly",
-            shards=n_pods,
-        )
+        cfg = lowering.stream_config(sharded_flush_spec(n_pods))
         fn = make_flush_fn(None, cfg, with_root=False)
         ingest = sharded_mod.make_ingest_fn()
         buf = sharded_mod.init_sharded_buffer(p, CAPACITY, n_pods)
@@ -179,27 +199,35 @@ def bench_sharded_flush(iters: int = 20, pods=(1, 4)) -> dict:
     return out
 
 
-def bench_e2e() -> dict:
-    from repro.stream.server import StreamExperimentConfig, run_stream_experiment
-
-    exp = StreamExperimentConfig(
-        n_workers=10,
-        concurrency=8,
-        flushes=4 if FAST else 10,
-        buffer_capacity=4,
-        latency="exponential",
-        local_steps=2,
-        batch_size=4,
-        algorithm="drag",
-        discount="poly",
-        eval_every=100,  # time the loop, not eval
+def e2e_spec() -> ExperimentSpec:
+    """Declarative form of the end-to-end event-loop benchmark."""
+    return ExperimentSpec(
+        data=DataSpec(dataset="emnist", n_workers=10),
+        model=ModelSpec("mlp"),
+        aggregation=AggregationSpec(algorithm="drag"),
+        regime=AsyncRegime(
+            flushes=4 if FAST else 10,
+            concurrency=8,
+            buffer_capacity=4,
+            latency="exponential",
+            local_steps=2,
+            batch_size=4,
+            discount="poly",
+            eval_every=100,  # time the loop, not eval
+        ),
         seed=0,
     )
+
+
+def bench_e2e() -> dict:
+    from repro.api import compile as api_compile
+
+    spec = e2e_spec()
     t0 = time.time()
-    h = run_stream_experiment(exp)
+    h = api_compile(spec).run()
     wall = time.time() - t0
     rec = {
-        "flushes": exp.flushes,
+        "flushes": spec.regime.flushes,
         "updates_total": h["updates_total"],
         "updates_per_wall_s": h["updates_per_wall_s"],
         "wall_s": wall,
@@ -207,6 +235,16 @@ def bench_e2e() -> dict:
     emit("stream/e2e/drag_mlp", wall / max(h["updates_total"], 1) * 1e6,
          f"{h['updates_per_wall_s']:.1f}upd/s")
     return rec
+
+
+def bench_specs() -> list:
+    """(name, ExperimentSpec) pairs for the spec-matrix CI job."""
+    out = [(f"stream_bench/flush/{rule}", flush_spec(rule)) for rule in RULES]
+    out += [
+        (f"stream_bench/sharded_flush/p{p}", sharded_flush_spec(p)) for p in (1, 4)
+    ]
+    out.append(("stream_bench/e2e", e2e_spec()))
+    return out
 
 
 def run() -> None:

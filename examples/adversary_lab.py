@@ -14,7 +14,35 @@ watch live):
 """
 import argparse
 
-from repro.adversary.scenarios import Scenario, run_scenario, run_stream_scenario
+from repro.adversary.scenarios import (
+    Scenario,
+    run_scenario,
+    run_stream_scenario,
+    stream_spec,
+    sync_spec,
+)
+
+
+def specs(rounds: int = 40) -> list:
+    """Every cell of the tour as a declarative ``ExperimentSpec``
+    (validated by the spec-matrix CI job without running anything)."""
+    out = []
+    for attack, kw in [("alie", ()), ("ipm", (("eps", 2.0),)),
+                       ("min_max", ()), ("mimic", ())]:
+        for agg in ("fedavg", "median", "br_drag_trust"):
+            sc = Scenario(aggregator=agg, attack=attack, attack_kw=kw, rounds=rounds)
+            out.append((f"lab/act1/{attack}/{agg}", sync_spec(sc)))
+    kw = (("phases", ((0, "sign_flipping"), (rounds // 2, "alie"))),)
+    for agg in ("fedavg", "br_drag_trust"):
+        sc = Scenario(aggregator=agg, attack="schedule", attack_kw=kw, rounds=rounds)
+        out.append((f"lab/act2/schedule/{agg}", sync_spec(sc)))
+    for attack in ("buffer_flood", "staleness_camouflage"):
+        for agg in ("fedavg", "br_drag_trust"):
+            out.append((
+                f"lab/act3/{attack}/{agg}",
+                stream_spec(Scenario(aggregator=agg, attack=attack)),
+            ))
+    return out
 
 
 def bar(loss: float, floor: float = 1e-4, span: float = 8.0) -> str:

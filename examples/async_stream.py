@@ -7,50 +7,75 @@ whenever the buffer fills, discounting each update's DoD by its staleness
 phi(tau) = (1 + tau)^-a.  A Byzantine variant runs BR-DRAG with 40%
 sign-flipping attackers — fully asynchronously.
 
+Both runs are declared as ``repro.api.ExperimentSpec`` values with an
+:class:`~repro.api.AsyncRegime` and compiled onto the stream engine.
+
     PYTHONPATH=src python examples/async_stream.py
 """
-from repro.stream import StreamExperimentConfig, run_stream_experiment
+import dataclasses
+
+from repro.api import (
+    AggregationSpec,
+    AsyncRegime,
+    AttackSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    compile,
+)
+
+REGIME = AsyncRegime(
+    flushes=30,
+    concurrency=16,
+    buffer_capacity=8,
+    latency="straggler",
+    local_steps=5,
+    batch_size=10,
+    eval_every=10,
+)
+BASE = ExperimentSpec(
+    data=DataSpec(dataset="emnist", n_workers=20, beta=0.1),
+    model=ModelSpec("mlp"),
+    regime=REGIME,
+    seed=0,
+)
+
+
+def specs() -> list[tuple[str, ExperimentSpec]]:
+    """The two runs, as data (the spec-matrix CI job validates these)."""
+    drag = dataclasses.replace(
+        BASE,
+        aggregation=AggregationSpec("drag", c=0.25),
+        regime=dataclasses.replace(REGIME, discount="poly"),
+    )
+    byz = dataclasses.replace(
+        BASE,
+        aggregation=AggregationSpec("br_drag"),
+        attack=AttackSpec("sign_flipping"),
+        data=dataclasses.replace(
+            BASE.data, malicious_fraction=0.4, root_samples=1000
+        ),
+        regime=dataclasses.replace(REGIME, discount="exp"),
+    )
+    return [("drag_poly", drag), ("br_drag_byz", byz)]
 
 
 def main() -> None:
-    common = dict(
-        dataset="emnist",
-        model="mlp",
-        n_workers=20,
-        concurrency=16,
-        flushes=30,
-        buffer_capacity=8,
-        latency="straggler",
-        local_steps=5,
-        batch_size=10,
-        beta=0.1,
-        eval_every=10,
-        seed=0,
-    )
-
     def show(m):
         print(
             f"  flush {m['flush']:3d}  acc={m['accuracy']:.3f}  "
             f"staleness={m['staleness_mean']:.2f}  phi={m['discount_mean']:.2f}"
         )
 
+    (_, spec_drag), (_, spec_byz) = specs()
     print("== async DRAG, polynomial staleness discount ==")
-    h = run_stream_experiment(
-        StreamExperimentConfig(algorithm="drag", c=0.25, discount="poly", **common),
-        progress=show,
-    )
+    h = compile(spec_drag).run(progress=show)
     print(f"  {h['updates_total']} updates ingested, "
           f"{h['updates_per_wall_s']:.1f} upd/s wall, "
           f"virtual horizon {h['virtual_time'][-1]:.1f}")
 
     print("== async BR-DRAG, 40% sign-flipping Byzantine clients ==")
-    h_br = run_stream_experiment(
-        StreamExperimentConfig(
-            algorithm="br_drag", attack="sign_flipping", malicious_fraction=0.4,
-            discount="exp", root_samples=1000, **common,
-        ),
-        progress=show,
-    )
+    h_br = compile(spec_byz).run(progress=show)
     print(f"\nfinal accuracy: drag={h['final_accuracy']:.3f} "
           f"br_drag@40%byz={h_br['final_accuracy']:.3f}")
 

@@ -2,11 +2,45 @@
 60% of workers are malicious — plain FedAvg collapses; geometric-median
 defenses degrade past the 50% breakdown point; BR-DRAG keeps training.
 
+Each run is one declarative ``repro.api.ExperimentSpec``; the sweep is
+a list comprehension over the aggregation sub-spec.
+
     PYTHONPATH=src python examples/byzantine_defense.py [--attack sign_flipping]
 """
 import argparse
+import dataclasses
 
-from repro.fl import ExperimentConfig, run_experiment
+from repro.api import (
+    AggregationSpec,
+    AttackSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    SyncRegime,
+    compile,
+)
+
+ALGORITHMS = ["fedavg", "rfa", "fltrust", "br_drag"]
+
+
+def specs(
+    attack: str = "sign_flipping", malicious: float = 0.6, rounds: int = 40
+) -> list[tuple[str, ExperimentSpec]]:
+    base = ExperimentSpec(
+        data=DataSpec(
+            dataset="emnist", n_workers=20, beta=0.1, malicious_fraction=malicious
+        ),
+        model=ModelSpec("emnist_cnn"),
+        attack=AttackSpec(attack),
+        regime=SyncRegime(
+            rounds=rounds, n_selected=10, eval_every=max(rounds // 4, 1)
+        ),
+        seed=1,
+    )
+    return [
+        (alg, dataclasses.replace(base, aggregation=AggregationSpec(alg, c_br=0.5)))
+        for alg in ALGORITHMS
+    ]
 
 
 def main() -> None:
@@ -18,22 +52,8 @@ def main() -> None:
     args = ap.parse_args()
 
     results = {}
-    for alg in ["fedavg", "rfa", "fltrust", "br_drag"]:
-        exp = ExperimentConfig(
-            dataset="emnist",
-            model="emnist_cnn",
-            n_workers=20,
-            n_selected=10,
-            rounds=args.rounds,
-            beta=0.1,
-            algorithm=alg,
-            attack=args.attack,
-            malicious_fraction=args.malicious,
-            c_br=0.5,
-            eval_every=max(args.rounds // 4, 1),
-            seed=1,
-        )
-        hist = run_experiment(exp)
+    for alg, spec in specs(args.attack, args.malicious, args.rounds):
+        hist = compile(spec).run()
         results[alg] = hist["final_accuracy"]
         print(f"{alg:10s}  acc curve {['%.3f' % a for a in hist['accuracy']]}")
 

@@ -1,36 +1,57 @@
 """Quickstart: 30 rounds of DRAG vs FedAvg on heterogeneous synthetic
-EMNIST (Dirichlet beta=0.1, 20 workers, 8 selected/round, U=5).
+EMNIST (Dirichlet beta=0.1, 20 workers, 8 selected/round, U=5), driven
+through the declarative experiment plane (``repro.api``): one
+``ExperimentSpec`` per run, validated against the live registries and
+compiled onto the synchronous engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.fl import ExperimentConfig, run_experiment
+import dataclasses
+
+from repro.api import (
+    AggregationSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    SyncRegime,
+    compile,
+)
+
+BASE = ExperimentSpec(
+    data=DataSpec(dataset="emnist", n_workers=20, beta=0.1),
+    model=ModelSpec("emnist_cnn"),
+    regime=SyncRegime(rounds=30, n_selected=8, eval_every=10),
+    seed=0,
+)
+
+
+def specs() -> list[tuple[str, ExperimentSpec]]:
+    """The two runs, as data (the spec-matrix CI job validates these)."""
+    return [
+        ("fedavg", dataclasses.replace(BASE, aggregation=AggregationSpec("fedavg"))),
+        ("drag", dataclasses.replace(
+            BASE, aggregation=AggregationSpec("drag", c=0.25, alpha=0.25)
+        )),
+    ]
 
 
 def main() -> None:
-    common = dict(
-        dataset="emnist",
-        model="emnist_cnn",
-        n_workers=20,
-        n_selected=8,
-        rounds=30,
-        beta=0.1,
-        eval_every=10,
-        seed=0,
-    )
+    (_, spec_avg), (_, spec_drag) = specs()
+
     print("== FedAvg baseline ==")
-    h_avg = run_experiment(
-        ExperimentConfig(algorithm="fedavg", **common),
+    h_avg = compile(spec_avg).run(
         progress=lambda m: print(f"  round {m['round']:3d}  acc={m['accuracy']:.3f}"),
     )
     print("== DRAG (this paper) ==")
-    h_drag = run_experiment(
-        ExperimentConfig(algorithm="drag", c=0.25, alpha=0.25, **common),
+    h_drag = compile(spec_drag).run(
         progress=lambda m: print(
             f"  round {m['round']:3d}  acc={m['accuracy']:.3f}  DoD={m['dod_mean']:.3f}"
         ),
     )
     print(f"\nfinal accuracy: fedavg={h_avg['final_accuracy']:.3f} "
           f"drag={h_drag['final_accuracy']:.3f}")
+    # a spec is plain data — this JSON is the whole experiment
+    print(f"\nspec (serialized): {spec_drag.to_json()}")
 
 
 if __name__ == "__main__":

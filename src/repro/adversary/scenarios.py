@@ -229,6 +229,110 @@ def run_cell(sc: Scenario, break_factor: float = 5.0, seeds=(0,), baselines=None
     }
 
 
+# --------------------------------------------------- declarative (spec) view
+def _spec_parts(sc: Scenario):
+    """Scenario -> the regime-independent ExperimentSpec fragments.
+
+    The lab is a first-class data source of the declarative plane:
+    dataset "scenario" / model "quadratic" name the synthetic
+    least-squares federation, and ``br_drag_trust`` decomposes into its
+    spec form — algorithm ``br_drag`` + an enabled TrustSpec.
+    """
+    from repro.api import AggregationSpec, AttackSpec, DataSpec, ModelSpec, TrustSpec
+
+    use_trust = sc.aggregator == "br_drag_trust"
+    return (
+        DataSpec(
+            dataset="scenario",
+            n_workers=sc.n_clients,
+            malicious_fraction=sc.malicious_fraction,
+        ),
+        ModelSpec("quadratic"),
+        AggregationSpec(
+            algorithm="br_drag" if use_trust else sc.aggregator,
+            alpha=sc.alpha,
+            c=sc.c,
+            c_br=sc.c_br,
+        ),
+        AttackSpec(sc.attack, dict(sc.attack_kw)),
+        TrustSpec(use_trust, dict(sc.trust_kw)),
+    )
+
+
+def sync_spec(sc: Scenario):
+    """Declarative view of a SYNC matrix cell (for spec-matrix CI
+    validation — ``run_scenario`` itself stays the closed-form scan)."""
+    import dataclasses as dc
+
+    from repro.api import ExperimentSpec, SyncRegime
+
+    data, model, agg, attack, trust = _spec_parts(sc)
+    n_byz = max(int(round(sc.malicious_fraction * sc.n_clients)), 1) if (
+        sc.malicious_fraction > 0
+    ) else 0
+    return ExperimentSpec(
+        data=data,
+        model=model,
+        aggregation=dc.replace(agg, n_byzantine_hint=n_byz),
+        attack=attack,
+        trust=trust,
+        regime=SyncRegime(
+            rounds=sc.rounds,
+            n_selected=sc.n_clients,  # full participation
+            local_steps=sc.local_steps,
+            lr=sc.lr,
+        ),
+        seed=sc.seed,
+    )
+
+
+def stream_spec(
+    sc: Scenario,
+    flushes: int = 30,
+    buffer_capacity: int = 8,
+    concurrency: int = 16,
+    discount: str = "poly",
+    discount_a: float = 0.5,
+    latency: str = "exponential",
+    shards: int = 0,
+):
+    """Declarative form of an ASYNC matrix cell: the ExperimentSpec
+    ``run_stream_scenario`` lowers its StreamConfig from."""
+    import dataclasses as dc
+
+    from repro.api import AsyncRegime, ExperimentSpec, ShardedRegime
+
+    data, model, agg, attack, trust = _spec_parts(sc)
+    # scenario-lab trim policy: rounded over the buffer (small-K cells)
+    n_byz = max(int(round(sc.malicious_fraction * buffer_capacity)), 1) if (
+        sc.malicious_fraction > 0
+    ) else 0
+    regime_kw = dict(
+        flushes=flushes,
+        concurrency=concurrency,
+        buffer_capacity=buffer_capacity,
+        latency=latency,
+        local_steps=sc.local_steps,
+        lr=sc.lr,
+        discount=discount,
+        discount_a=discount_a,
+    )
+    regime = (
+        ShardedRegime(shards=shards, **regime_kw)
+        if shards > 0
+        else AsyncRegime(**regime_kw)
+    )
+    return ExperimentSpec(
+        data=data,
+        model=model,
+        aggregation=dc.replace(agg, n_byzantine_hint=n_byz),
+        attack=attack,
+        trust=trust,
+        regime=regime,
+        seed=sc.seed,
+    )
+
+
 # ------------------------------------------------------------- async cells
 def run_stream_scenario(
     sc: Scenario,
@@ -251,8 +355,9 @@ def run_stream_scenario(
     pod of.
     """
     from repro.adversary.stream_attacks import BiasedLatency
+    from repro.api import lowering
     from repro.stream.events import EventStream, make_latency
-    from repro.stream.server import AsyncStreamServer, StreamConfig
+    from repro.stream.server import AsyncStreamServer
 
     optima_j, malicious_j, w0, benign_mean_j, root_target_j = _make_world(sc)
     optima = np.asarray(optima_j)
@@ -265,25 +370,14 @@ def run_stream_scenario(
         # U x B stacked targets; mean over batch of 1/2||w - target||^2
         return 0.5 * jnp.mean(jnp.sum((p["w"][None, :] - batch["x"]) ** 2, -1))
 
-    use_trust = sc.aggregator == "br_drag_trust"
-    cfg = StreamConfig(
-        algorithm="br_drag" if use_trust else sc.aggregator,
-        buffer_capacity=buffer_capacity,
-        local_steps=sc.local_steps,
-        lr=sc.lr,
-        alpha=sc.alpha,
-        c=sc.c,
-        c_br=sc.c_br,
-        discount=discount,
-        discount_a=discount_a,
-        attack=sc.attack,
-        attack_kw=sc.attack_kw,
-        n_byzantine_hint=max(int(round(sc.malicious_fraction * buffer_capacity)), 1)
-        if sc.malicious_fraction > 0 else 0,
-        trust=use_trust,
-        trust_kw=sc.trust_kw,
-        shards=shards,
+    # the cell's declarative form; the engine config derives through THE
+    # shared lowering (repro.api), not a hand-rolled StreamConfig
+    spec = stream_spec(
+        sc, flushes=flushes, buffer_capacity=buffer_capacity,
+        concurrency=concurrency, discount=discount, discount_a=discount_a,
+        latency=latency, shards=shards,
     )
+    cfg = lowering.stream_config(spec)
     server = AsyncStreamServer(loss_fn, {"w": w0}, cfg, n_clients=sc.n_clients)
     lookup = lambda m: bool(malicious[m])  # noqa: E731
     lat = make_latency(latency)

@@ -1,0 +1,66 @@
+"""compile()/run(): the declarative plane's executable form.
+
+``compile_spec`` validates an :class:`~repro.api.spec.ExperimentSpec`
+once and lowers it onto the matching engine's static config; the
+returned :class:`CompiledExperiment` then drives the existing engines —
+``repro.fl.server.run_experiment`` (sync) or
+``repro.stream.server.run_stream_experiment`` (async/sharded) — which
+themselves read everything from the spec, so there is exactly one
+field-copying path from declaration to execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api import lowering
+from repro.api.spec import ExperimentSpec
+from repro.api.validation import ensure_executable, validate
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledExperiment:
+    """A validated spec + its lowered engine config, ready to run.
+
+    ``engine_config`` is the lowering artifact (RoundConfig /
+    StreamConfig) — the introspectable/provenance form of what the
+    engine will execute; the drivers re-derive the identical config
+    from the spec through the same lowering.
+    """
+
+    spec: ExperimentSpec
+    engine_config: object  # RoundConfig (sync) | StreamConfig (async/sharded)
+    mesh: object = None  # pod mesh for sharded runs (None = emulation)
+
+    @property
+    def kind(self) -> str:
+        return self.spec.regime.kind
+
+    def run(self, data=None, progress=None) -> dict:
+        """Executes the experiment; returns the engine's history dict.
+        Validation already happened at compile time (``check=False``);
+        the pod mesh captured at compile time rides along."""
+        if self.kind == "sync":
+            from repro.fl.server import run_experiment
+
+            return run_experiment(self.spec, data=data, progress=progress, check=False)
+        from repro.stream.server import run_stream_experiment
+
+        return run_stream_experiment(
+            self.spec, data=data, progress=progress, mesh=self.mesh, check=False
+        )
+
+
+def compile_spec(spec: ExperimentSpec, mesh=None) -> CompiledExperiment:
+    """validate -> lower; raises ``SpecError`` before any engine exists."""
+    validate(spec, mesh=mesh)
+    ensure_executable(spec)
+    if spec.regime.kind == "sync":
+        engine = lowering.round_config(spec)
+    else:
+        engine = lowering.stream_config(spec)
+    return CompiledExperiment(spec=spec, engine_config=engine, mesh=mesh)
+
+
+def run_spec(spec: ExperimentSpec, data=None, progress=None, mesh=None) -> dict:
+    """One-call convenience: ``compile_spec(spec).run(...)``."""
+    return compile_spec(spec, mesh=mesh).run(data=data, progress=progress)

@@ -1,0 +1,218 @@
+"""Capability validation of an :class:`~repro.api.spec.ExperimentSpec`
+against the LIVE registries — aggregation rules, adversary names,
+latency models, staleness discounts, datasets, models, trust knobs —
+with actionable error messages.
+
+This is the layer the fast ``spec-matrix`` CI job exercises: every
+benchmark/example spec is instantiated and validated in seconds, with
+no training, so config drift (a renamed attack, a rule dropped from the
+flat tier, a sharded run over a non-shardable rule) fails loudly before
+anything expensive runs.
+"""
+from __future__ import annotations
+
+import inspect
+
+from repro.api import spec as spec_mod
+
+
+class SpecError(ValueError):
+    """An ExperimentSpec that cannot be lowered onto any engine."""
+
+
+#: the synthetic least-squares scenario lab (repro.adversary.scenarios)
+#: is a first-class data source of the declarative plane — its cells are
+#: specs too, so the spec-matrix job validates their attack/rule names.
+SCENARIO_DATASET = "scenario"
+SCENARIO_MODEL = "quadratic"
+
+
+def _err(msg: str) -> None:
+    raise SpecError(msg)
+
+
+def ensure_executable(spec) -> None:
+    """Rejects specs that validate but have no ENGINE behind them: the
+    scenario-lab dataset/model name the synthetic least-squares
+    federation, which is driven by ``repro.adversary.scenarios``
+    (run_scenario / run_stream_scenario), not the data pipeline."""
+    if spec.data.dataset == SCENARIO_DATASET or spec.model.name == SCENARIO_MODEL:
+        _err(
+            f"dataset {spec.data.dataset!r} / model {spec.model.name!r} is the "
+            "synthetic scenario lab — drive it with repro.adversary.scenarios."
+            "run_scenario / run_stream_scenario; the engine data pipeline "
+            "cannot execute it"
+        )
+
+
+def sync_algorithms() -> frozenset:
+    """Rules the synchronous round dispatches: every flat-capable rule
+    plus the client-variant algorithms whose reduction is the mean."""
+    from repro.core import aggregators
+
+    return frozenset(aggregators.FLAT_CAPABLE) | frozenset(aggregators.MEAN_REDUCED)
+
+
+def async_algorithms() -> frozenset:
+    """Rules the stream flush serves on the flat [K, d] plane."""
+    from repro.core import aggregators
+
+    return frozenset(aggregators.FLAT_CAPABLE)
+
+
+def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpec:
+    """Checks ``spec`` against the live registries; returns it unchanged.
+
+    ``mesh`` (optional) is the pod mesh a sharded run will execute on —
+    its ``("pod",)`` axis must match ``regime.shards``.  A sharded spec
+    with ``shards > 1``, no mesh, and ``emulate=False`` is rejected
+    (single-device emulation must be opted into).
+    """
+    from repro.adversary import engine as adversary_engine
+    from repro.core import aggregators
+    from repro.data.synthetic import SPECS as DATASETS
+    from repro.models import cnn
+    from repro.stream import server as stream_server
+    from repro.stream.events import LATENCIES
+    from repro.stream.staleness import DISCOUNTS
+    from repro.trust.reputation import TrustConfig
+
+    if not isinstance(spec, spec_mod.ExperimentSpec):
+        _err(f"expected an ExperimentSpec, got {type(spec).__name__}")
+    data, model, agg = spec.data, spec.model, spec.aggregation
+    attack, trust, regime = spec.attack, spec.trust, spec.regime
+
+    # ---- data / model names
+    datasets = set(DATASETS) | {SCENARIO_DATASET}
+    if data.dataset not in datasets:
+        _err(f"unknown dataset {data.dataset!r}; have {sorted(datasets)}")
+    models = set(cnn.MODELS) | {SCENARIO_MODEL}
+    if model.name not in models:
+        _err(f"unknown model {model.name!r}; have {sorted(models)}")
+    if data.n_workers < 1:
+        _err(f"n_workers must be >= 1, got {data.n_workers}")
+    if not 0.0 <= data.malicious_fraction <= 1.0:
+        _err(f"malicious_fraction must be in [0, 1], got {data.malicious_fraction}")
+
+    # ---- aggregation rule vs regime capability tiers
+    alg = agg.algorithm
+    if regime.kind == "sync":
+        if alg not in sync_algorithms():
+            _err(
+                f"unknown sync algorithm {alg!r}; "
+                f"have {sorted(sync_algorithms())}"
+            )
+    else:  # async / sharded serve on the flat update plane
+        if alg in aggregators.MEAN_REDUCED and alg != "fedavg":
+            _err(
+                f"algorithm {alg!r} needs client-variant local objectives; "
+                "stream clients run plain SGD — use a sync regime"
+            )
+        elif alg not in aggregators.FLAT_CAPABLE:
+            _err(
+                f"algorithm {alg!r} is not FLAT_CAPABLE — the stream engine "
+                f"serves on the flat [K, d] update plane; flat-capable rules: "
+                f"{sorted(aggregators.FLAT_CAPABLE)}"
+            )
+    if regime.kind == "sharded" and alg not in stream_server.SHARDABLE:
+        _err(
+            f"algorithm {alg!r} has no hierarchical one-psum sharded flush "
+            f"(shardable: {stream_server.SHARDABLE}); use an async regime"
+        )
+
+    # ---- regime structure
+    for field, lo in (("local_steps", 1), ("batch_size", 1), ("eval_every", 1)):
+        if getattr(regime, field) < lo:
+            _err(f"{field} must be >= {lo}, got {getattr(regime, field)}")
+    if regime.kind == "sync":
+        if regime.rounds < 1:
+            _err(f"rounds must be >= 1, got {regime.rounds}")
+        if not 1 <= regime.n_selected <= data.n_workers:
+            _err(
+                f"n_selected={regime.n_selected} must be in "
+                f"[1, n_workers={data.n_workers}]"
+            )
+    else:
+        if regime.flushes < 1:
+            _err(f"flushes must be >= 1, got {regime.flushes}")
+        if regime.concurrency < 1:
+            # zero in-flight dispatches would stall the event loop forever
+            _err(f"concurrency must be >= 1, got {regime.concurrency}")
+        if regime.buffer_capacity < 1:
+            _err(f"buffer_capacity must be >= 1, got {regime.buffer_capacity}")
+        if regime.root_refresh_every < 1:
+            _err(f"root_refresh_every must be >= 1, got {regime.root_refresh_every}")
+        if regime.latency not in LATENCIES:
+            _err(
+                f"unknown latency model {regime.latency!r}; "
+                f"have {sorted(LATENCIES)}"
+            )
+        # every LATENCIES factory swallows **kw, so a trial call cannot
+        # catch typos — check keys against the factory's NAMED params
+        # (which name every real knob) instead
+        allowed = {
+            p.name
+            for p in inspect.signature(LATENCIES[regime.latency]).parameters.values()
+            if p.kind is not inspect.Parameter.VAR_KEYWORD
+        }
+        unknown = set(regime.latency_kw) - allowed
+        if unknown:
+            _err(
+                f"latency {regime.latency!r} has no kwargs {sorted(unknown)}; "
+                f"it takes {sorted(allowed) or 'no kwargs'}"
+            )
+        if regime.discount not in DISCOUNTS:
+            _err(
+                f"unknown staleness discount {regime.discount!r}; "
+                f"have {sorted(DISCOUNTS)}"
+            )
+    if regime.kind == "sharded":
+        if regime.shards < 1:
+            _err(f"shards must be >= 1, got {regime.shards}")
+        if regime.buffer_capacity % regime.shards != 0:
+            _err(
+                f"buffer_capacity={regime.buffer_capacity} must divide into "
+                f"shards={regime.shards} pod sub-buffers (K % p == 0)"
+            )
+        if mesh is not None:
+            axes = dict(getattr(mesh, "shape", {}))
+            if axes.get("pod") != regime.shards:
+                _err(
+                    f"shards={regime.shards} needs a ('pod',) mesh axis of "
+                    f"that size (repro.launch.mesh.make_pod_mesh"
+                    f"({regime.shards})); got axes {axes}"
+                )
+        elif regime.shards > 1 and not regime.emulate:
+            _err(
+                f"shards={regime.shards} without a pod mesh: pass mesh="
+                f"repro.launch.mesh.make_pod_mesh({regime.shards}) or set "
+                "emulate=True for single-device emulation"
+            )
+
+    # ---- adversary name + typed kwargs against the live registry
+    if attack.name not in adversary_engine.names():
+        _err(
+            f"unknown attack {attack.name!r}; "
+            f"registry has {adversary_engine.names()}"
+        )
+    try:
+        # registry factories are lenient about unknown keys (**kw), but
+        # bad VALUES — malformed schedule phases, an unknown inner
+        # attack, a non-numeric scale — fail at construction
+        adversary_engine.resolve(attack.name, dict(attack.kwargs))
+    except (TypeError, ValueError, KeyError, IndexError) as e:
+        _err(f"attack {attack.name!r} rejects kwargs {dict(attack.kwargs)!r}: {e}")
+
+    # ---- trust layer
+    if trust.enabled and alg not in ("drag", "br_drag"):
+        _err(
+            "trust reputation needs a reference direction; algorithm "
+            f"{alg!r} has none (use drag or br_drag)"
+        )
+    bad = set(trust.kwargs) - set(TrustConfig._fields)
+    if bad:
+        _err(
+            f"unknown TrustConfig fields {sorted(bad)}; "
+            f"have {list(TrustConfig._fields)}"
+        )
+    return spec

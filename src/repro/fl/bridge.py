@@ -44,29 +44,21 @@ STREAMABLE = frozenset(aggregators.AGGREGATORS)
 def stream_config_from_round(
     cfg: RoundConfig, capacity: int, shards: int = 0
 ) -> stream_server.StreamConfig:
-    """RoundConfig -> StreamConfig with zero-staleness semantics (phi=none)."""
+    """RoundConfig -> StreamConfig with zero-staleness semantics (phi=none).
+
+    The field copying itself is the declarative plane's lowering
+    (``repro.api.lowering.stream_config_from_round`` — RoundConfig ->
+    spec fragments -> StreamConfig), so the bit-for-bit sync<->async
+    proof below pins the SAME code path every entry point lowers
+    through."""
     if cfg.algorithm not in STREAMABLE:
         raise ValueError(
             f"algorithm {cfg.algorithm!r} needs per-client server state and "
             f"cannot run through the stream engine; streamable: {sorted(STREAMABLE)}"
         )
-    return stream_server.StreamConfig(
-        shards=shards,
-        algorithm=cfg.algorithm,
-        buffer_capacity=capacity,
-        local_steps=cfg.local_steps,
-        lr=cfg.lr,
-        alpha=cfg.alpha,
-        c=cfg.c,
-        c_br=cfg.c_br,
-        discount="none",
-        attack=cfg.attack,
-        attack_kw=cfg.attack_kw,
-        n_byzantine_hint=cfg.n_byzantine_hint,
-        geomed_iters=cfg.geomed_iters,
-        trust=cfg.trust,
-        trust_kw=cfg.trust_kw,
-    )
+    from repro.api import lowering
+
+    return lowering.stream_config_from_round(cfg, capacity, shards)
 
 
 def to_stream_state(

@@ -3,6 +3,14 @@
 Orchestrates: UAR worker selection (partial participation), per-round
 data sampling (with label poisoning for malicious workers), the jitted
 federated round, and periodic test evaluation.
+
+The driver reads everything from a declarative
+:class:`repro.api.ExperimentSpec` (sync regime) and lowers its static
+round config through ``repro.api.lowering`` — the one field-copying
+path shared with the async engine and the sync<->async bridge.  The
+legacy :class:`ExperimentConfig` dataclass is retained as a thin
+deprecation shim: it is adopted losslessly into a spec on entry, so
+pre-API callers (and their tests) exercise the same code path.
 """
 from __future__ import annotations
 
@@ -15,12 +23,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import FederatedData
-from repro.fl.round import RoundConfig, init_server_state, make_round_fn
+from repro.fl.round import init_server_state, make_round_fn
 from repro.models import cnn
 
 
 @dataclasses.dataclass
 class ExperimentConfig:
+    """DEPRECATED shim — prefer ``repro.api.ExperimentSpec``.
+
+    Kept so existing entry points and tests double as the API
+    redesign's oracle; ``run_experiment`` adopts it via
+    ``repro.api.lowering.spec_from_sync_config`` (lossless, including
+    the legacy ``attack_kw``/``trust_kw`` tuple-of-pairs).
+    """
+
     dataset: str = "cifar10"
     model: str = "cifar10_cnn"
     n_workers: int = 40  # M
@@ -43,28 +59,49 @@ class ExperimentConfig:
     eval_every: int = 10
     seed: int = 0
 
+    def to_spec(self):
+        """The declarative form (``repro.api.ExperimentSpec``)."""
+        from repro.api import lowering
+
+        return lowering.spec_from_sync_config(self)
+
 
 def run_experiment(
-    exp: ExperimentConfig,
+    exp,  # repro.api.ExperimentSpec (sync regime) | legacy ExperimentConfig
     data: FederatedData | None = None,
     progress: Callable[[dict], None] | None = None,
+    check: bool = True,  # False: spec already validated (api.compile)
 ) -> dict:
     """Runs the experiment; returns {round, accuracy, loss, ...} history."""
+    from repro.api import lowering
+    from repro.api.validation import ensure_executable, validate
     from repro.data.pipeline import build_federated_data
 
-    rng = np.random.RandomState(exp.seed)
-    key = jax.random.PRNGKey(exp.seed)
+    spec = lowering.as_spec(exp)
+    if spec.regime.kind != "sync":
+        raise ValueError(
+            f"run_experiment drives the synchronous regime; got a "
+            f"{spec.regime.kind!r} regime — use repro.api.run / "
+            "repro.stream.run_stream_experiment"
+        )
+    if check:
+        validate(spec)
+        ensure_executable(spec)
+    d, regime = spec.data, spec.regime
+
+    rng = np.random.RandomState(spec.seed)
+    key = jax.random.PRNGKey(spec.seed)
 
     if data is None:
         data = build_federated_data(
-            exp.dataset, exp.n_workers, exp.beta,
-            malicious_fraction=exp.malicious_fraction, attack=exp.attack,
-            seed=exp.seed,
+            d.dataset, d.n_workers, d.beta,
+            malicious_fraction=d.malicious_fraction, attack=spec.attack.name,
+            seed=spec.seed,
         )
 
-    init_fn, apply_fn = cnn.MODELS[exp.model]
+    init_fn, apply_fn = cnn.MODELS[spec.model.name]
     key, k_init = jax.random.split(key)
-    if exp.model == "mlp":
+    if spec.model.name == "mlp":
         in_dim = int(np.prod(data.x.shape[1:]))
         params = init_fn(k_init, in_dim, 64, data.n_classes)
     else:
@@ -73,49 +110,30 @@ def run_experiment(
     def loss_fn(p, batch):
         return cnn.classification_loss(apply_fn, p, batch)
 
-    cfg = RoundConfig(
-        algorithm=exp.algorithm,
-        local_steps=exp.local_steps,
-        lr=exp.lr,
-        alpha=exp.alpha,
-        c=exp.c,
-        c_br=exp.c_br,
-        # label_flipping resolves to a data-space passthrough in the
-        # adversary registry, so it no longer needs host-side special-casing
-        attack=exp.attack,
-        attack_kw=exp.attack_kw,
-        # 0 under a benign config — krum/trimmed_mean must not trim an
-        # honest worker when nothing is malicious; >=1 once any fraction is.
-        n_byzantine_hint=(
-            max(int(exp.malicious_fraction * exp.n_selected), 1)
-            if exp.malicious_fraction > 0
-            else 0
-        ),
-        trust=exp.trust,
-        trust_kw=exp.trust_kw,
-    )
-    with_root = exp.algorithm in ("br_drag", "fltrust")
+    # THE sync lowering (repro.api.lowering): spec -> static round config
+    cfg = lowering.round_config(spec)
+    with_root = cfg.algorithm in ("br_drag", "fltrust")
     round_fn = make_round_fn(loss_fn, cfg, with_root)
 
-    state = init_server_state(params, exp.n_workers, cfg)
+    state = init_server_state(params, d.n_workers, cfg)
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
     test_batch = {"x": jnp.asarray(data.test_batch()["x"]), "y": jnp.asarray(data.test_batch()["y"])}
 
     history = {"round": [], "accuracy": [], "update_norm": [], "wall_s": []}
     t0 = time.time()
-    for t in range(exp.rounds):
-        selected = rng.choice(exp.n_workers, size=exp.n_selected, replace=False)
-        batch_np = data.sample_round(rng, selected, exp.local_steps, exp.batch_size)
+    for t in range(regime.rounds):
+        selected = rng.choice(d.n_workers, size=regime.n_selected, replace=False)
+        batch_np = data.sample_round(rng, selected, regime.local_steps, regime.batch_size)
         batches = {"x": jnp.asarray(batch_np["x"]), "y": jnp.asarray(batch_np["y"])}
         malicious_mask = jnp.asarray(data.malicious[selected])
         key, k_round = jax.random.split(key)
         args = [state, batches, jnp.asarray(selected, jnp.int32), malicious_mask, k_round]
         if with_root:
-            root_np = data.root_batches(rng, exp.local_steps, exp.batch_size, exp.root_samples)
+            root_np = data.root_batches(rng, regime.local_steps, regime.batch_size, d.root_samples)
             args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])})
         state, metrics = round_fn(*args)
 
-        if (t + 1) % exp.eval_every == 0 or t == exp.rounds - 1:
+        if (t + 1) % regime.eval_every == 0 or t == regime.rounds - 1:
             acc = float(eval_jit(state.params, test_batch))
             history["round"].append(t + 1)
             history["accuracy"].append(acc)

@@ -593,7 +593,15 @@ class AsyncStreamServer:
 # ------------------------------------------------------------- experiment
 @dataclasses.dataclass
 class StreamExperimentConfig:
-    """Async analogue of ``repro.fl.server.ExperimentConfig``."""
+    """DEPRECATED shim — prefer ``repro.api.ExperimentSpec`` with an
+    :class:`~repro.api.AsyncRegime` / :class:`~repro.api.ShardedRegime`.
+
+    Kept so existing entry points and tests double as the API
+    redesign's oracle; ``run_stream_experiment`` adopts it via
+    ``repro.api.lowering.spec_from_stream_config`` (lossless, including
+    the legacy ``attack_kw``/``trust_kw``/``latency_kw``
+    tuple-of-pairs).
+    """
 
     dataset: str = "emnist"
     model: str = "mlp"
@@ -626,30 +634,52 @@ class StreamExperimentConfig:
     eval_every: int = 10  # in flushes
     seed: int = 0
 
+    def to_spec(self):
+        """The declarative form (``repro.api.ExperimentSpec``)."""
+        from repro.api import lowering
+
+        return lowering.spec_from_stream_config(self)
+
 
 def run_stream_experiment(
-    exp: StreamExperimentConfig,
+    exp,  # repro.api.ExperimentSpec (async/sharded) | legacy StreamExperimentConfig
     data=None,
     progress: Callable[[dict], None] | None = None,
+    mesh=None,  # pod mesh for sharded regimes (None = emulation path)
+    check: bool = True,  # False: spec already validated (api.compile)
 ) -> dict:
     """Event-driven training run; returns a history dict with accuracy,
     staleness, and throughput (virtual + wall) per eval point."""
+    from repro.api import lowering
+    from repro.api.validation import ensure_executable, validate
     from repro.data.pipeline import build_federated_data
     from repro.models import cnn
 
-    rng = np.random.RandomState(exp.seed)
-    key = jax.random.PRNGKey(exp.seed)
+    spec = lowering.as_spec(exp)
+    if spec.regime.kind not in ("async", "sharded"):
+        raise ValueError(
+            f"run_stream_experiment drives the async/sharded regimes; got a "
+            f"{spec.regime.kind!r} regime — use repro.api.run / "
+            "repro.fl.run_experiment"
+        )
+    if check:
+        validate(spec, mesh=mesh)
+        ensure_executable(spec)
+    d, regime = spec.data, spec.regime
+
+    rng = np.random.RandomState(spec.seed)
+    key = jax.random.PRNGKey(spec.seed)
 
     if data is None:
         data = build_federated_data(
-            exp.dataset, exp.n_workers, exp.beta,
-            malicious_fraction=exp.malicious_fraction, attack=exp.attack,
-            seed=exp.seed,
+            d.dataset, d.n_workers, d.beta,
+            malicious_fraction=d.malicious_fraction, attack=spec.attack.name,
+            seed=spec.seed,
         )
 
-    init_fn, apply_fn = cnn.MODELS[exp.model]
+    init_fn, apply_fn = cnn.MODELS[spec.model.name]
     key, k_init = jax.random.split(key)
-    if exp.model == "mlp":
+    if spec.model.name == "mlp":
         in_dim = int(np.prod(data.x.shape[1:]))
         params = init_fn(k_init, in_dim, 64, data.n_classes)
     else:
@@ -658,46 +688,27 @@ def run_stream_experiment(
     def loss_fn(p, batch):
         return cnn.classification_loss(apply_fn, p, batch)
 
-    cfg = StreamConfig(
-        algorithm=exp.algorithm,
-        buffer_capacity=exp.buffer_capacity,
-        local_steps=exp.local_steps,
-        lr=exp.lr,
-        alpha=exp.alpha,
-        c=exp.c,
-        c_br=exp.c_br,
-        discount=exp.discount,
-        discount_a=exp.discount_a,
-        # label_flipping resolves to a data-space passthrough in the
-        # adversary registry, so it no longer needs host-side special-casing
-        attack=exp.attack,
-        attack_kw=exp.attack_kw,
-        n_byzantine_hint=(
-            max(int(exp.malicious_fraction * exp.buffer_capacity), 1)
-            if exp.malicious_fraction > 0
-            else 0
-        ),
-        trust=exp.trust,
-        trust_kw=exp.trust_kw,
-        root_refresh_every=exp.root_refresh_every,
-        shards=exp.shards,
-    )
+    # THE async lowering (repro.api.lowering): spec -> static flush config.
+    # label_flipping resolves to a data-space passthrough in the adversary
+    # registry, so it no longer needs host-side special-casing.
+    cfg = lowering.stream_config(spec)
     from repro.adversary.stream_attacks import BiasedLatency
     from repro.stream.events import make_latency
 
     server = AsyncStreamServer(
-        loss_fn, params, cfg, n_clients=exp.n_workers, root_cache=exp.root_cache
+        loss_fn, params, cfg, n_clients=d.n_workers,
+        root_cache=regime.root_cache, mesh=mesh,
     )
     malicious_lookup = lambda m: bool(data.malicious[m])  # noqa: E731
-    latency = make_latency(exp.latency, **dict(exp.latency_kw))
-    if exp.attack != "none":
+    latency = make_latency(regime.latency, **dict(regime.latency_kw))
+    if spec.attack.name != "none":
         # async-native adversaries shape arrival times (buffer_flood /
         # staleness_camouflage); for everything else the bias is 1.0
         latency = BiasedLatency(latency, server.adversary, malicious_lookup)
     stream = EventStream(
-        exp.n_workers,
+        d.n_workers,
         latency,
-        seed=exp.seed,
+        seed=spec.seed,
         malicious_lookup=malicious_lookup,
     )
 
@@ -707,7 +718,7 @@ def run_stream_experiment(
 
     # prime the pipeline: W concurrent jobs against the initial model
     inflight: dict[int, pt.Pytree] = {}
-    for _ in range(exp.concurrency):
+    for _ in range(regime.concurrency):
         ev = stream.dispatch(server.t)
         inflight[ev.seq] = server.params
 
@@ -716,10 +727,10 @@ def run_stream_experiment(
         "virtual_time": [], "wall_s": [], "update_norm": [],
     }
     t0 = time.time()
-    while server.t < exp.flushes:
+    while server.t < regime.flushes:
         ev = stream.next_completion()
         snapshot = inflight.pop(ev.seq)
-        batch_np = data.sample_round(rng, [ev.client_id], exp.local_steps, exp.batch_size)
+        batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
         batches = {
             "x": jnp.asarray(batch_np["x"][0]),
             "y": jnp.asarray(batch_np["y"][0]),
@@ -737,13 +748,13 @@ def run_stream_experiment(
             root = None
             if server.with_root:
                 root_np = data.root_batches(
-                    rng, exp.local_steps, exp.batch_size, exp.root_samples
+                    rng, regime.local_steps, regime.batch_size, d.root_samples
                 )
                 root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
             metrics = server.flush_if_ready(k_flush, root)
 
         if metrics is not None and (
-            server.t % exp.eval_every == 0 or server.t == exp.flushes
+            server.t % regime.eval_every == 0 or server.t == regime.flushes
         ):
             acc = float(eval_jit(server.params, test_batch))
             history["flush"].append(server.t)
