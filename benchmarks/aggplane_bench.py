@@ -112,11 +112,21 @@ def bench_cell(s: int, leaf_sizes: tuple[int, ...]) -> dict:
     return cell, rec
 
 
-def count_flush_kernel_calls() -> dict:
+def count_flush_kernel_calls(telemetry: bool = False) -> dict:
     """Count Pallas kernel invocations in ONE eager stream flush with
     trust + staleness enabled (the acceptance configuration), using the
-    shared probe in ``repro.kernels.instrument``."""
-    from repro.api import AggregationSpec, AsyncRegime, ExperimentSpec, TrustSpec
+    shared probe in ``repro.kernels.instrument``.
+
+    ``telemetry=True`` additionally rides the obs MetricsBundle out of
+    the flush — the counts must not change, which is the zero-extra-
+    HBM-passes guarantee of the telemetry plane."""
+    from repro.api import (
+        AggregationSpec,
+        AsyncRegime,
+        ExperimentSpec,
+        TelemetrySpec,
+        TrustSpec,
+    )
     from repro.api import lowering
     from repro.kernels.instrument import count_kernel_calls
     from repro.stream import buffer as buf_mod
@@ -128,6 +138,7 @@ def count_flush_kernel_calls() -> dict:
         aggregation=AggregationSpec(algorithm="drag"),
         trust=TrustSpec(enabled=True),
         regime=AsyncRegime(buffer_capacity=8, discount="poly"),
+        telemetry=TelemetrySpec(enabled=telemetry),
     ).validate()
     cfg = lowering.stream_config(spec)
     state = init_stream_state(p, 8, cfg, n_clients=16)
@@ -156,6 +167,10 @@ def run() -> None:
     assert kernel_calls == TWO_PASS_CALLS, (
         f"flush is no longer two kernel passes: {kernel_calls}"
     )
+    kernel_calls_tel = count_flush_kernel_calls(telemetry=True)
+    assert kernel_calls_tel == TWO_PASS_CALLS, (
+        f"telemetry added kernel passes to the flush: {kernel_calls_tel}"
+    )
     record = {
         "cells": cells,
         "hbm_passes": {
@@ -165,6 +180,9 @@ def run() -> None:
             "flat": {"g_passes": 2, "v_write_read": 0},
             "flush_kernel_calls": kernel_calls,
         },
+        # telemetry-plane provenance: recording the MetricsBundle must
+        # not add a pass — same traced call counts with obs on
+        "telemetry": {"flush_kernel_calls_recorded": kernel_calls_tel},
     }
     with open("BENCH_aggplane.json", "w") as f:
         json.dump(record, f, indent=2)

@@ -193,10 +193,20 @@ def check_acceptance(cells: list[dict], *cell_groups: list[dict]) -> dict:
 
 
 def run_matrix(smoke: bool, out: str) -> dict:
+    from repro.obs import MemorySink
+    from repro.obs import trace as obs_trace
+
     t0 = time.time()
-    cells = sync_matrix(smoke)
-    async_cells = async_matrix(smoke)
-    sharded_cells = async_matrix(smoke, shards=SHARDED_PODS)
+    # record where the matrix's wall clock goes: one span per regime
+    # group, aggregated into the BENCH record's telemetry provenance
+    sink = MemorySink()
+    with obs_trace.tracer.attached(sink):
+        with obs_trace.span("sync_matrix"):
+            cells = sync_matrix(smoke)
+        with obs_trace.span("async_matrix"):
+            async_cells = async_matrix(smoke)
+        with obs_trace.span("sharded_matrix"):
+            sharded_cells = async_matrix(smoke, shards=SHARDED_PODS)
     acceptance = check_acceptance(cells, async_cells, sharded_cells)
     record = {
         "meta": {
@@ -211,6 +221,10 @@ def run_matrix(smoke: bool, out: str) -> dict:
         "async_cells": async_cells,
         "sharded_cells": sharded_cells,
         "acceptance": acceptance,
+        "telemetry": {
+            "schema_version": obs_trace.SCHEMA_VERSION,
+            "spans": obs_trace.aggregate_spans(sink.events),
+        },
     }
     with open(out, "w") as f:
         json.dump(record, f, indent=2)

@@ -40,6 +40,7 @@ def main() -> None:
         robustness_bench,
         roofline,
         stream_bench,
+        telemetry_smoke,
     )
 
     modules = {
@@ -52,6 +53,7 @@ def main() -> None:
         "stream": stream_bench,
         "robustness": robustness_bench,
         "aggplane": aggplane_bench,
+        "telemetry": telemetry_smoke,
     }
     selected = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

@@ -220,17 +220,42 @@ def e2e_spec() -> ExperimentSpec:
 
 
 def bench_e2e() -> dict:
-    from repro.api import compile as api_compile
+    import dataclasses
 
-    spec = e2e_spec()
+    from repro.api import TelemetrySpec
+    from repro.api import compile as api_compile
+    from repro.kernels import instrument
+
+    # the e2e cell RECORDS: the span-attributed wall-clock breakdown of
+    # the ingest->flush loop is the provenance that turns the 300x
+    # updates/s-vs-flushes/s gap (ROADMAP open item 1) into a budget
+    spec = dataclasses.replace(
+        e2e_spec(),
+        telemetry=TelemetrySpec(
+            enabled=True,
+            jsonl="BENCH_stream_events.jsonl",
+            perfetto="BENCH_stream_trace.json",
+        ),
+    )
     t0 = time.time()
-    h = api_compile(spec).run()
+    with instrument.count_kernel_calls() as kcalls:
+        h = api_compile(spec).run()
     wall = time.time() - t0
+    tel = h.get("telemetry", {})
     rec = {
         "flushes": spec.regime.flushes,
         "updates_total": h["updates_total"],
         "updates_per_wall_s": h["updates_per_wall_s"],
         "wall_s": wall,
+        "telemetry": {
+            "spans": tel.get("spans", {}),
+            "drops_total": tel.get("drops_total", 0),
+            "flushes_recorded": tel.get("flushes_recorded", 0),
+            # trace-time quantities: one trace per compiled flush variant
+            "kernel_calls_traced": dict(kcalls),
+            "jsonl": tel.get("jsonl", ""),
+            "perfetto": tel.get("perfetto", ""),
+        },
     }
     emit("stream/e2e/drag_mlp", wall / max(h["updates_total"], 1) * 1e6,
          f"{h['updates_per_wall_s']:.1f}upd/s")

@@ -1,0 +1,164 @@
+"""Telemetry smoke: one tiny sync + one tiny async run with recording
+ON, producing and validating the full observability surface
+(``repro.obs``) end to end:
+
+  * JSONL event logs (``smoke_sync_events.jsonl`` /
+    ``smoke_async_events.jsonl``) — validated line-by-line against
+    ``repro.obs.trace.EVENT_SCHEMA`` via ``benchmarks.validate
+    --telemetry``'s checker;
+  * Chrome/Perfetto trace exports (``smoke_*_trace.json``) — loadable
+    in ``ui.perfetto.dev``, uploaded as a CI artifact;
+  * the on-device ``MetricsBundle`` ring — at least one recorded flush
+    with finite DoD/divergence stats;
+  * the zero-overhead guarantee — the same async spec re-run with
+    telemetry DISABLED must produce bit-identical final parameters.
+
+    PYTHONPATH=src python benchmarks/telemetry_smoke.py [--out-dir D]
+
+This is the CI ``telemetry-smoke`` job.  Exits non-zero on any
+violation.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/telemetry_smoke.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.validate import validate_telemetry
+
+
+def _specs(out_dir: str):
+    from repro.api import (
+        AggregationSpec,
+        AsyncRegime,
+        DataSpec,
+        ExperimentSpec,
+        ModelSpec,
+        SyncRegime,
+        TelemetrySpec,
+        TrustSpec,
+    )
+
+    def tel(tag: str) -> TelemetrySpec:
+        return TelemetrySpec(
+            enabled=True,
+            jsonl=os.path.join(out_dir, f"smoke_{tag}_events.jsonl"),
+            perfetto=os.path.join(out_dir, f"smoke_{tag}_trace.json"),
+        )
+
+    sync = ExperimentSpec(
+        data=DataSpec(dataset="emnist", n_workers=8),
+        model=ModelSpec("mlp"),
+        aggregation=AggregationSpec("drag", c=0.25),
+        regime=SyncRegime(rounds=4, n_selected=4, local_steps=2,
+                          batch_size=8, eval_every=2),
+        telemetry=tel("sync"),
+        seed=0,
+    )
+    async_ = ExperimentSpec(
+        data=DataSpec(dataset="emnist", n_workers=8),
+        model=ModelSpec("mlp"),
+        aggregation=AggregationSpec("br_drag"),
+        trust=TrustSpec(enabled=True),
+        regime=AsyncRegime(flushes=4, concurrency=6, buffer_capacity=4,
+                           local_steps=2, batch_size=8, eval_every=2,
+                           discount="poly"),
+        telemetry=tel("async"),
+        seed=0,
+    )
+    return sync, async_
+
+
+def bench_specs() -> list:
+    """(name, ExperimentSpec) pairs for the spec-matrix CI job."""
+    sync, async_ = _specs(".")
+    return [("telemetry_smoke/sync", sync), ("telemetry_smoke/async", async_)]
+
+
+def _check(history: dict, tag: str) -> dict:
+    """Assert the run's telemetry summary is complete and sane."""
+    tel = history.get("telemetry")
+    assert tel, f"{tag}: recorded run produced no history['telemetry']"
+    assert tel["enabled"] and tel["flushes_recorded"] >= 1, (
+        f"{tag}: no flush MetricsBundles recorded: {tel}"
+    )
+    spans = tel["spans"]
+    assert "flush" in spans or "round" in spans, (
+        f"{tag}: no flush/round spans — got {sorted(spans)}"
+    )
+    for b in tel["ring"]:
+        for k in ("dod_mean", "div_mean", "coeff_a_mean"):
+            assert math.isfinite(b[k]), f"{tag}: non-finite {k} in ring: {b[k]}"
+    n_events = validate_telemetry(tel["jsonl"])
+    with open(tel["perfetto"]) as f:
+        trace = json.load(f)
+    assert trace.get("traceEvents"), f"{tag}: empty Perfetto trace"
+    return {
+        "spans": spans,
+        "flushes_recorded": tel["flushes_recorded"],
+        "drops_total": tel.get("drops_total", 0),
+        "jsonl_events": n_events,
+        "perfetto_events": len(trace["traceEvents"]),
+    }
+
+
+def run_smoke(out_dir: str) -> dict:
+    from repro.api import TelemetrySpec
+    from repro.api import compile as api_compile
+
+    os.makedirs(out_dir, exist_ok=True)
+    sync, async_ = _specs(out_dir)
+
+    print("== sync recorded run ==", flush=True)
+    h_sync = api_compile(sync).run()
+    rec_sync = _check(h_sync, "sync")
+
+    print("== async recorded run ==", flush=True)
+    h_async = api_compile(async_).run()
+    rec_async = _check(h_async, "async")
+
+    # zero-overhead invariant: recording must not perturb the numerics —
+    # the eval trajectory (accuracy at every eval point, update norms)
+    # of the unrecorded re-run must match bit for bit
+    print("== async unrecorded re-run (bit-for-bit check) ==", flush=True)
+    off = dataclasses.replace(async_, telemetry=TelemetrySpec())
+    h_off = api_compile(off).run()
+    assert h_async["accuracy"] == h_off["accuracy"], (
+        "telemetry recording changed the accuracy trajectory — the obs "
+        f"plane must be observation-only: {h_async['accuracy']} vs "
+        f"{h_off['accuracy']}"
+    )
+    assert h_async["update_norm"] == h_off["update_norm"], (
+        "telemetry recording changed the flush numerics: "
+        f"{h_async['update_norm']} vs {h_off['update_norm']}"
+    )
+    assert "telemetry" not in h_off, "disabled telemetry still left a summary"
+
+    record = {"sync": rec_sync, "async": rec_async, "bit_for_bit": True}
+    out = os.path.join(out_dir, "BENCH_telemetry_smoke.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {out}", flush=True)
+    return record
+
+
+def run() -> None:
+    """benchmarks.run entry point."""
+    run_smoke(".")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=".")
+    args = ap.parse_args()
+    run_smoke(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

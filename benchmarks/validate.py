@@ -1,6 +1,7 @@
 """Validate the paper's headline claims against benchmark output.
 
     PYTHONPATH=src python -m benchmarks.validate bench_output.txt
+    PYTHONPATH=src python -m benchmarks.validate --telemetry events.jsonl
 
 Reads the CSV rows emitted by ``benchmarks.run`` and checks the ordinal
 claims of the paper (§VI), printing a markdown section for
@@ -8,11 +9,68 @@ EXPERIMENTS.md §Paper-validation.  Claims are checked on the EARLY
 accuracy (first eval point) where the paper's claim is about
 convergence *speed*, and on final accuracy where it is about
 robustness.
+
+``--telemetry FILE.jsonl`` instead validates a telemetry event log
+(``repro.obs``) against the published ``EVENT_SCHEMA``: every line must
+be a JSON object of a known event type carrying exactly that type's
+fields, and span events must nest sanely (non-negative durations).
+Exits non-zero on the first malformed line — this is what the CI
+``telemetry-smoke`` job runs over the JSONL the smoke run produced.
 """
 from __future__ import annotations
 
+import json
 import sys
 from collections import defaultdict
+
+
+def validate_telemetry(path: str) -> int:
+    """Check a JSONL event log against ``repro.obs.trace.EVENT_SCHEMA``.
+
+    Returns the number of events validated; raises SystemExit with a
+    line-numbered message on the first violation.
+    """
+    from repro.obs.trace import EVENT_SCHEMA
+
+    def die(lineno: int, msg: str):
+        raise SystemExit(f"{path}:{lineno}: {msg}")
+
+    n = 0
+    counts: dict = defaultdict(int)
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                die(lineno, f"not JSON: {e}")
+            if not isinstance(ev, dict):
+                die(lineno, f"event must be a JSON object, got {type(ev).__name__}")
+            etype = ev.get("type")
+            if etype not in EVENT_SCHEMA:
+                die(lineno, f"unknown event type {etype!r}; "
+                            f"schema has {sorted(EVENT_SCHEMA)}")
+            missing = [k for k in EVENT_SCHEMA[etype] if k not in ev]
+            if missing:
+                die(lineno, f"{etype} event missing fields {missing}")
+            if not isinstance(ev.get("name"), str) or not ev["name"]:
+                die(lineno, f"{etype} event needs a non-empty string name")
+            if etype == "span" and ev["dur_us"] < 0:
+                die(lineno, f"span {ev['name']!r} has negative duration "
+                            f"{ev['dur_us']}")
+            counts[etype] += 1
+            n += 1
+    if n == 0:
+        raise SystemExit(f"{path}: no events — an instrumented run must "
+                         "emit at least one")
+    if counts["span"] == 0:
+        raise SystemExit(f"{path}: no span events — the engines' host "
+                         "boundaries were not instrumented")
+    print(f"{path}: {n} events valid "
+          f"({', '.join(f'{k}={v}' for k, v in sorted(counts.items()))})")
+    return n
 
 DRAG_BASELINES = ["fedavg", "fedprox", "scaffold", "fedexp", "fedacg"]
 BYZ_BASELINES = ["fedavg", "fltrust", "rfa", "raga"]
@@ -45,6 +103,12 @@ def check(desc, ok):
 
 
 def main():
+    if "--telemetry" in sys.argv:
+        i = sys.argv.index("--telemetry")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--telemetry needs a JSONL path")
+        validate_telemetry(sys.argv[i + 1])
+        return
     path = sys.argv[1] if len(sys.argv) > 1 else "bench_output.txt"
     final, early = load(path)
 

@@ -44,6 +44,7 @@ from repro.api.spec import (  # noqa: F401
     ModelSpec,
     ShardedRegime,
     SyncRegime,
+    TelemetrySpec,
     TrustSpec,
     regime_from_dict,
 )

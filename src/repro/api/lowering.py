@@ -84,6 +84,7 @@ def round_config(spec: ExperimentSpec) -> RoundConfig:
         geomed_iters=agg.geomed_iters,
         trust=spec.trust.enabled,
         trust_kw=kw_tuple(spec.trust.kwargs),
+        telemetry=spec.telemetry.enabled and spec.telemetry.metrics,
     )
 
 
@@ -108,6 +109,7 @@ def stream_config(spec: ExperimentSpec) -> StreamConfig:
         trust_kw=kw_tuple(spec.trust.kwargs),
         root_refresh_every=regime.root_refresh_every,
         shards=getattr(regime, "shards", 0),
+        telemetry=spec.telemetry.enabled and spec.telemetry.metrics,
     )
 
 

@@ -167,6 +167,27 @@ class TrustSpec:
         object.__setattr__(self, "kwargs", _coerce_kwargs(self.kwargs, "TrustSpec"))
 
 
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """The telemetry plane (``repro.obs``) — OFF by default.
+
+    ``metrics`` rides the jit-safe :class:`~repro.obs.metrics.MetricsBundle`
+    out of every flush/round into an on-device ring of ``ring_capacity``
+    bundles; ``spans`` records host-boundary wall-clock spans.  ``jsonl``
+    / ``perfetto`` name output files for the structured event log and the
+    Chrome/Perfetto ``trace_event`` export ("" = don't write).  Enabling
+    telemetry never changes the training numerics — invariance is pinned
+    by ``tests/test_obs.py``.
+    """
+
+    enabled: bool = False
+    metrics: bool = True  # flush MetricsBundle ring (device-side)
+    spans: bool = True  # host-side trace spans
+    ring_capacity: int = 64  # bundles retained (oldest overwritten)
+    jsonl: str = ""  # JSONL event-log path ("" = off)
+    perfetto: str = ""  # Chrome/Perfetto trace path ("" = off)
+
+
 # ------------------------------------------------------- RegimeSpec tagged union
 @dataclasses.dataclass(frozen=True)
 class SyncRegime:
@@ -250,6 +271,7 @@ class ExperimentSpec:
     attack: AttackSpec = field(default_factory=AttackSpec)
     trust: TrustSpec = field(default_factory=TrustSpec)
     regime: SyncRegime | AsyncRegime | ShardedRegime = field(default_factory=SyncRegime)
+    telemetry: TelemetrySpec = field(default_factory=TelemetrySpec)
     seed: int = 0
 
     # -------------------------------------------------------- serialization
@@ -263,6 +285,7 @@ class ExperimentSpec:
             "attack": {"name": self.attack.name, "kwargs": _thaw(self.attack.kwargs)},
             "trust": {"enabled": self.trust.enabled, "kwargs": _thaw(self.trust.kwargs)},
             "regime": {"kind": self.regime.kind, **_thaw(dataclasses.asdict(self.regime))},
+            "telemetry": dataclasses.asdict(self.telemetry),
             "seed": self.seed,
         }
 
@@ -285,6 +308,8 @@ class ExperimentSpec:
             attack=AttackSpec(**d.get("attack", {})),
             trust=TrustSpec(**d.get("trust", {})),
             regime=regime_from_dict(d.get("regime", {"kind": "sync"})),
+            # absent in pre-telemetry provenance records -> the off default
+            telemetry=TelemetrySpec(**d.get("telemetry", {})),
             seed=int(d.get("seed", 0)),
         )
 

@@ -215,4 +215,20 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
             f"unknown TrustConfig fields {sorted(bad)}; "
             f"have {list(TrustConfig._fields)}"
         )
+
+    # ---- telemetry plane (repro.obs)
+    tel = spec.telemetry
+    if tel.ring_capacity < 1:
+        _err(f"telemetry ring_capacity must be >= 1, got {tel.ring_capacity}")
+    if tel.jsonl and tel.jsonl == tel.perfetto:
+        _err(
+            f"telemetry jsonl and perfetto name the same file "
+            f"{tel.jsonl!r}; the event log and the trace export would "
+            "clobber each other"
+        )
+    if (tel.jsonl or tel.perfetto) and not tel.enabled:
+        _err(
+            "telemetry output paths are set but enabled=False; set "
+            "TelemetrySpec(enabled=True) or drop the paths"
+        )
     return spec

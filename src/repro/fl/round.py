@@ -46,6 +46,9 @@ class RoundConfig:
     geomed_iters: int = 8
     trust: bool = False  # divergence-history reputation (drag/br_drag)
     trust_kw: tuple = ()  # TrustConfig overrides, e.g. (("decay", 0.9),)
+    telemetry: bool = False  # metrics["obs"] = MetricsBundle per round
+    #   (repro.obs) — STATIC: off leaves the round jaxpr untouched; on
+    #   adds one extra pytree output from already-computed signals
 
 
 class ServerState(NamedTuple):
@@ -200,6 +203,7 @@ def federated_round(
     new_trust = state.trust
     params = state.params
     update_norms = None  # [S] row norms; free from the kernel stats below
+    stats_obs = None  # phase-1 scalars for the telemetry bundle, when any
 
     if cfg.algorithm == "drag":
         params, new_drag, dm, stats = drag.round_step_flat(
@@ -208,6 +212,7 @@ def federated_round(
         )
         metrics.update(dm)
         update_norms = jnp.sqrt(stats[1])
+        stats_obs = stats
         if use_trust:
             div, nr = trust_mod.signals_from_stats(*stats)
             # no reference on the bootstrap round -> no observation
@@ -225,6 +230,7 @@ def federated_round(
             )
             metrics.update(dm)
             update_norms = jnp.sqrt(stats[1])
+            stats_obs = stats
             if use_trust:
                 div, nr = trust_mod.signals_from_stats(*stats)
                 new_trust = trust_mod.observe(state.trust, stack.client_ids, div, nr, tcfg)
@@ -271,6 +277,18 @@ def federated_round(
     if update_norms is None:
         update_norms = jnp.linalg.norm(stack.data, axis=1)
     metrics["update_norm_mean"] = jnp.mean(update_norms)
+    if cfg.telemetry:
+        from repro.obs import metrics as obs_metrics
+
+        # the sync regime has no staleness and no ingest buffer: taus /
+        # discounts / drops stay at their defaults, fill = capacity = S
+        metrics["obs"] = obs_metrics.flush_bundle(
+            rnd=state.round, fill=s, capacity=s,
+            stats=stats_obs, update_norms=update_norms, reputations=weights,
+            trust_state=new_trust if use_trust else None,
+            c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
+            mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
+        )
     new_state = ServerState(
         params=params,
         round=state.round + 1,

@@ -25,6 +25,8 @@ import numpy as np
 from repro.data.pipeline import FederatedData
 from repro.fl.round import init_server_state, make_round_fn
 from repro.models import cnn
+from repro.obs import session as obs_session
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -119,28 +121,37 @@ def run_experiment(
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
     test_batch = {"x": jnp.asarray(data.test_batch()["x"]), "y": jnp.asarray(data.test_batch()["y"])}
 
+    session = obs_session.session_from_spec(getattr(spec, "telemetry", None))
+
     history = {"round": [], "accuracy": [], "update_norm": [], "wall_s": []}
     t0 = time.time()
-    for t in range(regime.rounds):
-        selected = rng.choice(d.n_workers, size=regime.n_selected, replace=False)
-        batch_np = data.sample_round(rng, selected, regime.local_steps, regime.batch_size)
-        batches = {"x": jnp.asarray(batch_np["x"]), "y": jnp.asarray(batch_np["y"])}
-        malicious_mask = jnp.asarray(data.malicious[selected])
-        key, k_round = jax.random.split(key)
-        args = [state, batches, jnp.asarray(selected, jnp.int32), malicious_mask, k_round]
-        if with_root:
-            root_np = data.root_batches(rng, regime.local_steps, regime.batch_size, d.root_samples)
-            args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])})
-        state, metrics = round_fn(*args)
+    with session:
+        for t in range(regime.rounds):
+            with obs_trace.span("sample_round"):
+                selected = rng.choice(d.n_workers, size=regime.n_selected, replace=False)
+                batch_np = data.sample_round(rng, selected, regime.local_steps, regime.batch_size)
+                batches = {"x": jnp.asarray(batch_np["x"]), "y": jnp.asarray(batch_np["y"])}
+                malicious_mask = jnp.asarray(data.malicious[selected])
+            key, k_round = jax.random.split(key)
+            args = [state, batches, jnp.asarray(selected, jnp.int32), malicious_mask, k_round]
+            if with_root:
+                root_np = data.root_batches(rng, regime.local_steps, regime.batch_size, d.root_samples)
+                args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])})
+            with obs_trace.span("round", t=t):
+                state, metrics = round_fn(*args)
+            session.record_flush(metrics.pop("obs", None))
 
-        if (t + 1) % regime.eval_every == 0 or t == regime.rounds - 1:
-            acc = float(eval_jit(state.params, test_batch))
-            history["round"].append(t + 1)
-            history["accuracy"].append(acc)
-            history["update_norm"].append(float(metrics["update_norm_mean"]))
-            history["wall_s"].append(time.time() - t0)
-            if progress:
-                progress({"round": t + 1, "accuracy": acc, **{k: float(v) for k, v in metrics.items()}})
+            if (t + 1) % regime.eval_every == 0 or t == regime.rounds - 1:
+                with obs_trace.span("eval"):
+                    acc = float(eval_jit(state.params, test_batch))
+                history["round"].append(t + 1)
+                history["accuracy"].append(acc)
+                history["update_norm"].append(float(metrics["update_norm_mean"]))
+                history["wall_s"].append(time.time() - t0)
+                if progress:
+                    progress({"round": t + 1, "accuracy": acc, **{k: float(v) for k, v in metrics.items()}})
 
     history["final_accuracy"] = history["accuracy"][-1] if history["accuracy"] else 0.0
+    if session.enabled:
+        history["telemetry"] = session.summary()
     return history

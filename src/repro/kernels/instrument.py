@@ -3,21 +3,21 @@
 The flat update plane's headline invariant — a whole DRAG/BR-DRAG flush
 is exactly two kernel passes over the stacked updates (``dot_norms`` +
 ``blend_reduce``, never ``blend``) — is asserted in tests AND measured
-in ``benchmarks/aggplane_bench.py``.  This context manager is the one
-shared probe both use, so a future third kernel in the flush changes
-the counted set in exactly one place.
+in ``benchmarks/aggplane_bench.py``.  The sharded plane
+(``repro.stream.sharded``) adds the cross-pod invariant: a hierarchical
+flush performs exactly ONE cross-pod reduction (``psum_bundle``).
 
-The sharded plane (``repro.stream.sharded``) adds the cross-pod
-invariant: a hierarchical flush performs exactly ONE cross-pod
-reduction (``psum_bundle``).  :func:`count_collective_calls` counts the
-call sites and :func:`count_primitive` counts the lowered ``psum``
-primitives in a jaxpr — program-structure quantities, both.
+The counting machinery itself lives in the telemetry plane
+(:func:`repro.obs.probes.counted_calls`); the context managers here are
+thin wrappers binding it to the flush kernel set and the collective —
+kept because every test and benchmark addresses the invariants through
+these names, and so the invariant tests and telemetry provenance can
+never drift: they count through the same probe.
 """
 from __future__ import annotations
 
-import contextlib
-
 from repro.kernels import drag_calibrate as dk
+from repro.obs.probes import counted_calls
 
 #: the calibration kernels a flush may invoke (counted per call)
 FLUSH_KERNELS = ("dot_norms", "blend_reduce", "blend")
@@ -26,32 +26,20 @@ FLUSH_KERNELS = ("dot_norms", "blend_reduce", "blend")
 TWO_PASS_CALLS = {"dot_norms": 1, "blend_reduce": 1, "blend": 0}
 
 
-@contextlib.contextmanager
-def count_kernel_calls():
+def count_kernel_calls(sink=None):
     """Counts invocations of every :data:`FLUSH_KERNELS` entry.
 
     Yields a mutable ``{kernel_name: count}`` dict, live-updated while
     the context is open; the originals are restored on exit.  Counts
     are per *call site* (trace-time under jit), which is exactly the
     program-structure quantity the two-pass invariant is about.
+
+    ``sink`` (optional): a tracer or event sink — final counts are
+    emitted as ``counter`` events named ``calls/<kernel>``.
     """
-    calls = {name: 0 for name in FLUSH_KERNELS}
-    originals = {name: getattr(dk, name) for name in FLUSH_KERNELS}
-
-    def wrap(name):
-        def fn(*args, **kwargs):
-            calls[name] += 1
-            return originals[name](*args, **kwargs)
-
-        return fn
-
-    try:
-        for name in FLUSH_KERNELS:
-            setattr(dk, name, wrap(name))
-        yield calls
-    finally:
-        for name, fn in originals.items():
-            setattr(dk, name, fn)
+    return counted_calls(
+        {name: (dk, name) for name in FLUSH_KERNELS}, sink=sink
+    )
 
 
 #: what one hierarchical (sharded) flush must invoke — the one-psum
@@ -59,8 +47,7 @@ def count_kernel_calls():
 ONE_PSUM_CALLS = {"psum_bundle": 1}
 
 
-@contextlib.contextmanager
-def count_collective_calls():
+def count_collective_calls(sink=None):
     """Counts :func:`repro.stream.sharded.psum_bundle` invocations.
 
     Same per-call-site (trace-time under jit) semantics as
@@ -70,18 +57,7 @@ def count_collective_calls():
     """
     from repro.stream import sharded
 
-    calls = {"psum_bundle": 0}
-    original = sharded.psum_bundle
-
-    def fn(*args, **kwargs):
-        calls["psum_bundle"] += 1
-        return original(*args, **kwargs)
-
-    try:
-        sharded.psum_bundle = fn
-        yield calls
-    finally:
-        sharded.psum_bundle = original
+    return counted_calls({"psum_bundle": (sharded, "psum_bundle")}, sink=sink)
 
 
 def count_primitive(jaxpr, name: str) -> int:

@@ -1,0 +1,55 @@
+"""repro.obs — ONE telemetry plane for the sync/async/sharded engines.
+
+Two halves, with a hard boundary between them:
+
+  * **On-device metrics** (``metrics``): a jittable
+    :class:`~repro.obs.metrics.MetricsBundle` pytree assembled from
+    signals the fused two-pass flush ALREADY computes — the phase-1
+    dot/norm scalars, blend coefficients, phi(tau) discounts, trust
+    reputations, buffer fill/drop counters.  Zero extra HBM passes over
+    the ``[K, d]`` stack (asserted by the two-pass/one-psum probes);
+    bundles ride out of the jitted flush as one extra output and
+    accumulate in a fixed-capacity on-device ring
+    (:class:`~repro.obs.metrics.MetricsRing`) so a compiled megastep
+    can keep them device-resident.
+
+  * **Host-side tracing + sinks** (``trace`` / ``sinks``): a
+    lightweight nestable span API (``obs.trace.span("ingest")``,
+    monotonic clock) over the engines' HOST boundaries — never inside
+    jit — with pluggable sinks: an in-memory recorder for tests
+    (:class:`~repro.obs.sinks.MemorySink`), a structured JSONL event
+    log (:class:`~repro.obs.sinks.JsonlSink`), and Chrome/Perfetto
+    ``trace_event`` export (:func:`~repro.obs.sinks.perfetto_trace`).
+
+``probes`` is the shared call-site counter implementation behind
+``repro.kernels.instrument`` (the two-pass and one-psum invariant
+probes), so invariant tests and telemetry count the same quantities.
+``session`` ties everything to the declarative plane: a
+:class:`~repro.obs.session.TelemetrySession` is built from an
+``api.TelemetrySpec`` (off by default) and threaded through the
+engines without touching their math.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    DROP_BUCKETS,
+    HIST_BINS,
+    MetricsBundle,
+    MetricsRing,
+    bundle_to_dict,
+    flush_bundle,
+    ring_init,
+    ring_push,
+    ring_read,
+)
+from repro.obs.probes import counted_calls  # noqa: F401
+from repro.obs.sinks import (  # noqa: F401
+    JsonlSink,
+    MemorySink,
+    perfetto_trace,
+    write_perfetto,
+)
+from repro.obs.trace import Tracer, get_tracer, span, tracer  # noqa: F401
+from repro.obs.session import (  # noqa: F401
+    TelemetrySession,
+    host_drop_bucket,
+    session_from_spec,
+)

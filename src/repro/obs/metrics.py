@@ -1,0 +1,277 @@
+"""Jit-safe flush metrics: the on-device half of the telemetry plane.
+
+A :class:`MetricsBundle` is a pytree of O(K)-sized scalars/histograms
+assembled from signals the fused two-pass flush ALREADY computes:
+
+  * the phase-1 ``dot_norms`` scalars (dots, ||g||^2, ||r||^2) give the
+    per-row divergence 1 - cos(g_m, r^t), the DoD lambda_m, the blend
+    coefficients, and the row norms — re-derived with [K]-vector math,
+    never by re-walking the ``[K, d]`` stack;
+  * the staleness tags / phi(tau) discounts, trust reputations, and
+    quarantine flags are the same replicated metadata the flush folds
+    into its reduction weights;
+  * buffer fill and the per-client-hash-bucket overflow drop counters
+    come straight off the (sharded) buffer state, and the per-pod row
+    counts off the sharded plane's ``counts``.
+
+ZERO extra HBM passes over the stack — asserted by running the
+two-pass/one-psum probes (``repro.kernels.instrument``) with telemetry
+enabled.  The bundle rides out of the jitted flush as one extra output
+(``metrics["obs"]``) and accumulates in a fixed-capacity on-device
+:class:`MetricsRing`, so the compiled-megastep direction (ROADMAP Open
+item 1) can keep whole windows of flush telemetry device-resident and
+sync to host once per window, not once per flush.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: fixed histogram resolution of every bundle distribution
+HIST_BINS = 8
+
+#: per-client-hash-bucket drop counter width (``stream.buffer.drop_bucket``)
+DROP_BUCKETS = 8
+
+_EPS = 1e-12
+
+
+def _hist(x, lo: float, hi: float, bins: int = HIST_BINS) -> jax.Array:
+    """Fixed-range histogram, jittable: [N] values -> [bins] int32."""
+    x = jnp.clip(jnp.asarray(x, jnp.float32), lo, hi)
+    idx = jnp.clip(
+        ((x - lo) / (hi - lo) * bins).astype(jnp.int32), 0, bins - 1
+    )
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+
+
+class MetricsBundle(NamedTuple):
+    """One flush's worth of jit-safe telemetry (all jnp leaves).
+
+    Leaf shapes are fixed per run: histograms are ``[HIST_BINS]``,
+    drops ``[DROP_BUCKETS]``, ``pod_fill`` ``[p]`` (``[1]`` off the
+    sharded plane) — which is what lets bundles stack in a ring.
+    """
+
+    round: jax.Array  # [] i32 — model version at flush time
+    fill: jax.Array  # [] i32 — rows aggregated by this flush
+    capacity: jax.Array  # [] i32 — buffer capacity K (static, recorded)
+    drops: jax.Array  # [DROP_BUCKETS] i32 — cumulative overflow drops
+    #                    per client-hash bucket (stream.buffer.drop_bucket)
+    pod_fill: jax.Array  # [p] i32 — per-pod row counts (sharded plane)
+    staleness_mean: jax.Array  # [] f32
+    staleness_max: jax.Array  # [] i32
+    staleness_hist: jax.Array  # [HIST_BINS] i32 over tau in [0, 16)
+    discount_mean: jax.Array  # [] f32 — mean phi(tau)
+    discount_min: jax.Array  # [] f32
+    div_mean: jax.Array  # [] f32 — 1 - cos(g_m, r^t), undiscounted
+    div_max: jax.Array  # [] f32
+    div_hist: jax.Array  # [HIST_BINS] i32 over [0, 2]
+    dod_mean: jax.Array  # [] f32 — lambda_m = c (1 - cos) phi(tau)
+    dod_max: jax.Array  # [] f32
+    coeff_a_mean: jax.Array  # [] f32 — blend v = a g + b r
+    coeff_b_mean: jax.Array  # [] f32
+    row_norm_mean: jax.Array  # [] f32 — ||g_m|| (from phase-1 g_sq)
+    row_norm_max: jax.Array  # [] f32
+    weight_mean: jax.Array  # [] f32 — trust reputation in [0, 1]
+    weight_min: jax.Array  # [] f32
+    rep_hist: jax.Array  # [HIST_BINS] i32 over [0, 1]
+    quarantined: jax.Array  # [] i32 — sticky-quarantined clients
+
+
+def flush_bundle(
+    *,
+    rnd,
+    fill,
+    capacity: int,
+    drops=None,  # [DROP_BUCKETS] i32 cumulative | None
+    pod_fill=None,  # [p] i32 | None (non-sharded: recorded as [1] = fill)
+    taus=None,  # [K] i32 staleness tags | None (sync regime: fresh)
+    discounts=None,  # [K] f32 phi(tau) | None
+    stats=None,  # (dots [K], g_sq [K], r_sq []) phase-1 scalars | None
+    update_norms=None,  # [K] f32 row norms (rules without phase-1 stats)
+    reputations=None,  # [K] f32 trust reputation weights | None
+    trust_state=None,  # TrustState | None
+    c: float = 0.0,
+    mode: str = "none",  # drag | br_drag | none — the coeff formula
+) -> MetricsBundle:
+    """Assemble one flush's bundle from already-computed signals.
+
+    Every input is something the flush holds anyway; all math here is
+    O(K) vector arithmetic on scalars-per-row — never a pass over the
+    ``[K, d]`` stack.  Missing signals (no reference direction, no
+    trust table, sync regime) record as zeros, keeping the bundle
+    structure fixed so rings stack across flushes.
+    """
+    f32 = jnp.float32
+    z = jnp.zeros((), f32)
+    fill = jnp.asarray(fill, jnp.int32)
+
+    if taus is None:
+        staleness_mean, staleness_max = z, jnp.zeros((), jnp.int32)
+        staleness_hist = jnp.zeros((HIST_BINS,), jnp.int32)
+    else:
+        staleness_mean = jnp.mean(jnp.asarray(taus, f32))
+        staleness_max = jnp.max(jnp.asarray(taus, jnp.int32))
+        staleness_hist = _hist(taus, 0.0, 16.0)
+
+    if discounts is None:
+        discount_mean = discount_min = jnp.ones((), f32)
+    else:
+        discount_mean = jnp.mean(jnp.asarray(discounts, f32))
+        discount_min = jnp.min(jnp.asarray(discounts, f32))
+
+    row_norms = None
+    if stats is not None:
+        dots, g_sq, r_sq = stats
+        row_norms = jnp.sqrt(jnp.asarray(g_sq, f32))
+        gn = jnp.sqrt(jnp.asarray(g_sq, f32) + _EPS)
+        rn = jnp.sqrt(jnp.asarray(r_sq, f32) + _EPS)
+        cos = jnp.asarray(dots, f32) / (gn * rn)
+        div = 1.0 - cos
+        lam = c * div
+        if discounts is not None:
+            lam = lam * jnp.asarray(discounts, f32)
+        if mode == "drag":  # eq. (11): v = (1-lam) g + lam (||g||/||r||) r
+            a, b = 1.0 - lam, lam * gn / rn
+        elif mode == "br_drag":  # eq. (15)
+            a, b = (1.0 - lam) * rn / gn, lam
+        else:
+            a, b = jnp.ones_like(lam), jnp.zeros_like(lam)
+        div_mean, div_max = jnp.mean(div), jnp.max(div)
+        div_hist = _hist(div, 0.0, 2.0)
+        dod_mean, dod_max = jnp.mean(lam), jnp.max(lam)
+        coeff_a_mean, coeff_b_mean = jnp.mean(a), jnp.mean(b)
+    else:
+        div_mean = div_max = dod_mean = dod_max = z
+        coeff_a_mean = coeff_b_mean = z
+        div_hist = jnp.zeros((HIST_BINS,), jnp.int32)
+    if row_norms is None:
+        row_norms = (
+            jnp.zeros((1,), f32) if update_norms is None
+            else jnp.asarray(update_norms, f32)
+        )
+
+    if reputations is None:
+        weight_mean = weight_min = jnp.ones((), f32)
+        rep_hist = jnp.zeros((HIST_BINS,), jnp.int32)
+    else:
+        w = jnp.asarray(reputations, f32)
+        weight_mean, weight_min = jnp.mean(w), jnp.min(w)
+        rep_hist = _hist(w, 0.0, 1.0)
+    quarantined = (
+        jnp.sum(trust_state.quarantined.astype(jnp.int32))
+        if trust_state is not None and hasattr(trust_state, "quarantined")
+        else jnp.zeros((), jnp.int32)
+    )
+
+    return MetricsBundle(
+        round=jnp.asarray(rnd, jnp.int32),
+        fill=fill,
+        capacity=jnp.asarray(capacity, jnp.int32),
+        drops=(
+            jnp.zeros((DROP_BUCKETS,), jnp.int32) if drops is None
+            else jnp.asarray(drops, jnp.int32)
+        ),
+        pod_fill=(
+            fill[None] if pod_fill is None
+            else jnp.asarray(pod_fill, jnp.int32)
+        ),
+        staleness_mean=staleness_mean,
+        staleness_max=staleness_max,
+        staleness_hist=staleness_hist,
+        discount_mean=discount_mean,
+        discount_min=discount_min,
+        div_mean=div_mean,
+        div_max=div_max,
+        div_hist=div_hist,
+        dod_mean=dod_mean,
+        dod_max=dod_max,
+        coeff_a_mean=coeff_a_mean,
+        coeff_b_mean=coeff_b_mean,
+        row_norm_mean=jnp.mean(row_norms),
+        row_norm_max=jnp.max(row_norms),
+        weight_mean=weight_mean,
+        weight_min=weight_min,
+        rep_hist=rep_hist,
+        quarantined=quarantined,
+    )
+
+
+def bundle_to_dict(bundle: MetricsBundle) -> dict:
+    """Host-side, JSON-safe view of one bundle (syncs the device)."""
+    out = {}
+    for name, leaf in bundle._asdict().items():
+        arr = np.asarray(leaf)
+        out[name] = arr.tolist() if arr.ndim else arr.item()
+    return out
+
+
+# ------------------------------------------------------- on-device ring
+class MetricsRing(NamedTuple):
+    """Fixed-capacity on-device ring of bundles.
+
+    ``bundles`` leaves carry a leading ``[capacity]`` axis; ``cursor``
+    is the next write slot (mod capacity), ``total`` the lifetime push
+    count.  Pushing is one ``[slot]``-granular in-place write per leaf
+    on the donated ring — O(bundle) bytes, device-resident, so a
+    compiled serving megastep can record thousands of flushes between
+    host syncs.
+    """
+
+    bundles: MetricsBundle
+    cursor: jax.Array  # [] i32
+    total: jax.Array  # [] i32
+
+
+def ring_init(bundle_like: MetricsBundle, capacity: int) -> MetricsRing:
+    """Empty ring shaped to hold ``capacity`` bundles like this one."""
+    return MetricsRing(
+        bundles=jax.tree.map(
+            lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+            bundle_like,
+        ),
+        cursor=jnp.zeros((), jnp.int32),
+        total=jnp.zeros((), jnp.int32),
+    )
+
+
+def ring_push(ring: MetricsRing, bundle: MetricsBundle) -> MetricsRing:
+    """Append one bundle, overwriting the oldest when full."""
+    cap = jax.tree.leaves(ring.bundles)[0].shape[0]
+    slot = ring.cursor % cap
+    return MetricsRing(
+        bundles=jax.tree.map(
+            lambda buf, x: buf.at[slot].set(jnp.asarray(x, buf.dtype)),
+            ring.bundles,
+            bundle,
+        ),
+        cursor=(ring.cursor + 1) % cap,
+        total=ring.total + 1,
+    )
+
+
+def make_ring_push():
+    """Jitted donated push: the ring's storage is reused in place."""
+    return jax.jit(ring_push, donate_argnums=(0,))
+
+
+def ring_read(ring: MetricsRing) -> list[dict]:
+    """Host-side drain: the retained bundles, oldest first, as dicts."""
+    cap = jax.tree.leaves(ring.bundles)[0].shape[0]
+    total = int(ring.total)
+    n = min(total, cap)
+    start = int(ring.cursor) - n  # may be negative: wraps
+    host = jax.tree.map(np.asarray, ring.bundles)
+    out = []
+    for i in range(n):
+        slot = (start + i) % cap
+        entry = {}
+        for name, arr in host._asdict().items():
+            v = arr[slot]
+            entry[name] = v.tolist() if np.ndim(v) else v.item()
+        out.append(entry)
+    return out

@@ -1,0 +1,69 @@
+"""Call-site counting probes — ONE implementation for invariants + telemetry.
+
+The repo's two program-structure invariants — a fused flush is exactly
+TWO kernel passes over the stack, a hierarchical flush meets in exactly
+ONE psum — are asserted by counting call sites (trace-time under jit).
+``repro.kernels.instrument`` historically carried its own monkeypatch
+counters; those context managers are now thin wrappers over
+:func:`counted_calls`, so the invariant tests and the telemetry plane
+can never drift apart: they count through the same probe.
+
+``counted_calls`` is sink-compatible: give it a sink (or the default
+tracer) and the final counts are emitted as ``counter`` events —
+BENCH_*.json provenance records the exact quantities the tests assert.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Mapping
+
+
+@contextlib.contextmanager
+def counted_calls(
+    targets: Mapping[str, tuple[object, str]],
+    sink=None,
+    prefix: str = "calls/",
+):
+    """Count invocations of ``{label: (module, attr)}`` call sites.
+
+    Yields a mutable ``{label: count}`` dict, live-updated while the
+    context is open; the original functions are restored on exit.
+    Counts are per CALL SITE — under jit that is trace time, which is
+    exactly the program-structure quantity the two-pass/one-psum
+    invariants are about (a cached executable re-run counts zero).
+
+    ``sink``: anything with ``emit(event: dict)`` (``repro.obs.sinks``)
+    or a :class:`~repro.obs.trace.Tracer`; on exit each final count is
+    emitted as one ``counter`` event named ``{prefix}{label}``.
+    """
+    from repro.obs import trace as trace_mod
+
+    calls = {label: 0 for label in targets}
+    originals = {label: getattr(mod, attr) for label, (mod, attr) in targets.items()}
+
+    def wrap(label, fn):
+        def counted(*args, **kwargs):
+            calls[label] += 1
+            return fn(*args, **kwargs)
+
+        return counted
+
+    try:
+        for label, (mod, attr) in targets.items():
+            setattr(mod, attr, wrap(label, originals[label]))
+        yield calls
+    finally:
+        for label, (mod, attr) in targets.items():
+            setattr(mod, attr, originals[label])
+        if sink is not None:
+            for label, n in calls.items():
+                if isinstance(sink, trace_mod.Tracer):
+                    sink.counter(prefix + label, n)
+                else:
+                    sink.emit({
+                        "type": "counter",
+                        "name": prefix + label,
+                        "ts_us": trace_mod._now_us(),
+                        "value": float(n),
+                        "v": trace_mod.SCHEMA_VERSION,
+                    })

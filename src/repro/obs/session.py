@@ -1,0 +1,189 @@
+"""TelemetrySession: one run's recording state, built from a TelemetrySpec.
+
+The session is the glue between the declarative plane and the two obs
+halves: it owns the sinks (memory recorder always; JSONL / Perfetto when
+the spec names paths), attaches them to the process tracer for the run's
+duration, accumulates the flush :class:`~repro.obs.metrics.MetricsBundle`
+pytrees in an on-device ring, mirrors per-client-hash-bucket drop counts
+for the HOST-side drop decision (``AsyncStreamServer`` refuses uploads
+before they touch the device), and records traced kernel-call counts from
+the probes.  ``summary()`` is the JSON-safe provenance blob the engines
+put in ``history["telemetry"]`` and the benchmarks embed in
+BENCH_*.json.
+
+A disabled session (the default — ``TelemetrySpec(enabled=False)``) is
+inert: every method early-returns, no sinks attach, the tracer stays on
+its no-op fast path, and the jitted flush never computes a bundle.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.obs import metrics as metrics_mod
+from repro.obs import sinks as sinks_mod
+from repro.obs import trace as trace_mod
+
+
+def _mix32_host(x: int) -> int:
+    """Pure-python twin of ``stream.buffer.mix32`` (same avalanche)."""
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def host_drop_bucket(client_id: int) -> int:
+    """Host-side twin of ``stream.buffer.drop_bucket`` — same bucket."""
+    return _mix32_host(int(client_id)) % metrics_mod.DROP_BUCKETS
+
+
+class TelemetrySession:
+    """Recording state for one experiment run (engines thread it through).
+
+    Use as a context manager (or call :meth:`open`/:meth:`close`):
+    entering attaches the session's sinks to the process tracer,
+    exiting detaches them, writes the Perfetto export, and closes the
+    JSONL log.
+    """
+
+    def __init__(
+        self,
+        *,
+        enabled: bool = True,
+        metrics: bool = True,
+        spans: bool = True,
+        ring_capacity: int = 64,
+        jsonl: str = "",
+        perfetto: str = "",
+        process_name: str = "repro",
+    ) -> None:
+        self.enabled = bool(enabled)
+        self.metrics_enabled = self.enabled and bool(metrics)
+        self.spans_enabled = self.enabled and bool(spans)
+        self.ring_capacity = int(ring_capacity)
+        self.perfetto_path = perfetto
+        self.process_name = process_name
+        self.memory = sinks_mod.MemorySink()
+        self.jsonl_sink = (
+            sinks_mod.JsonlSink(jsonl) if (self.enabled and jsonl) else None
+        )
+        self.drops: dict[int, int] = {}  # host-side per-bucket mirror
+        self.kernel_calls: dict[str, int] = {}  # traced call sites
+        self._ring: metrics_mod.MetricsRing | None = None
+        self._ring_push = None
+        self._open = False
+
+    # ------------------------------------------------------------ lifecycle
+    def open(self) -> "TelemetrySession":
+        if self.enabled and not self._open:
+            if self.spans_enabled:
+                trace_mod.tracer.attach(self.memory)
+                if self.jsonl_sink is not None:
+                    trace_mod.tracer.attach(self.jsonl_sink)
+            self._open = True
+        return self
+
+    def close(self) -> None:
+        if not self._open:
+            return
+        if self.spans_enabled:
+            trace_mod.tracer.detach(self.memory)
+            if self.jsonl_sink is not None:
+                trace_mod.tracer.detach(self.jsonl_sink)
+        if self.perfetto_path:
+            sinks_mod.write_perfetto(
+                self.memory.events, self.perfetto_path, self.process_name
+            )
+        if self.jsonl_sink is not None:
+            self.jsonl_sink.close()
+        self._open = False
+
+    def __enter__(self) -> "TelemetrySession":
+        return self.open()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # ------------------------------------------------------------ recording
+    def span(self, name: str, **attrs):
+        """A span on the process tracer (no-op when nothing is attached)."""
+        return trace_mod.tracer.span(name, **attrs)
+
+    def record_flush(self, bundle) -> None:
+        """Push one flush's MetricsBundle into the on-device ring."""
+        if not self.metrics_enabled or bundle is None:
+            return
+        if self._ring is None:
+            self._ring = metrics_mod.ring_init(bundle, self.ring_capacity)
+            self._ring_push = metrics_mod.make_ring_push()
+        self._ring = self._ring_push(self._ring, bundle)
+
+    def record_drop(self, client_id: int) -> None:
+        """Mirror a HOST-side drop decision into its client-hash bucket."""
+        if not self.enabled:
+            return
+        b = host_drop_bucket(client_id)
+        self.drops[b] = self.drops.get(b, 0) + 1
+
+    def record_kernel_calls(self, calls: dict) -> None:
+        """Fold in traced call-site counts from ``obs.counted_calls``.
+
+        These are TRACE-time quantities (a cached jit executable re-run
+        counts zero) — the provenance field is named accordingly.
+        """
+        if not self.enabled:
+            return
+        for name, n in calls.items():
+            self.kernel_calls[name] = self.kernel_calls.get(name, 0) + int(n)
+
+    # ------------------------------------------------------------ reporting
+    def ring_bundles(self) -> list[dict]:
+        """The retained flush bundles, oldest first, as JSON-safe dicts."""
+        if self._ring is None:
+            return []
+        return metrics_mod.ring_read(self._ring)
+
+    def span_breakdown(self) -> dict[str, dict[str, float]]:
+        """``{span_name: {count, total_ms, mean_us, max_us}}`` so far."""
+        return trace_mod.aggregate_spans(self.memory.events)
+
+    def summary(self) -> dict[str, Any]:
+        """JSON-safe provenance blob (``history["telemetry"]``)."""
+        if not self.enabled:
+            return {"enabled": False}
+        bundles = self.ring_bundles()
+        out: dict[str, Any] = {
+            "enabled": True,
+            "schema_version": trace_mod.SCHEMA_VERSION,
+            "spans": self.span_breakdown(),
+            "drops_by_bucket": {str(k): v for k, v in sorted(self.drops.items())},
+            "drops_total": sum(self.drops.values()),
+            "flushes_recorded": len(bundles),
+            "ring": bundles,
+        }
+        if self.kernel_calls:
+            out["kernel_calls_traced"] = dict(self.kernel_calls)
+        if self.jsonl_sink is not None:
+            out["jsonl"] = self.jsonl_sink.path
+        if self.perfetto_path:
+            out["perfetto"] = self.perfetto_path
+        return out
+
+
+def session_from_spec(spec) -> TelemetrySession:
+    """Build a session from an ``api.TelemetrySpec`` (duck-typed; None or
+    a disabled spec yields an inert session)."""
+    if spec is None or not getattr(spec, "enabled", False):
+        return TelemetrySession(enabled=False)
+    return TelemetrySession(
+        enabled=True,
+        metrics=getattr(spec, "metrics", True),
+        spans=getattr(spec, "spans", True),
+        ring_capacity=getattr(spec, "ring_capacity", 64),
+        jsonl=getattr(spec, "jsonl", ""),
+        perfetto=getattr(spec, "perfetto", ""),
+    )

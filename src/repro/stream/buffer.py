@@ -26,6 +26,29 @@ import jax.numpy as jnp
 
 from repro.core import flat as flat_mod
 from repro.core import pytree as pt
+from repro.obs.metrics import DROP_BUCKETS
+
+
+def mix32(x) -> jax.Array:
+    """Jittable 32-bit integer finaliser (splitmix-style avalanche).
+
+    THE client-id hash of the stream plane: pod routing
+    (``stream.sharded.route_pod``) and drop-bucket accounting both go
+    through it, so "which pod" and "whose uploads got dropped" are keyed
+    consistently.
+    """
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def drop_bucket(client_id) -> jax.Array:
+    """Which of the ``DROP_BUCKETS`` drop counters a client hashes into."""
+    return (mix32(client_id) % jnp.uint32(DROP_BUCKETS)).astype(jnp.int32)
 
 
 class BufferState(NamedTuple):
@@ -36,6 +59,8 @@ class BufferState(NamedTuple):
     malicious: jax.Array  # [K] bool — for Byzantine injection at flush
     count: jax.Array  # [] int32 — filled slots
     client_ids: jax.Array  # [K] int32 — uploader ids (trust indexing)
+    drops: jax.Array  # [DROP_BUCKETS] int32 — CUMULATIVE overflow drops
+    #                    per client-hash bucket; never reset by ``reset``
 
 
 def capacity_of(buf: BufferState) -> int:
@@ -51,6 +76,7 @@ def init_buffer(params_like: pt.Pytree, capacity: int) -> BufferState:
         malicious=jnp.zeros((capacity,), bool),
         count=jnp.zeros((), jnp.int32),
         client_ids=jnp.zeros((capacity,), jnp.int32),
+        drops=jnp.zeros((DROP_BUCKETS,), jnp.int32),
     )
 
 
@@ -85,6 +111,11 @@ def ingest(
         count=buf.count + keep.astype(jnp.int32),
         client_ids=buf.client_ids.at[slot].set(
             jnp.where(keep, jnp.asarray(client_id, jnp.int32), buf.client_ids[slot])
+        ),
+        # a refused write is ACCOUNTED, not silent: the dropping client's
+        # hash bucket increments (one scatter-add, same donation fast path)
+        drops=buf.drops.at[drop_bucket(client_id)].add(
+            1 - keep.astype(jnp.int32)
         ),
     )
 

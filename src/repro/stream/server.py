@@ -50,6 +50,9 @@ from repro.core import aggregators, br_drag, drag
 from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.fl.client import local_update
+from repro.obs import metrics as obs_metrics
+from repro.obs import session as obs_session
+from repro.obs import trace as obs_trace
 from repro.stream import buffer as buf_mod
 from repro.stream import sharded as sharded_mod
 from repro.stream import staleness as stale
@@ -80,6 +83,10 @@ class StreamConfig:
     root_refresh_every: int = 1  # reuse cached r^t across this many versions
     shards: int = 0  # p — per-pod sub-buffers + hierarchical one-psum
     #                    flush (repro.stream.sharded); 0 = single buffer
+    telemetry: bool = False  # metrics["obs"] = MetricsBundle per flush
+    #   (repro.obs) — STATIC: off leaves the flush jaxpr untouched; on
+    #   adds one extra pytree output assembled from the already-computed
+    #   flush signals, never an extra pass over the stack
 
 
 class StreamState(NamedTuple):
@@ -211,6 +218,7 @@ def flush(
     new_drag = drag_state
     new_trust = trust_state
     update_norms = None  # [K] row norms; free from the kernel stats below
+    stats_obs = None  # phase-1 scalars for the telemetry bundle, when any
 
     if cfg.algorithm == "drag":
         params, new_drag, dm, stats = drag.round_step_flat(
@@ -219,6 +227,7 @@ def flush(
         )
         metrics.update(dm)
         update_norms = jnp.sqrt(stats[1])
+        stats_obs = stats
         if use_trust:
             div, nr = trust_mod.signals_from_stats(*stats)
             new_trust = trust_mod.observe(
@@ -240,6 +249,7 @@ def flush(
             )
             metrics.update(dm)
             update_norms = jnp.sqrt(stats[1])
+            stats_obs = stats
             if use_trust:
                 div, nr = trust_mod.signals_from_stats(*stats)
                 new_trust = trust_mod.observe(
@@ -276,6 +286,15 @@ def flush(
     if update_norms is None:
         update_norms = jnp.linalg.norm(g, axis=1)
     metrics["update_norm_mean"] = jnp.mean(update_norms)
+    if cfg.telemetry:
+        metrics["obs"] = obs_metrics.flush_bundle(
+            rnd=rnd, fill=buf.count, capacity=buf_mod.capacity_of(buf),
+            drops=buf.drops, taus=taus, discounts=discounts,
+            stats=stats_obs, update_norms=update_norms, reputations=weights,
+            trust_state=new_trust if use_trust else None,
+            c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
+            mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
+        )
     return params, new_drag, rnd + 1, buf_mod.reset(buf), new_adv, new_trust, metrics
 
 
@@ -398,6 +417,17 @@ def _flush_sharded(
         metrics["trust_weight_mean"] = jnp.mean(weights)
         metrics["quarantined"] = jnp.sum(new_trust.quarantined.astype(jnp.int32))
     metrics["update_norm_mean"] = jnp.mean(jnp.sqrt(stats[1]))
+    if cfg.telemetry:
+        metrics["obs"] = obs_metrics.flush_bundle(
+            rnd=rnd, fill=sharded_mod.total_count(buf), capacity=k,
+            drops=buf.drops, pod_fill=buf.counts, taus=taus,
+            discounts=discounts,
+            stats=stats if cfg.algorithm in ("drag", "br_drag") else None,
+            update_norms=jnp.sqrt(stats[1]), reputations=weights,
+            trust_state=new_trust if use_trust else None,
+            c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
+            mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
+        )
     return (
         params, new_drag, rnd + 1, sharded_mod.reset(buf), new_adv, new_trust,
         metrics,
@@ -517,8 +547,13 @@ class AsyncStreamServer:
         n_clients: int | None = None,
         root_cache: bool = True,
         mesh=None,  # pod mesh for cfg.shards > 0 (None = emulation path)
+        session: obs_session.TelemetrySession | None = None,
     ):
         self.cfg = cfg
+        # telemetry session (repro.obs): flush bundles ring-accumulate
+        # here, host-side drop decisions mirror into its buckets, and the
+        # ingest/flush host boundaries carry spans.  None = inert.
+        self.session = session or obs_session.TelemetrySession(enabled=False)
         self.with_root = cfg.algorithm in ("br_drag", "fltrust")
         self.adversary = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw))
         self.state = init_stream_state(
@@ -550,16 +585,21 @@ class AsyncStreamServer:
         """Accept one upload.  Returns False — and counts the drop — when
         the buffer is already at threshold; call ``flush_if_ready`` first
         if the update must not be lost."""
-        if self.ingested >= self.cfg.buffer_capacity:
-            self.dropped += 1
-            return False
-        self.state = self.state._replace(
-            buffer=self._ingest(
-                self.state.buffer, g, dispatch_round, is_malicious, client_id
+        with obs_trace.span("ingest", client_id=int(client_id)) as sp:
+            if self.ingested >= self.cfg.buffer_capacity:
+                self.dropped += 1
+                # the refusal happens HOST-side (the upload never touches
+                # the device), so the bucket accounting mirrors here
+                self.session.record_drop(client_id)
+                sp.set(dropped=True)
+                return False
+            self.state = self.state._replace(
+                buffer=self._ingest(
+                    self.state.buffer, g, dispatch_round, is_malicious, client_id
+                )
             )
-        )
-        self.ingested += 1
-        return True
+            self.ingested += 1
+            return True
 
     def buffer_ready(self) -> bool:
         # host-side mirror: count == ingested since last flush
@@ -573,21 +613,26 @@ class AsyncStreamServer:
     def flush_if_ready(self, key, root_batches=None) -> dict | None:
         if not self.buffer_ready():
             return None
-        args = [
-            self.state.params, self.state.drag, self.state.round,
-            self.state.buffer, key, self.state.adversary, self.state.trust,
-        ]
-        if self.with_root:
-            assert root_batches is not None
-            args.append(self.root_reference(root_batches))
-        params, new_drag, rnd, buf, adv, trust, metrics = self._flush(*args)
-        self.state = StreamState(
-            params=params, round=rnd, drag=new_drag, buffer=buf,
-            adversary=adv, trust=trust,
-        )
-        self.t += 1
-        self.ingested = 0
-        return metrics
+        with obs_trace.span("flush", round=self.t):
+            args = [
+                self.state.params, self.state.drag, self.state.round,
+                self.state.buffer, key, self.state.adversary, self.state.trust,
+            ]
+            if self.with_root:
+                assert root_batches is not None
+                with obs_trace.span("root_reference"):
+                    args.append(self.root_reference(root_batches))
+            params, new_drag, rnd, buf, adv, trust, metrics = self._flush(*args)
+            self.state = StreamState(
+                params=params, round=rnd, drag=new_drag, buffer=buf,
+                adversary=adv, trust=trust,
+            )
+            self.t += 1
+            self.ingested = 0
+            # the bundle is telemetry, not a training metric: it leaves the
+            # metrics dict here and accumulates in the session's ring
+            self.session.record_flush(metrics.pop("obs", None))
+            return metrics
 
 
 # ------------------------------------------------------------- experiment
@@ -695,9 +740,10 @@ def run_stream_experiment(
     from repro.adversary.stream_attacks import BiasedLatency
     from repro.stream.events import make_latency
 
+    session = obs_session.session_from_spec(getattr(spec, "telemetry", None))
     server = AsyncStreamServer(
         loss_fn, params, cfg, n_clients=d.n_workers,
-        root_cache=regime.root_cache, mesh=mesh,
+        root_cache=regime.root_cache, mesh=mesh, session=session,
     )
     malicious_lookup = lambda m: bool(data.malicious[m])  # noqa: E731
     latency = make_latency(regime.latency, **dict(regime.latency_kw))
@@ -727,47 +773,50 @@ def run_stream_experiment(
         "virtual_time": [], "wall_s": [], "update_norm": [],
     }
     t0 = time.time()
-    while server.t < regime.flushes:
-        ev = stream.next_completion()
-        snapshot = inflight.pop(ev.seq)
-        batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
-        batches = {
-            "x": jnp.asarray(batch_np["x"][0]),
-            "y": jnp.asarray(batch_np["y"][0]),
-        }
-        g = server.client_update(snapshot, batches)
-        server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
+    with session:
+        while server.t < regime.flushes:
+            ev = stream.next_completion()
+            snapshot = inflight.pop(ev.seq)
+            batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
+            batches = {
+                "x": jnp.asarray(batch_np["x"][0]),
+                "y": jnp.asarray(batch_np["y"][0]),
+            }
+            with obs_trace.span("client_update"):
+                g = server.client_update(snapshot, batches)
+            server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
 
-        # keep the pipeline full: re-dispatch against the CURRENT model
-        ev2 = stream.dispatch(server.t)
-        inflight[ev2.seq] = server.params
+            # keep the pipeline full: re-dispatch against the CURRENT model
+            ev2 = stream.dispatch(server.t)
+            inflight[ev2.seq] = server.params
 
-        metrics = None
-        if server.buffer_ready():
-            key, k_flush = jax.random.split(key)
-            root = None
-            if server.with_root:
-                root_np = data.root_batches(
-                    rng, regime.local_steps, regime.batch_size, d.root_samples
-                )
-                root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
-            metrics = server.flush_if_ready(k_flush, root)
+            metrics = None
+            if server.buffer_ready():
+                key, k_flush = jax.random.split(key)
+                root = None
+                if server.with_root:
+                    root_np = data.root_batches(
+                        rng, regime.local_steps, regime.batch_size, d.root_samples
+                    )
+                    root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
+                metrics = server.flush_if_ready(k_flush, root)
 
-        if metrics is not None and (
-            server.t % regime.eval_every == 0 or server.t == regime.flushes
-        ):
-            acc = float(eval_jit(server.params, test_batch))
-            history["flush"].append(server.t)
-            history["accuracy"].append(acc)
-            history["staleness_mean"].append(float(metrics["staleness_mean"]))
-            history["virtual_time"].append(stream.now)
-            history["wall_s"].append(time.time() - t0)
-            history["update_norm"].append(float(metrics["update_norm_mean"]))
-            if progress:
-                progress({
-                    "flush": server.t, "accuracy": acc,
-                    **{k: float(v) for k, v in metrics.items()},
-                })
+            if metrics is not None and (
+                server.t % regime.eval_every == 0 or server.t == regime.flushes
+            ):
+                with obs_trace.span("eval"):
+                    acc = float(eval_jit(server.params, test_batch))
+                history["flush"].append(server.t)
+                history["accuracy"].append(acc)
+                history["staleness_mean"].append(float(metrics["staleness_mean"]))
+                history["virtual_time"].append(stream.now)
+                history["wall_s"].append(time.time() - t0)
+                history["update_norm"].append(float(metrics["update_norm_mean"]))
+                if progress:
+                    progress({
+                        "flush": server.t, "accuracy": acc,
+                        **{k: float(v) for k, v in metrics.items()},
+                    })
 
     history["final_accuracy"] = history["accuracy"][-1] if history["accuracy"] else 0.0
     history["updates_total"] = stream.completed
@@ -775,4 +824,6 @@ def run_stream_experiment(
     if server.root_cache is not None:
         history["root_cache_hits"] = server.root_cache.hits
         history["root_cache_misses"] = server.root_cache.misses
+    if session.enabled:
+        history["telemetry"] = session.summary()
     return history

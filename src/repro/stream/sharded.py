@@ -52,6 +52,7 @@ from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.kernels import ops as kops
 from repro.launch import compat
+from repro.stream import buffer as buffer_mod
 
 #: the mesh axis the sub-buffers shard over (``launch.mesh.make_pod_mesh``)
 POD_AXIS = "pod"
@@ -71,6 +72,8 @@ class ShardedBufferState(NamedTuple):
     malicious: jax.Array  # [p, K/p] bool
     counts: jax.Array  # [p] int32 — per-pod fill counts
     client_ids: jax.Array  # [p, K/p] int32
+    drops: jax.Array  # [DROP_BUCKETS] int32 — cumulative overflow drops
+    #                    per client-hash bucket (replicated; never reset)
 
 
 def n_pods(buf: ShardedBufferState) -> int:
@@ -127,6 +130,7 @@ def init_sharded_buffer(
         malicious=jnp.zeros((shards, kp), bool),
         counts=jnp.zeros((shards,), jnp.int32),
         client_ids=jnp.zeros((shards, kp), jnp.int32),
+        drops=jnp.zeros((buffer_mod.DROP_BUCKETS,), jnp.int32),
     )
     if mesh is not None:
         if mesh.shape[pod_axis] != shards:
@@ -141,21 +145,15 @@ def init_sharded_buffer(
             malicious=jax.device_put(buf.malicious, meta_sh),
             counts=jax.device_put(buf.counts, meta_sh),
             client_ids=jax.device_put(buf.client_ids, meta_sh),
+            drops=jax.device_put(buf.drops, meta_sh),
         )
     return buf
 
 
 # ---------------------------------------------------------------- routing
 
-def _mix32(x) -> jax.Array:
-    """Jittable 32-bit integer finaliser (splitmix-style avalanche)."""
-    x = jnp.asarray(x, jnp.uint32)
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
+#: shared with the flat buffer's drop-bucket accounting — ONE client hash
+_mix32 = buffer_mod.mix32
 
 
 def route_pod(client_id, pods: int) -> jax.Array:
@@ -201,6 +199,11 @@ def ingest(
         client_ids=buf.client_ids.at[pod, slot].set(
             jnp.where(keep, jnp.asarray(client_id, jnp.int32),
                       buf.client_ids[pod, slot])
+        ),
+        # same accounting as the flat buffer: a whole-buffer-full refusal
+        # increments the dropping client's hash bucket
+        drops=buf.drops.at[buffer_mod.drop_bucket(client_id)].add(
+            1 - keep.astype(jnp.int32)
         ),
     )
 

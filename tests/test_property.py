@@ -289,9 +289,10 @@ _D_SHARD = 12
         st.integers(0, 3), min_size=_K_SHARD, max_size=_K_SHARD
     ),
     pods=st.sampled_from([1, 2, 4]),
+    overflow_ids=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=5),
 )
 def test_sharded_ingest_flush_matches_single_buffer(
-    rows, client_ids, dispatch_rounds, pods
+    rows, client_ids, dispatch_rounds, pods, overflow_ids
 ):
     from repro.kernels import ops as kops
     from repro.stream import buffer as buf_mod
@@ -308,6 +309,18 @@ def test_sharded_ingest_flush_matches_single_buffer(
         bs = sharded.ingest(bs, g, dispatch_rounds[i], False, client_ids[i])
     # every arrival accepted on both layouts (fallback => no early drops)
     assert int(b0.count) == int(sharded.total_count(bs)) == _K_SHARD
+    assert int(b0.drops.sum()) == int(bs.drops.sum()) == 0
+
+    # overflow arrivals past capacity are REFUSED identically on both
+    # layouts, and ACCOUNTED identically: same cumulative per-client-
+    # hash-bucket drop counters (ISSUE 6 satellite — no silent drops)
+    for j, cid in enumerate(overflow_ids):
+        g = jnp.asarray(rows[j % _K_SHARD]) + 1.0
+        b0 = buf_mod.ingest(b0, g, 0, False, client_id=cid)
+        bs = sharded.ingest(bs, g, 0, False, client_id=cid)
+    assert int(b0.count) == int(sharded.total_count(bs)) == _K_SHARD
+    np.testing.assert_array_equal(np.asarray(b0.drops), np.asarray(bs.drops))
+    assert int(b0.drops.sum()) == len(overflow_ids)
     # same multiset of (client, row): pod-major is a permutation of arrival
     def canon(cids, slots):
         a = np.concatenate(
