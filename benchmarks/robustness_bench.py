@@ -16,6 +16,13 @@ The headline acceptance invariant — checked and recorded under
 (``br_drag_trust``) beats plain FedAvg on final loss in EVERY byzantine
 cell of the matrix.
 
+The DETECTION matrix (PR 7) measures the diagnosis layer against the
+lab's ground truth: scheduled-onset ALIE / IPM cells (benign until
+``DETECTION_ONSET``, then 40% malicious) must raise a monitor alert
+within ``DETECTION_BOUND`` flushes of onset, attack-free cells must
+raise ZERO alerts, and per-cell precision/recall/latency land under
+``detection`` in the JSON — measured, not asserted.
+
     PYTHONPATH=src python benchmarks/robustness_bench.py [--smoke] [--out F]
 
 ``--smoke`` cuts the grid to a representative slice (the CI weekly job);
@@ -69,6 +76,32 @@ SHARDED_PODS = 2
 
 BREAK_FACTOR = 5.0
 
+#: detection matrix geometry: benign until onset, attacked after —
+#: the ``schedule`` combinator makes rounds before the first phase
+#: benign, so the lab knows the onset flush exactly
+DETECTION_ONSET = 16
+DETECTION_FLUSHES = 32
+#: a ground-truth attack cell must alert within this many flushes of onset
+DETECTION_BOUND = 8
+
+#: (name, scheduled attack phases) — the monitored ground-truth cells
+DETECTION_ATTACKS = [
+    ("alie", ((DETECTION_ONSET, "alie"),)),
+    ("ipm", ((DETECTION_ONSET, "ipm", (("eps", 2.0),)),)),
+]
+#: attack-free aggregators that must raise ZERO alerts over the horizon
+DETECTION_BENIGN_AGGS = ["fedavg", "drag"]
+
+
+def detection_telemetry():
+    """The monitored TelemetrySpec every detection cell runs under."""
+    from repro.api import MonitorSpec, TelemetrySpec
+
+    return TelemetrySpec(
+        enabled=True, spans=False, ring_capacity=DETECTION_FLUSHES,
+        monitor=MonitorSpec(enabled=True),
+    )
+
 
 def matrix_specs(smoke: bool) -> list[tuple[str, object]]:
     """Every cell of the matrix as a named ``repro.api.ExperimentSpec``.
@@ -101,6 +134,22 @@ def matrix_specs(smoke: bool) -> list[tuple[str, object]]:
         specs.append((
             f"async_sharded_p{SHARDED_PODS}/buffer_flood/{agg}",
             stream_spec(sc, flushes=flushes, shards=SHARDED_PODS),
+        ))
+    tel = detection_telemetry()
+    for attack, phases in DETECTION_ATTACKS:
+        sc = Scenario(
+            aggregator="br_drag_trust", attack="schedule",
+            attack_kw=(("phases", phases),),
+        )
+        specs.append((
+            f"detect/{attack}/br_drag_trust",
+            stream_spec(sc, flushes=DETECTION_FLUSHES, telemetry=tel),
+        ))
+    for agg in DETECTION_BENIGN_AGGS:
+        sc = Scenario(aggregator=agg, attack="none", malicious_fraction=0.0)
+        specs.append((
+            f"detect/none/{agg}",
+            stream_spec(sc, flushes=DETECTION_FLUSHES, telemetry=tel),
         ))
     return specs
 
@@ -168,6 +217,81 @@ def async_matrix(smoke: bool, shards: int = 0) -> list[dict]:
     return cells
 
 
+def detection_matrix() -> list[dict]:
+    """Detection quality against the lab's ground truth, per cell.
+
+    Ground-truth cells: ``br_drag_trust`` with a scheduled 40%-malicious
+    ALIE / IPM onset at ``DETECTION_ONSET`` — latency is first-alert
+    minus onset, precision/recall score the trust plane's flagged set
+    against the known malicious mask.  Attack-free cells (``fedavg``,
+    ``drag``) run the same monitor and report their alert count, which
+    acceptance requires to be ZERO.
+    """
+    from repro.obs import forensics
+
+    tel = detection_telemetry()
+    cells = []
+    for attack, phases in DETECTION_ATTACKS:
+        sc = Scenario(
+            aggregator="br_drag_trust", attack="schedule",
+            attack_kw=(("phases", phases),),
+        )
+        r = run_stream_scenario(sc, flushes=DETECTION_FLUSHES, telemetry=tel)
+        summary = r["telemetry"]
+        lat = forensics.alert_latency(summary.get("alerts", []), DETECTION_ONSET)
+        table = forensics.client_table(r["trust_state"], malicious=r["malicious"])
+        quality = forensics.detection_quality(table)
+        cell = {
+            "cell": f"detect/{attack}/br_drag_trust",
+            "attack": attack, "aggregator": "br_drag_trust",
+            "malicious_fraction": 0.4,
+            "onset_flush": DETECTION_ONSET,
+            "first_alert_flush": lat["first_alert_round"],
+            "latency_flushes": lat["latency_flushes"],
+            "detected": lat["detected"],
+            "within_bound": (
+                lat["detected"] and lat["latency_flushes"] <= DETECTION_BOUND
+            ),
+            "alerts_total": lat["alerts_total"],
+            "false_alarms": lat["false_alarms"],
+            "precision": quality["precision"],
+            "recall": quality["recall"],
+            "f1": quality["f1"],
+        }
+        cells.append(cell)
+        emit(
+            f"robustness/detect/{attack}/br_drag_trust", 0.0,
+            f"latency={cell['latency_flushes']},precision={cell['precision']:.2f},"
+            f"recall={cell['recall']:.2f}",
+        )
+    for agg in DETECTION_BENIGN_AGGS:
+        sc = Scenario(aggregator=agg, attack="none", malicious_fraction=0.0)
+        r = run_stream_scenario(sc, flushes=DETECTION_FLUSHES, telemetry=tel)
+        summary = r["telemetry"]
+        n_alerts = summary.get("alerts_total", 0)
+        cells.append({
+            "cell": f"detect/none/{agg}",
+            "attack": "none", "aggregator": agg, "malicious_fraction": 0.0,
+            "alerts_total": n_alerts,
+            "zero_alerts": n_alerts == 0,
+        })
+        emit(f"robustness/detect/none/{agg}", 0.0, f"alerts={n_alerts}")
+    return cells
+
+
+def check_detection(cells: list[dict]) -> dict:
+    """Acceptance over the detection matrix: every ground-truth cell
+    alerts within ``DETECTION_BOUND`` flushes of onset; every attack-free
+    cell stays silent."""
+    attacked = [c for c in cells if c["attack"] != "none"]
+    benign = [c for c in cells if c["attack"] == "none"]
+    return {
+        "onset_within_bound": all(c["within_bound"] for c in attacked),
+        "attack_free_zero_alerts": all(c["zero_alerts"] for c in benign),
+        "bound_flushes": DETECTION_BOUND,
+    }
+
+
 def check_acceptance(cells: list[dict], *cell_groups: list[dict]) -> dict:
     """br_drag_trust < fedavg on final loss in every byzantine cell.
 
@@ -198,16 +322,31 @@ def run_matrix(smoke: bool, out: str) -> dict:
 
     t0 = time.time()
     # record where the matrix's wall clock goes: one span per regime
-    # group, aggregated into the BENCH record's telemetry provenance
+    # group on the OVERALL sink, plus one per-regime sink so each
+    # group's span breakdown lands separately in the provenance (the
+    # sharded group's MUST contain the hierarchical flush's own span —
+    # span parity with the single-buffer engine)
     sink = MemorySink()
+    regime_sinks = {name: MemorySink() for name in ("sync", "async", "sharded", "detection")}
     with obs_trace.tracer.attached(sink):
-        with obs_trace.span("sync_matrix"):
-            cells = sync_matrix(smoke)
-        with obs_trace.span("async_matrix"):
-            async_cells = async_matrix(smoke)
-        with obs_trace.span("sharded_matrix"):
-            sharded_cells = async_matrix(smoke, shards=SHARDED_PODS)
+        with obs_trace.tracer.attached(regime_sinks["sync"]):
+            with obs_trace.span("sync_matrix"):
+                cells = sync_matrix(smoke)
+        with obs_trace.tracer.attached(regime_sinks["async"]):
+            with obs_trace.span("async_matrix"):
+                async_cells = async_matrix(smoke)
+        with obs_trace.tracer.attached(regime_sinks["sharded"]):
+            with obs_trace.span("sharded_matrix"):
+                sharded_cells = async_matrix(smoke, shards=SHARDED_PODS)
+        with obs_trace.tracer.attached(regime_sinks["detection"]):
+            with obs_trace.span("detection_matrix"):
+                detection_cells = detection_matrix()
     acceptance = check_acceptance(cells, async_cells, sharded_cells)
+    acceptance["detection"] = check_detection(detection_cells)
+    regime_spans = {
+        name: obs_trace.aggregate_spans(s.events)
+        for name, s in regime_sinks.items()
+    }
     record = {
         "meta": {
             "smoke": smoke,
@@ -220,19 +359,36 @@ def run_matrix(smoke: bool, out: str) -> dict:
         "cells": cells,
         "async_cells": async_cells,
         "sharded_cells": sharded_cells,
+        "detection": detection_cells,
         "acceptance": acceptance,
         "telemetry": {
             "schema_version": obs_trace.SCHEMA_VERSION,
             "spans": obs_trace.aggregate_spans(sink.events),
+            "regimes": regime_spans,
         },
     }
     with open(out, "w") as f:
         json.dump(record, f, indent=2)
-    n = len(cells) + len(async_cells) + len(sharded_cells)
-    print(f"wrote {out}: {n} cells, acceptance={acceptance['br_drag_trust_beats_fedavg']}",
+    n = len(cells) + len(async_cells) + len(sharded_cells) + len(detection_cells)
+    print(f"wrote {out}: {n} cells, acceptance={acceptance['br_drag_trust_beats_fedavg']}, "
+          f"detection={acceptance['detection']}",
           flush=True)
     if not acceptance["br_drag_trust_beats_fedavg"]:
         raise SystemExit(f"acceptance violated: {acceptance['failures']}")
+    det = acceptance["detection"]
+    if not (det["onset_within_bound"] and det["attack_free_zero_alerts"]):
+        raise SystemExit(f"detection acceptance violated: {detection_cells}")
+    # sharded span parity: the hierarchical flush must carry its own span
+    from repro.stream import sharded as sharded_mod
+
+    sharded_spans = regime_spans["sharded"]
+    if sharded_mod.FLUSH_SPAN not in sharded_spans or not sharded_spans.get(
+        "flush", {}
+    ).get("count"):
+        raise SystemExit(
+            f"sharded span parity violated: want 'flush' + "
+            f"{sharded_mod.FLUSH_SPAN!r} in {sorted(sharded_spans)}"
+        )
     return record
 
 

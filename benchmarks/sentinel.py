@@ -1,0 +1,296 @@
+"""Perf regression sentinel: diff fresh BENCH_*.json against baselines.
+
+The benches (``stream_bench``, ``aggplane_bench``, ``robustness_bench``)
+emit structured BENCH_*.json records; the first committed baselines live
+under ``benchmarks/history/``.  The sentinel walks both records,
+extracts every comparable timing metric, and flags regressions with a
+noise-aware relative tolerance:
+
+  * keys ending ``_us``, ``us_per_*``, ``wall_s``, ``*_ms`` are
+    LOWER-is-better timings;
+  * keys ending ``_per_s`` are HIGHER-is-better rates;
+  * everything else (accuracies, counts, provenance) is ignored.
+
+A metric regresses when it worsens by more than ``tolerance`` relative
+(default 0.75 — CI boxes are noisy; a genuine 2x slowdown still trips)
+AND the baseline is above the absolute floor (sub-``min_us``
+micro-timings are dominated by clock noise).  The report is a JSON
+document (schema below, checked by ``benchmarks/validate.py
+--sentinel``) and the exit code gates CI: 0 = clean, 1 = regression.
+
+``--self-test`` proves the instrument: baseline-vs-itself must pass and
+baseline-vs-synthetically-2x-slower must fail, without touching any
+committed file.
+
+Usage::
+
+    python benchmarks/sentinel.py                       # cwd vs history/
+    python benchmarks/sentinel.py --fresh out/ --history benchmarks/history
+    python benchmarks/sentinel.py --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+#: report schema version (benchmarks/validate.py --sentinel pins it)
+REPORT_SCHEMA_VERSION = 1
+
+#: the bench records the sentinel knows how to diff
+BENCH_FILES = ("BENCH_stream.json", "BENCH_aggplane.json", "BENCH_robustness.json")
+
+#: key suffixes marking LOWER-is-better timings
+TIME_SUFFIXES = ("_us", "_ms", "wall_s", "_s_per_call")
+#: key substrings marking LOWER-is-better timings
+TIME_INFIXES = ("us_per_",)
+#: key suffixes marking HIGHER-is-better rates
+RATE_SUFFIXES = ("_per_s",)
+
+#: sections that never carry comparable timings (provenance, telemetry)
+SKIP_SECTIONS = ("telemetry", "spans", "provenance", "detection")
+
+
+def classify(key: str) -> "str | None":
+    """'time' (lower better) | 'rate' (higher better) | None (ignore)."""
+    if any(key.endswith(s) for s in RATE_SUFFIXES):
+        return "rate"
+    if any(key.endswith(s) for s in TIME_SUFFIXES):
+        return "time"
+    if any(s in key for s in TIME_INFIXES):
+        return "time"
+    return None
+
+
+def extract_metrics(record, prefix: str = "") -> "dict[str, tuple[str, float]]":
+    """Flatten a BENCH record to ``{dotted.path: (kind, value)}``."""
+    out: "dict[str, tuple[str, float]]" = {}
+    if isinstance(record, dict):
+        for k, v in record.items():
+            if k in SKIP_SECTIONS:
+                continue
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(extract_metrics(v, path))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                kind = classify(str(k))
+                if kind is not None:
+                    out[path] = (kind, float(v))
+    elif isinstance(record, list):
+        for i, v in enumerate(record):
+            out.update(extract_metrics(v, f"{prefix}[{i}]"))
+    return out
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    *,
+    tolerance: float = 0.75,
+    min_us: float = 50.0,
+) -> "dict":
+    """Diff one bench record pair; returns ``{checks, regressions, skipped}``."""
+    base_m = extract_metrics(baseline)
+    fresh_m = extract_metrics(fresh)
+    checks, regressions, skipped = [], [], []
+    for path, (kind, base_v) in sorted(base_m.items()):
+        if path not in fresh_m:
+            skipped.append({"metric": path, "reason": "absent in fresh run"})
+            continue
+        fresh_v = fresh_m[path][1]
+        if base_v <= 0 or fresh_v <= 0:
+            skipped.append({"metric": path, "reason": "non-positive value"})
+            continue
+        # sub-floor micro-timings are clock noise, not signal
+        if kind == "time" and "_us" in path.rsplit(".", 1)[-1] and base_v < min_us:
+            skipped.append({"metric": path, "reason": f"below {min_us}us floor"})
+            continue
+        ratio = fresh_v / base_v
+        worsened = ratio > 1.0 + tolerance if kind == "time" else (
+            ratio < 1.0 / (1.0 + tolerance)
+        )
+        check = {
+            "metric": path,
+            "kind": kind,
+            "baseline": base_v,
+            "fresh": fresh_v,
+            "ratio": ratio,
+            "ok": not worsened,
+        }
+        checks.append(check)
+        if worsened:
+            regressions.append(check)
+    return {"checks": checks, "regressions": regressions, "skipped": skipped}
+
+
+def run_sentinel(
+    history_dir: str,
+    fresh_dir: str,
+    *,
+    tolerance: float = 0.75,
+    min_us: float = 50.0,
+) -> "dict":
+    """Compare every known bench record present in BOTH dirs."""
+    benches: "dict[str, dict]" = {}
+    compared = 0
+    for name in BENCH_FILES:
+        base_path = os.path.join(history_dir, name)
+        fresh_path = os.path.join(fresh_dir, name)
+        if not os.path.exists(base_path):
+            benches[name] = {"status": "no baseline"}
+            continue
+        if not os.path.exists(fresh_path):
+            benches[name] = {"status": "no fresh run"}
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        diff = compare(baseline, fresh, tolerance=tolerance, min_us=min_us)
+        benches[name] = {
+            "status": "compared",
+            "checks": len(diff["checks"]),
+            "skipped": len(diff["skipped"]),
+            "regressions": diff["regressions"],
+        }
+        compared += 1
+    regressions_total = sum(
+        len(b.get("regressions", [])) for b in benches.values()
+    )
+    return {
+        "schema_version": REPORT_SCHEMA_VERSION,
+        "tolerance": tolerance,
+        "min_us": min_us,
+        "history_dir": history_dir,
+        "fresh_dir": fresh_dir,
+        "benches": benches,
+        "benches_compared": compared,
+        "regressions_total": regressions_total,
+        "ok": regressions_total == 0,
+    }
+
+
+def _inflate(record, factor: float):
+    """Synthetically worsen every timing metric (the self-test's fault)."""
+    if isinstance(record, dict):
+        out = {}
+        for k, v in record.items():
+            if k in SKIP_SECTIONS:
+                out[k] = copy.deepcopy(v)
+            elif isinstance(v, (dict, list)):
+                out[k] = _inflate(v, factor)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                kind = classify(str(k))
+                if kind == "time":
+                    out[k] = v * factor
+                elif kind == "rate":
+                    out[k] = v / factor
+                else:
+                    out[k] = v
+            else:
+                out[k] = v
+        return out
+    if isinstance(record, list):
+        return [_inflate(v, factor) for v in record]
+    return record
+
+
+def self_test(history_dir: str, factor: float = 2.0) -> "dict":
+    """Prove the instrument on the committed baselines.
+
+    (1) baseline vs itself must be clean; (2) baseline vs a synthetic
+    ``factor``x slowdown must regress on every bench that has timings.
+    Runs entirely in memory — nothing on disk is modified.
+    """
+    import tempfile
+
+    available = [
+        n for n in BENCH_FILES if os.path.exists(os.path.join(history_dir, n))
+    ]
+    if not available:
+        return {"ok": False, "reason": f"no baselines under {history_dir!r}"}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        for name in available:
+            with open(os.path.join(history_dir, name)) as f:
+                rec = json.load(f)
+            with open(os.path.join(tmp, name), "w") as f:
+                json.dump(_inflate(rec, factor), f)
+        clean = run_sentinel(history_dir, history_dir)
+        dirty = run_sentinel(history_dir, tmp)
+
+    identical_pass = clean["ok"] and clean["benches_compared"] == len(available)
+    # every compared bench with any timing checks must trip on the fault
+    dirty_benches = [
+        b for b in dirty["benches"].values()
+        if b.get("status") == "compared" and b.get("checks", 0) > 0
+    ]
+    inflated_fail = (
+        not dirty["ok"]
+        and len(dirty_benches) > 0
+        and all(len(b["regressions"]) > 0 for b in dirty_benches)
+    )
+    return {
+        "ok": identical_pass and inflated_fail,
+        "identical_pass": identical_pass,
+        "inflated_fail": inflated_fail,
+        "factor": factor,
+        "baselines": available,
+        "clean_checks": sum(
+            b.get("checks", 0) for b in clean["benches"].values()
+        ),
+        "dirty_regressions": dirty["regressions_total"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--history", default=os.path.join(os.path.dirname(__file__), "history"),
+        help="baseline dir (default: benchmarks/history)",
+    )
+    ap.add_argument("--fresh", default=".", help="dir with fresh BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.75)
+    ap.add_argument("--min-us", type=float, default=50.0)
+    ap.add_argument("--out", default="SENTINEL_report.json")
+    ap.add_argument(
+        "--self-test", action="store_true",
+        help="prove pass-on-identical / fail-on-2x against the baselines",
+    )
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        result = self_test(args.history)
+        print(json.dumps(result, indent=2))
+        print("sentinel self-test:", "OK" if result["ok"] else "FAILED")
+        return 0 if result["ok"] else 1
+
+    report = run_sentinel(
+        args.history, args.fresh, tolerance=args.tolerance, min_us=args.min_us
+    )
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for name, bench in report["benches"].items():
+        status = bench.get("status")
+        if status != "compared":
+            print(f"{name}: {status}")
+            continue
+        n_reg = len(bench["regressions"])
+        print(
+            f"{name}: {bench['checks']} checks, {bench['skipped']} skipped, "
+            f"{n_reg} regressions"
+        )
+        for reg in bench["regressions"]:
+            print(
+                f"  REGRESSION {reg['metric']}: {reg['baseline']:.3g} -> "
+                f"{reg['fresh']:.3g} ({reg['ratio']:.2f}x, {reg['kind']})"
+            )
+    print(f"report -> {args.out}")
+    print("sentinel:", "OK" if report["ok"] else "REGRESSIONS FOUND")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

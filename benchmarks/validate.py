@@ -13,9 +13,16 @@ robustness.
 ``--telemetry FILE.jsonl`` instead validates a telemetry event log
 (``repro.obs``) against the published ``EVENT_SCHEMA``: every line must
 be a JSON object of a known event type carrying exactly that type's
-fields, and span events must nest sanely (non-negative durations).
+fields, span events must nest sanely (non-negative durations), and
+``alert`` events must name a known monitor signal with a sane round.
 Exits non-zero on the first malformed line — this is what the CI
 ``telemetry-smoke`` job runs over the JSONL the smoke run produced.
+
+``--sentinel REPORT.json`` validates a ``benchmarks/sentinel.py``
+report against its published schema (version, tolerance, per-bench
+status, regression entries) — the CI ``sentinel`` job runs it over the
+report the gate produced, so a malformed gate fails loudly rather than
+silently passing.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ def validate_telemetry(path: str) -> int:
     Returns the number of events validated; raises SystemExit with a
     line-numbered message on the first violation.
     """
+    from repro.obs.monitor import MONITOR_SIGNALS
     from repro.obs.trace import EVENT_SCHEMA
 
     def die(lineno: int, msg: str):
@@ -60,6 +68,18 @@ def validate_telemetry(path: str) -> int:
             if etype == "span" and ev["dur_us"] < 0:
                 die(lineno, f"span {ev['name']!r} has negative duration "
                             f"{ev['dur_us']}")
+            if etype == "alert":
+                if ev.get("signal") not in MONITOR_SIGNALS:
+                    die(lineno, f"alert names unknown signal "
+                                f"{ev.get('signal')!r}; monitor signals are "
+                                f"{list(MONITOR_SIGNALS)}")
+                rnd = ev.get("round")
+                if not isinstance(rnd, int) or isinstance(rnd, bool) or rnd < 0:
+                    die(lineno, f"alert needs a non-negative integer round, "
+                                f"got {rnd!r}")
+                if ev["name"] != f"alert/{ev['signal']}":
+                    die(lineno, f"alert name {ev['name']!r} must be "
+                                f"'alert/{ev['signal']}'")
             counts[etype] += 1
             n += 1
     if n == 0:
@@ -71,6 +91,77 @@ def validate_telemetry(path: str) -> int:
     print(f"{path}: {n} events valid "
           f"({', '.join(f'{k}={v}' for k, v in sorted(counts.items()))})")
     return n
+
+def validate_sentinel(path: str) -> dict:
+    """Check a ``benchmarks/sentinel.py`` report against its schema.
+
+    Returns the parsed report; raises SystemExit on the first violation.
+    A gate whose own report is malformed must fail CI loudly — a silent
+    schema drift would let real regressions slip past unexamined.
+    """
+    from benchmarks.sentinel import BENCH_FILES, REPORT_SCHEMA_VERSION
+
+    def die(msg: str):
+        raise SystemExit(f"{path}: {msg}")
+
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        die(f"unreadable sentinel report: {e}")
+    if not isinstance(report, dict):
+        die(f"report must be a JSON object, got {type(report).__name__}")
+    if report.get("schema_version") != REPORT_SCHEMA_VERSION:
+        die(f"schema_version {report.get('schema_version')!r} != "
+            f"{REPORT_SCHEMA_VERSION}")
+    for key, typ in (
+        ("tolerance", float), ("min_us", float), ("benches", dict),
+        ("benches_compared", int), ("regressions_total", int), ("ok", bool),
+    ):
+        if not isinstance(report.get(key), typ):
+            die(f"report.{key} must be {typ.__name__}, "
+                f"got {report.get(key)!r}")
+    if report["tolerance"] <= 0:
+        die(f"tolerance must be positive, got {report['tolerance']}")
+    compared = 0
+    for name, bench in report["benches"].items():
+        if name not in BENCH_FILES:
+            die(f"unknown bench {name!r}; sentinel knows {list(BENCH_FILES)}")
+        status = bench.get("status")
+        if status in ("no baseline", "no fresh run"):
+            continue
+        if status != "compared":
+            die(f"{name}: unknown status {status!r}")
+        compared += 1
+        for key in ("checks", "skipped"):
+            if not isinstance(bench.get(key), int) or bench[key] < 0:
+                die(f"{name}: {key} must be a non-negative int")
+        regs = bench.get("regressions")
+        if not isinstance(regs, list):
+            die(f"{name}: regressions must be a list")
+        for reg in regs:
+            missing = [k for k in ("metric", "kind", "baseline", "fresh",
+                                   "ratio", "ok") if k not in reg]
+            if missing:
+                die(f"{name}: regression entry missing {missing}")
+            if reg["ok"]:
+                die(f"{name}: regression entry for {reg['metric']!r} "
+                    f"claims ok=true")
+    if compared != report["benches_compared"]:
+        die(f"benches_compared {report['benches_compared']} != "
+            f"{compared} compared entries")
+    n_regs = sum(len(b.get("regressions", []))
+                 for b in report["benches"].values())
+    if n_regs != report["regressions_total"]:
+        die(f"regressions_total {report['regressions_total']} != "
+            f"{n_regs} listed regressions")
+    if report["ok"] != (n_regs == 0):
+        die(f"ok={report['ok']} inconsistent with {n_regs} regressions")
+    print(f"{path}: sentinel report valid "
+          f"({compared} benches compared, {n_regs} regressions, "
+          f"ok={report['ok']})")
+    return report
+
 
 DRAG_BASELINES = ["fedavg", "fedprox", "scaffold", "fedexp", "fedacg"]
 BYZ_BASELINES = ["fedavg", "fltrust", "rfa", "raga"]
@@ -108,6 +199,12 @@ def main():
         if i + 1 >= len(sys.argv):
             raise SystemExit("--telemetry needs a JSONL path")
         validate_telemetry(sys.argv[i + 1])
+        return
+    if "--sentinel" in sys.argv:
+        i = sys.argv.index("--sentinel")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--sentinel needs a report path")
+        validate_sentinel(sys.argv[i + 1])
         return
     path = sys.argv[1] if len(sys.argv) > 1 else "bench_output.txt"
     final, early = load(path)

@@ -1,19 +1,24 @@
 """Telemetry tour: watch a BR-DRAG defense run from the inside.
 
-One async BR-DRAG run under the ALIE attack (40% colluding clients),
-with the observability plane (``repro.obs``) recording everything it is
-allowed to see:
+One async BR-DRAG run under a SCHEDULED ALIE onset (benign until flush
+``ONSET``, then 40% colluding clients), with the observability plane
+(``repro.obs``) recording everything it is allowed to see:
 
   * the jit-safe ``MetricsBundle`` ring — per-flush DoD / divergence
     histograms, blend coefficients, trust-reputation distribution and
     quarantine count, staleness discounts, buffer drops — assembled
     INSIDE the jitted flush from signals the two-pass kernels already
     computed (zero extra HBM passes, numerics untouched);
+  * the diagnosis layer (``MonitorSpec``): O(1) CUSUM + Page–Hinkley
+    change-point detectors riding the jitted flush, raising typed
+    ``alert`` events when the divergence regime shifts at attack onset;
   * host-side trace spans around the engine's boundaries
     (ingest / flush / root_reference / client_update / eval);
   * a JSONL event log and a Chrome/Perfetto trace — open
     ``telemetry_tour_trace.json`` at https://ui.perfetto.dev to see the
-    wall-clock anatomy of the event loop.
+    wall-clock anatomy of the event loop (alerts appear as instants);
+  * forensics + a markdown run report (``telemetry_tour_report.md``)
+    joining the span breakdown with the alert and flush timelines.
 
 Everything is declared on the spec: ``TelemetrySpec(enabled=True, ...)``
 is the only difference from an unrecorded run, and flipping it off
@@ -21,8 +26,6 @@ provably changes nothing but the observation.
 
     PYTHONPATH=src python examples/telemetry_tour.py
 """
-import dataclasses
-
 from repro.api import (
     AggregationSpec,
     AsyncRegime,
@@ -30,13 +33,20 @@ from repro.api import (
     DataSpec,
     ExperimentSpec,
     ModelSpec,
+    MonitorSpec,
     TelemetrySpec,
     TrustSpec,
     compile,
 )
+from repro.obs import alert_latency, incident_timeline, write_report
 
 JSONL = "telemetry_tour_events.jsonl"
 PERFETTO = "telemetry_tour_trace.json"
+REPORT = "telemetry_tour_report.md"
+
+#: first flush the ALIE collusion is active (earlier flushes are benign,
+#: so the monitor's EWMA baselines settle on honest traffic first)
+ONSET = 14
 
 
 def specs() -> list[tuple[str, ExperimentSpec]]:
@@ -48,24 +58,32 @@ def specs() -> list[tuple[str, ExperimentSpec]]:
         ),
         model=ModelSpec("mlp"),
         aggregation=AggregationSpec("br_drag"),
-        attack=AttackSpec("alie"),
+        attack=AttackSpec("schedule", {"phases": ((ONSET, "alie"),)}),
         trust=TrustSpec(enabled=True),
         regime=AsyncRegime(
-            flushes=12, concurrency=12, buffer_capacity=8,
+            flushes=32, concurrency=12, buffer_capacity=8,
             latency="straggler", local_steps=3, batch_size=8,
             discount="poly", eval_every=4,
         ),
         telemetry=TelemetrySpec(
-            enabled=True, ring_capacity=32, jsonl=JSONL, perfetto=PERFETTO
+            enabled=True, ring_capacity=32, jsonl=JSONL, perfetto=PERFETTO,
+            # the defaults are tuned on the adversary lab's clean synthetic
+            # cells; this short real-data run is noisier and ALIE is built
+            # to hide inside the benign variance, so the tour tightens the
+            # thresholds (more sensitivity, still alarm-free before onset)
+            monitor=MonitorSpec(
+                enabled=True, cusum_h=4.0, cusum_k=0.4, ph_lambda=8.0
+            ),
         ),
         seed=0,
     )
-    return [("br_drag_alie_recorded", spec)]
+    return [("br_drag_alie_onset_recorded", spec)]
 
 
 def main() -> None:
     (_, spec), = specs()
-    print("== BR-DRAG vs ALIE (40% malicious), telemetry recording ==")
+    print(f"== BR-DRAG vs scheduled ALIE (benign until flush {ONSET}, "
+          "then 40% malicious), telemetry + monitor recording ==")
     h = compile(spec).run(
         progress=lambda m: print(
             f"  flush {m['flush']:3d}  acc={m['accuracy']:.3f}  "
@@ -94,8 +112,39 @@ def main() -> None:
     print(f"\nbuffer drops by client-hash bucket: {tel['drops_by_bucket']}"
           f"  (total {tel['drops_total']})")
 
-    print(f"\nevent log: {tel['jsonl']}")
-    print(f"trace:     {tel['perfetto']}  <- open at https://ui.perfetto.dev")
+    # -- did the diagnosis layer catch the onset?
+    alerts = tel.get("alerts", [])
+    lat = alert_latency(alerts, ONSET)
+    print(f"\nmonitor: {tel['monitor']['alarms_total']} alarms over "
+          f"{tel['monitor']['flushes']} flushes "
+          f"(by signal: {tel['monitor']['alarms_by_signal']})")
+    for a in alerts:
+        print(f"  alert round {a['round']:3d}  {a['signal']:16s} "
+              f"value={a['value']:.3f}  score={a['score']:.1f} sigma")
+    if lat["detected"]:
+        print(f"  -> onset at flush {ONSET} detected with latency "
+              f"{lat['latency_flushes']} flushes "
+              f"({lat['false_alarms']} pre-onset alarms)")
+    else:
+        print(f"  -> onset at flush {ONSET} NOT detected "
+              "(try a longer run or lower thresholds)")
+
+    # -- flush-by-flush incident timeline around the onset
+    print("\nincident timeline (flushes adjacent to the onset):")
+    for row in incident_timeline(tel):
+        if not row.get("evicted") and abs(row["round"] - ONSET) <= 2:
+            mark = " <- ALERT" if row["alerts"] else ""
+            print(f"  round {row['round']:3d}  div={row['div_mean']:.3f}  "
+                  f"quarantined={row['quarantined']}{mark}")
+
+    # -- the whole story as one markdown artifact
+    write_report(
+        REPORT, tel, title="Telemetry tour: BR-DRAG vs scheduled ALIE",
+        history=h,
+    )
+    print(f"\nrun report: {REPORT}")
+    print(f"event log:  {tel['jsonl']}")
+    print(f"trace:      {tel['perfetto']}  <- open at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -295,12 +295,17 @@ def stream_spec(
     discount_a: float = 0.5,
     latency: str = "exponential",
     shards: int = 0,
+    telemetry=None,
 ):
     """Declarative form of an ASYNC matrix cell: the ExperimentSpec
-    ``run_stream_scenario`` lowers its StreamConfig from."""
+    ``run_stream_scenario`` lowers its StreamConfig from.
+
+    ``telemetry`` is an optional ``api.TelemetrySpec`` (e.g. with a
+    ``MonitorSpec`` enabled — the detection-quality cells the robustness
+    bench scores against this lab's ground-truth malicious mask)."""
     import dataclasses as dc
 
-    from repro.api import AsyncRegime, ExperimentSpec, ShardedRegime
+    from repro.api import AsyncRegime, ExperimentSpec, ShardedRegime, TelemetrySpec
 
     data, model, agg, attack, trust = _spec_parts(sc)
     # scenario-lab trim policy: rounded over the buffer (small-K cells)
@@ -329,6 +334,7 @@ def stream_spec(
         attack=attack,
         trust=trust,
         regime=regime,
+        telemetry=telemetry if telemetry is not None else TelemetrySpec(),
         seed=sc.seed,
     )
 
@@ -343,6 +349,7 @@ def run_stream_scenario(
     discount_a: float = 0.5,
     latency: str = "exponential",
     shards: int = 0,
+    telemetry=None,
 ) -> dict:
     """The same objective served through the REAL async engine
     (``repro.stream``): event stream + biased arrivals + ingest buffer +
@@ -356,6 +363,7 @@ def run_stream_scenario(
     """
     from repro.adversary.stream_attacks import BiasedLatency
     from repro.api import lowering
+    from repro.obs import session as obs_session
     from repro.stream.events import EventStream, make_latency
     from repro.stream.server import AsyncStreamServer
 
@@ -375,10 +383,13 @@ def run_stream_scenario(
     spec = stream_spec(
         sc, flushes=flushes, buffer_capacity=buffer_capacity,
         concurrency=concurrency, discount=discount, discount_a=discount_a,
-        latency=latency, shards=shards,
+        latency=latency, shards=shards, telemetry=telemetry,
     )
     cfg = lowering.stream_config(spec)
-    server = AsyncStreamServer(loss_fn, {"w": w0}, cfg, n_clients=sc.n_clients)
+    session = obs_session.session_from_spec(spec.telemetry)
+    server = AsyncStreamServer(
+        loss_fn, {"w": w0}, cfg, n_clients=sc.n_clients, session=session
+    )
     lookup = lambda m: bool(malicious[m])  # noqa: E731
     lat = make_latency(latency)
     if sc.attack != "none":
@@ -398,27 +409,34 @@ def run_stream_scenario(
         return {"x": jnp.asarray(x)}
 
     inflight = {}
-    for _ in range(concurrency):
-        ev = stream.dispatch(server.t)
-        inflight[ev.seq] = server.params
     key = jax.random.PRNGKey(sc.seed + 77)
     losses = []
-    while server.t < flushes:
-        ev = stream.next_completion()
-        snapshot = inflight.pop(ev.seq)
-        g = server.client_update(snapshot, client_batches(ev.client_id))
-        server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
-        ev2 = stream.dispatch(server.t)
-        inflight[ev2.seq] = server.params
-        if server.buffer_ready():
-            key, k = jax.random.split(key)
-            root = root_batches() if server.with_root else None
-            m = server.flush_if_ready(k, root)
-            if m is not None:
-                w = np.asarray(server.params["w"])
-                losses.append(float(0.5 * np.sum((w - benign_mean) ** 2)))
-    return {
+    with session:
+        for _ in range(concurrency):
+            ev = stream.dispatch(server.t)
+            inflight[ev.seq] = server.params
+        while server.t < flushes:
+            ev = stream.next_completion()
+            snapshot = inflight.pop(ev.seq)
+            g = server.client_update(snapshot, client_batches(ev.client_id))
+            server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
+            ev2 = stream.dispatch(server.t)
+            inflight[ev2.seq] = server.params
+            if server.buffer_ready():
+                key, k = jax.random.split(key)
+                root = root_batches() if server.with_root else None
+                m = server.flush_if_ready(k, root)
+                if m is not None:
+                    w = np.asarray(server.params["w"])
+                    losses.append(float(0.5 * np.sum((w - benign_mean) ** 2)))
+    out = {
         "losses": np.asarray(losses),
         "final_loss": losses[-1] if losses else np.inf,
         "byzantine_flush_fraction": None,  # populated by callers that track it
+        # ground truth for the forensics layer (detection precision/recall)
+        "malicious": malicious,
+        "trust_state": server.state.trust,
     }
+    if session.enabled:
+        out["telemetry"] = session.summary()
+    return out

@@ -42,6 +42,7 @@ from repro.api.spec import (  # noqa: F401
     DataSpec,
     ExperimentSpec,
     ModelSpec,
+    MonitorSpec,
     ShardedRegime,
     SyncRegime,
     TelemetrySpec,

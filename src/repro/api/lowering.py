@@ -64,6 +64,26 @@ def byzantine_hint(spec: ExperimentSpec) -> int:
     return max(int(mf * group), 1) if mf > 0 else 0
 
 
+def monitor_config(spec: ExperimentSpec):
+    """Diagnosis-layer lowering: MonitorSpec -> ``obs.monitor.MonitorConfig``
+    (or None — the default — which keeps the flush jaxpr monitor-free)."""
+    tel = spec.telemetry
+    mon = tel.monitor
+    if not (tel.enabled and tel.metrics and mon.enabled):
+        return None
+    from repro.obs.monitor import MonitorConfig
+
+    return MonitorConfig(
+        ewma_alpha=mon.ewma_alpha,
+        cusum_k=mon.cusum_k,
+        cusum_h=mon.cusum_h,
+        ph_delta=mon.ph_delta,
+        ph_lambda=mon.ph_lambda,
+        warmup=mon.warmup,
+        min_sigma=mon.min_sigma,
+    )
+
+
 # -------------------------------------------------------------- engine configs
 def round_config(spec: ExperimentSpec) -> RoundConfig:
     """Sync lowering: the jitted federated round's static config."""
@@ -85,6 +105,7 @@ def round_config(spec: ExperimentSpec) -> RoundConfig:
         trust=spec.trust.enabled,
         trust_kw=kw_tuple(spec.trust.kwargs),
         telemetry=spec.telemetry.enabled and spec.telemetry.metrics,
+        monitor=monitor_config(spec),
     )
 
 
@@ -110,6 +131,7 @@ def stream_config(spec: ExperimentSpec) -> StreamConfig:
         root_refresh_every=regime.root_refresh_every,
         shards=getattr(regime, "shards", 0),
         telemetry=spec.telemetry.enabled and spec.telemetry.metrics,
+        monitor=monitor_config(spec),
     )
 
 

@@ -168,6 +168,29 @@ class TrustSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class MonitorSpec:
+    """Online change-point detection over flush telemetry — OFF by default.
+
+    Lowers to ``repro.obs.monitor.MonitorConfig``: EWMA-standardised
+    CUSUM + Page-Hinkley detectors over the per-flush
+    :class:`~repro.obs.metrics.MetricsBundle` signals (divergence mean,
+    histogram shift, DoD, quarantine count, drop pressure, buffer fill,
+    phi(tau) staleness).  Requires ``TelemetrySpec(enabled=True,
+    metrics=True)`` — the detectors read the bundle the flush already
+    assembles, nothing else.
+    """
+
+    enabled: bool = False
+    ewma_alpha: float = 0.15  # baseline adaptation rate
+    cusum_k: float = 0.6  # CUSUM slack (sigmas)
+    cusum_h: float = 6.0  # CUSUM alarm threshold (sigmas)
+    ph_delta: float = 0.25  # Page-Hinkley drift allowance (sigmas)
+    ph_lambda: float = 12.0  # Page-Hinkley alarm threshold (sigmas)
+    warmup: int = 10  # flushes before alarms may fire
+    min_sigma: float = 0.05  # variance floor for standardisation
+
+
+@dataclasses.dataclass(frozen=True)
 class TelemetrySpec:
     """The telemetry plane (``repro.obs``) — OFF by default.
 
@@ -186,6 +209,12 @@ class TelemetrySpec:
     ring_capacity: int = 64  # bundles retained (oldest overwritten)
     jsonl: str = ""  # JSONL event-log path ("" = off)
     perfetto: str = ""  # Chrome/Perfetto trace path ("" = off)
+    monitor: MonitorSpec = field(default_factory=MonitorSpec)
+
+    def __post_init__(self):
+        # from_dict round trip: the nested monitor arrives as a plain dict
+        if isinstance(self.monitor, Mapping):
+            object.__setattr__(self, "monitor", MonitorSpec(**self.monitor))
 
 
 # ------------------------------------------------------- RegimeSpec tagged union

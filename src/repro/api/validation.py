@@ -231,4 +231,21 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
             "telemetry output paths are set but enabled=False; set "
             "TelemetrySpec(enabled=True) or drop the paths"
         )
+
+    # ---- diagnosis layer (repro.obs.monitor)
+    mon = tel.monitor
+    if mon.enabled:
+        if not (tel.enabled and tel.metrics):
+            _err(
+                "monitor.enabled requires TelemetrySpec(enabled=True, "
+                "metrics=True): the detectors read the flush MetricsBundle"
+            )
+        if not (0.0 < mon.ewma_alpha <= 1.0):
+            _err(f"monitor ewma_alpha must be in (0, 1], got {mon.ewma_alpha}")
+        for name in ("cusum_k", "cusum_h", "ph_delta", "ph_lambda", "min_sigma"):
+            v = getattr(mon, name)
+            if v < 0:
+                _err(f"monitor {name} must be >= 0, got {v}")
+        if mon.warmup < 1:
+            _err(f"monitor warmup must be >= 1 flush, got {mon.warmup}")
     return spec

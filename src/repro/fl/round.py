@@ -49,6 +49,8 @@ class RoundConfig:
     telemetry: bool = False  # metrics["obs"] = MetricsBundle per round
     #   (repro.obs) — STATIC: off leaves the round jaxpr untouched; on
     #   adds one extra pytree output from already-computed signals
+    monitor: object = None  # obs.monitor.MonitorConfig | None — online
+    #   change-point detectors over the bundle (requires telemetry=True)
 
 
 class ServerState(NamedTuple):
@@ -60,6 +62,7 @@ class ServerState(NamedTuple):
     control_workers: pt.Pytree  # scaffold h_m stacked [M, ...]
     adversary: pt.Pytree = ()  # attack memory (repro.adversary)
     trust: pt.Pytree = ()  # TrustState | () (repro.trust)
+    monitor: pt.Pytree = ()  # obs.monitor.MonitorState | () (diagnosis)
 
 
 def init_server_state(
@@ -74,10 +77,15 @@ def init_server_state(
     # pre-engine behaviour), enforced in ``federated_round``.
     adv_state: pt.Pytree = ()
     trust_state: pt.Pytree = ()
+    monitor_state: pt.Pytree = ()
     if cfg is not None:
         adv_state = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw)).init()
         if cfg.trust:
             trust_state = trust_mod.init_trust(n_workers)
+        if cfg.telemetry and cfg.monitor is not None:
+            from repro.obs import monitor as obs_monitor
+
+            monitor_state = obs_monitor.monitor_init()
     return ServerState(
         params=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
         round=jnp.zeros((), jnp.int32),
@@ -89,6 +97,7 @@ def init_server_state(
         ),
         adversary=adv_state,
         trust=trust_state,
+        monitor=monitor_state,
     )
 
 
@@ -289,6 +298,16 @@ def federated_round(
             c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
             mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
         )
+    new_monitor = state.monitor
+    if cfg.telemetry and cfg.monitor is not None:
+        from repro.obs import monitor as obs_monitor
+
+        mstate = state.monitor if state.monitor != () else obs_monitor.monitor_init()
+        new_monitor, verdict = obs_monitor.monitor_step(
+            mstate, metrics["obs"], cfg.monitor
+        )
+        # the verdict is telemetry: the host loop pops it for the session
+        metrics["obs_alerts"] = verdict
     new_state = ServerState(
         params=params,
         round=state.round + 1,
@@ -298,6 +317,7 @@ def federated_round(
         control_workers=new_hm,
         adversary=new_adv,
         trust=new_trust,
+        monitor=new_monitor,
     )
     return new_state, metrics
 

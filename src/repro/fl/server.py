@@ -139,6 +139,7 @@ def run_experiment(
                 args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])})
             with obs_trace.span("round", t=t):
                 state, metrics = round_fn(*args)
+            session.record_alerts(metrics.pop("obs_alerts", None), state.monitor)
             session.record_flush(metrics.pop("obs", None))
 
             if (t + 1) % regime.eval_every == 0 or t == regime.rounds - 1:

@@ -21,6 +21,16 @@ Two halves, with a hard boundary between them:
     log (:class:`~repro.obs.sinks.JsonlSink`), and Chrome/Perfetto
     ``trace_event`` export (:func:`~repro.obs.sinks.perfetto_trace`).
 
+On top of the recording halves sits the **diagnosis layer** (PR 7):
+``monitor`` runs jittable online change-point detectors (EWMA residual
++ CUSUM / Page-Hinkley) over each flush's bundle with O(1) pytree state
+threaded through the jitted flush like ``TrustState``; ``forensics``
+reconstructs per-client incident tables host-side and scores detection
+precision/recall/latency against adversary-lab ground truth; ``report``
+renders the joined span-breakdown + alert timeline as markdown.
+Boundary rule: the monitor reads ONLY the already-reduced bundle
+(zero extra HBM passes) and alert decoding stays host-side.
+
 ``probes`` is the shared call-site counter implementation behind
 ``repro.kernels.instrument`` (the two-pass and one-psum invariant
 probes), so invariant tests and telemetry count the same quantities.
@@ -36,10 +46,28 @@ from repro.obs.metrics import (  # noqa: F401
     MetricsRing,
     bundle_to_dict,
     flush_bundle,
+    make_ring_push,
     ring_init,
     ring_push,
     ring_read,
 )
+from repro.obs.monitor import (  # noqa: F401
+    MONITOR_SIGNALS,
+    MonitorConfig,
+    MonitorState,
+    MonitorVerdict,
+    alerts_from_verdict,
+    monitor_init,
+    monitor_step,
+    monitor_to_dict,
+)
+from repro.obs.forensics import (  # noqa: F401
+    alert_latency,
+    client_table,
+    detection_quality,
+    incident_timeline,
+)
+from repro.obs.report import run_report, write_report  # noqa: F401
 from repro.obs.probes import counted_calls  # noqa: F401
 from repro.obs.sinks import (  # noqa: F401
     JsonlSink,

@@ -1,0 +1,172 @@
+"""Per-client incident forensics: host-side reconstruction + scoring.
+
+Everything here runs AFTER the jitted loop, on data the run already
+produced: the drained :class:`~repro.obs.metrics.MetricsRing`, the trust
+plane's per-client EMAs (``repro.trust.reputation.TrustState``), the
+session's drop buckets, and the decoded alert timeline.  No device work,
+no extra signals — this is the analysis half of the obs boundary.
+
+Three questions it answers:
+
+  * **who** — :func:`client_table` rebuilds a per-client incident row
+    (divergence EMA, reputation, quarantine flag, drop bucket) and, when
+    the adversary lab supplies its ground-truth malicious mask, labels
+    each row true/false positive.
+  * **how well** — :func:`detection_quality` turns those labels into
+    precision / recall / F1; :func:`alert_latency` measures
+    detection-latency-in-flushes from a known attack onset to the first
+    monitor alert.  ``robustness_bench`` reports both per cell.
+  * **when** — :func:`incident_timeline` joins the ring's flush bundles
+    with the alert stream by round, giving the flush-by-flush story a
+    run report renders.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+
+def client_table(
+    trust_state,
+    *,
+    trust_cfg=None,
+    malicious=None,
+    drops_by_bucket: "dict | None" = None,
+    flag_threshold: float = 0.5,
+) -> "list[dict]":
+    """Per-client incident rows from the trust plane's EMAs.
+
+    A client is *flagged* when it is quarantined or its reputation fell
+    below ``flag_threshold``.  With ``malicious`` (the adversary lab's
+    ground-truth bool mask) each row also carries its truth label, which
+    :func:`detection_quality` scores.
+    """
+    from repro.obs.session import host_drop_bucket
+    from repro.trust import reputation as trust_mod
+
+    cfg = trust_cfg if trust_cfg is not None else trust_mod.TrustConfig()
+    m = trust_mod.table_size(trust_state)
+    rep = np.asarray(
+        trust_mod.reputation(trust_state, np.arange(m), cfg), dtype=np.float64
+    )
+    div = np.asarray(trust_state.div_ema, dtype=np.float64)
+    norm = np.asarray(trust_state.norm_ema, dtype=np.float64)
+    seen = np.asarray(trust_state.seen)
+    quarantined = np.asarray(trust_state.quarantined)
+    truth = None if malicious is None else np.asarray(malicious, dtype=bool)
+    drops = drops_by_bucket or {}
+
+    rows = []
+    for i in range(m):
+        bucket = host_drop_bucket(i)
+        row = {
+            "client": i,
+            "reputation": float(rep[i]),
+            "div_ema": float(div[i]),
+            "norm_ema": float(norm[i]),
+            "seen": int(seen[i]),
+            "quarantined": bool(quarantined[i]),
+            "drop_bucket": bucket,
+            "drops_in_bucket": int(drops.get(str(bucket), drops.get(bucket, 0))),
+            "flagged": bool(quarantined[i]) or float(rep[i]) < flag_threshold,
+        }
+        if truth is not None:
+            row["malicious"] = bool(truth[i])
+        rows.append(row)
+    return rows
+
+
+def detection_quality(table: "Sequence[dict]") -> "dict[str, Any]":
+    """Precision / recall / F1 of ``flagged`` against ``malicious``.
+
+    Rows without a truth label (no ground truth supplied) are skipped;
+    an all-benign cell reports precision 1.0 iff nothing was flagged.
+    """
+    tp = fp = fn = tn = 0
+    for row in table:
+        if "malicious" not in row:
+            continue
+        flagged, truth = row["flagged"], row["malicious"]
+        if flagged and truth:
+            tp += 1
+        elif flagged and not truth:
+            fp += 1
+        elif not flagged and truth:
+            fn += 1
+        else:
+            tn += 1
+    precision = tp / (tp + fp) if (tp + fp) else 1.0
+    recall = tp / (tp + fn) if (tp + fn) else 1.0
+    f1 = (
+        2.0 * precision * recall / (precision + recall)
+        if (precision + recall)
+        else 0.0
+    )
+    return {
+        "tp": tp,
+        "fp": fp,
+        "fn": fn,
+        "tn": tn,
+        "precision": precision,
+        "recall": recall,
+        "f1": f1,
+    }
+
+
+def alert_latency(
+    alerts: "Sequence[dict]", onset_round: int
+) -> "dict[str, Any]":
+    """Detection latency in flushes from a known attack onset.
+
+    ``alerts`` is the session's decoded alert list (``summary()["alerts"]``);
+    ``onset_round`` the first round the adversary was active (the
+    ``schedule`` combinator makes earlier rounds benign, so the lab knows
+    it exactly).  ``latency_flushes`` is ``first_alert_round - onset_round``
+    counting only alerts at/after onset; ``None`` when never detected.
+    ``false_alarms`` counts alerts strictly before onset.
+    """
+    onset = int(onset_round)
+    post = [a for a in alerts if a["round"] >= onset]
+    pre = [a for a in alerts if a["round"] < onset]
+    first = min((a["round"] for a in post), default=None)
+    return {
+        "onset_round": onset,
+        "first_alert_round": first,
+        "latency_flushes": None if first is None else int(first) - onset,
+        "detected": first is not None,
+        "alerts_total": len(alerts),
+        "false_alarms": len(pre),
+    }
+
+
+def incident_timeline(summary: "dict[str, Any]") -> "list[dict]":
+    """Join the ring's flush bundles with the alert stream, by round.
+
+    One row per retained flush: the bundle's headline signals plus any
+    alerts whose round matches.  Alerts outside the ring's retention
+    window get a trailing row with ``"evicted": True`` so the timeline
+    never silently drops an incident.
+    """
+    alerts_by_round: dict[int, list[dict]] = {}
+    for a in summary.get("alerts", []):
+        alerts_by_round.setdefault(int(a["round"]), []).append(a)
+
+    rows = []
+    seen_rounds = set()
+    for bundle in summary.get("ring", []):
+        rnd = int(bundle["round"])
+        seen_rounds.add(rnd)
+        rows.append({
+            "round": rnd,
+            "fill": bundle.get("fill"),
+            "div_mean": bundle.get("div_mean"),
+            "dod_mean": bundle.get("dod_mean"),
+            "discount_mean": bundle.get("discount_mean"),
+            "quarantined": bundle.get("quarantined"),
+            "drops_total": sum(bundle.get("drops", [])),
+            "alerts": alerts_by_round.get(rnd, []),
+        })
+    for rnd in sorted(set(alerts_by_round) - seen_rounds):
+        rows.append({"round": rnd, "evicted": True, "alerts": alerts_by_round[rnd]})
+    return rows

@@ -1,0 +1,273 @@
+"""Online change-point detection over flush telemetry — the diagnosis layer.
+
+The flush already assembles a :class:`~repro.obs.metrics.MetricsBundle`
+from signals it computes anyway (phase-1 dot/norm scalars, phi(tau)
+discounts, trust reputations, drop counters).  This module watches that
+bundle for *regime shifts* — attack onset, quarantine surges, buffer
+pressure, staleness drift — with O(1) state threaded through the jitted
+flush exactly like ``TrustState``:
+
+  * :class:`MonitorState` is a small fixed-shape pytree (a few
+    ``[N_SIGNALS]`` float vectors plus one ``[HIST_BINS]`` histogram
+    reference).  It never grows with rounds, clients, or model size.
+  * :func:`monitor_step` is pure ``jnp``: it reduces the bundle to
+    :data:`MONITOR_SIGNALS` scalars, standardises each against an EWMA
+    mean/variance, and runs two classic sequential detectors per signal
+    — a two-sided CUSUM and a two-sided Page–Hinkley test — returning
+    the next state plus a :class:`MonitorVerdict` of alarm flags.
+  * Alarms are suppressed for the first ``warmup`` flushes while the
+    EWMA baselines settle, and each detector resets after firing so a
+    persistent shift re-alarms at a bounded rate instead of every flush.
+
+Boundary rules (mirrors the metrics/trace split):
+
+  * device side: ``monitor_step`` only — no host callbacks, no python
+    control flow on traced values, zero extra HBM passes over the
+    ``[K, d]`` stack (it touches only the already-reduced bundle).
+  * host side: :func:`alerts_from_verdict` decodes a verdict into
+    JSON-safe alert dicts which ``TelemetrySession.record_alerts``
+    feeds through the ``alert`` event type of ``EVENT_SCHEMA``.
+
+With ``monitor=None`` (the default) nothing is traced: the flush jaxpr
+and numerics are bit-for-bit identical to a monitor-free build.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.metrics import HIST_BINS, MetricsBundle
+
+#: Scalar signals distilled from each flush's MetricsBundle, in order.
+MONITOR_SIGNALS = (
+    "div_mean",        # mean 1 - cos(g_m, r^t): jumps at attack onset
+    "div_hist_shift",  # total-variation shift of the divergence histogram
+    "dod_mean",        # discounted-divergence (DoD) mean
+    "quarantine",      # sticky-quarantined client count (trust plane)
+    "drop_pressure",   # buffer drops since the previous flush
+    "fill_frac",       # buffer occupancy at flush time
+    "staleness",       # mean phi(tau) discount: staleness regime shifts
+)
+
+N_SIGNALS = len(MONITOR_SIGNALS)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorConfig:
+    """Static detector knobs (hashable: rides on a jitted config).
+
+    Defaults are tuned EMPIRICALLY against the adversary lab's
+    ground-truth cells (see ``benchmarks/robustness_bench.py``'s
+    detection matrix): ALIE / IPM onset at 40% malicious alarms within a
+    few flushes, while attack-free drag/fedavg smoke cells stay silent.
+    The training transient is handled twice over — alarms AND detector
+    accumulation are suppressed during ``warmup``, and ``ph_delta``
+    tolerates the slow benign drift of the divergence signals as a run
+    converges.
+    """
+
+    ewma_alpha: float = 0.15    # baseline adaptation rate
+    cusum_k: float = 0.6        # CUSUM slack, in sigmas
+    cusum_h: float = 6.0        # CUSUM decision threshold, in sigmas
+    ph_delta: float = 0.25      # Page-Hinkley drift allowance, in sigmas
+    ph_lambda: float = 12.0     # Page-Hinkley threshold, in sigmas
+    warmup: int = 10            # flushes before alarms may fire
+    min_sigma: float = 0.05     # variance floor for standardisation
+
+
+class MonitorState(NamedTuple):
+    """O(1) detector state threaded through the jitted flush."""
+
+    mean: jax.Array       # [N_SIGNALS] f32 — EWMA of each signal
+    var: jax.Array        # [N_SIGNALS] f32 — EWMA of squared residual
+    cusum_pos: jax.Array  # [N_SIGNALS] f32 — upward CUSUM statistic
+    cusum_neg: jax.Array  # [N_SIGNALS] f32 — downward CUSUM statistic
+    ph_up: jax.Array      # [N_SIGNALS] f32 — PH increase-test sum
+    ph_dn: jax.Array      # [N_SIGNALS] f32 — PH decrease-test sum
+    ph_min: jax.Array     # [N_SIGNALS] f32 — running min of ph_up
+    ph_max: jax.Array     # [N_SIGNALS] f32 — running max of ph_dn
+    hist_ref: jax.Array   # [HIST_BINS] f32 — EWMA of normalised div hist
+    last_drops: jax.Array  # [] f32 — cumulative drop total at last flush
+    count: jax.Array      # [] i32 — flushes observed
+    alarm_count: jax.Array  # [N_SIGNALS] i32 — alarms fired per signal
+    last_alarm: jax.Array   # [N_SIGNALS] i32 — round of latest alarm (-1)
+
+
+class MonitorVerdict(NamedTuple):
+    """Per-flush alarm flags + evidence, decoded host-side into alerts."""
+
+    flags: jax.Array   # [N_SIGNALS] bool — alarm fired this flush
+    values: jax.Array  # [N_SIGNALS] f32 — raw signal values
+    scores: jax.Array  # [N_SIGNALS] f32 — detector excursion, in sigmas
+    round: jax.Array   # [] i32 — server round of the flush
+
+
+def monitor_init() -> MonitorState:
+    # distinct arrays per field: sharing one zeros buffer across fields
+    # would alias them inside a DONATED engine state (the sync round
+    # donates its ServerState) and trip "donate the same buffer twice"
+    def zf():
+        return jnp.zeros((N_SIGNALS,), jnp.float32)
+
+    return MonitorState(
+        mean=zf(),
+        var=zf(),
+        cusum_pos=zf(),
+        cusum_neg=zf(),
+        ph_up=zf(),
+        ph_dn=zf(),
+        ph_min=zf(),
+        ph_max=zf(),
+        hist_ref=jnp.zeros((HIST_BINS,), jnp.float32),
+        last_drops=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        alarm_count=jnp.zeros((N_SIGNALS,), jnp.int32),
+        last_alarm=jnp.full((N_SIGNALS,), -1, jnp.int32),
+    )
+
+
+def _signals(state: MonitorState, bundle: MetricsBundle):
+    """Reduce a MetricsBundle to the [N_SIGNALS] vector (+ aux)."""
+    hist = bundle.div_hist.astype(jnp.float32)
+    mass = jnp.maximum(jnp.sum(hist), 1.0)
+    p = hist / mass
+    # Total-variation distance to the EWMA reference histogram: [0, 1].
+    hist_shift = 0.5 * jnp.sum(jnp.abs(p - state.hist_ref))
+    drops_total = jnp.sum(bundle.drops).astype(jnp.float32)
+    drop_delta = drops_total - state.last_drops
+    fill_frac = bundle.fill.astype(jnp.float32) / jnp.maximum(
+        bundle.capacity.astype(jnp.float32), 1.0
+    )
+    x = jnp.stack(
+        [
+            bundle.div_mean,
+            hist_shift,
+            bundle.dod_mean,
+            bundle.quarantined.astype(jnp.float32),
+            drop_delta,
+            fill_frac,
+            bundle.discount_mean,
+        ]
+    )
+    return x, p, drops_total
+
+
+def monitor_step(
+    state: MonitorState, bundle: MetricsBundle, cfg: MonitorConfig
+) -> "tuple[MonitorState, MonitorVerdict]":
+    """One detector update from one flush's bundle.  Pure jnp, O(1)."""
+    x, p, drops_total = _signals(state, bundle)
+    first = state.count == 0
+
+    # Standardise against the *previous* baseline; seed it on flush 0.
+    sigma = jnp.sqrt(jnp.maximum(state.var, cfg.min_sigma**2))
+    z = jnp.where(first, 0.0, (x - state.mean) / sigma)
+
+    # During warmup, adapt at ~1/count (running average) so the baseline
+    # locks on fast; afterwards settle to the configured EWMA rate.
+    a = jnp.maximum(
+        jnp.float32(cfg.ewma_alpha),
+        jnp.where(state.count < cfg.warmup, 1.0 / (state.count + 1.0), 0.0),
+    )
+    resid = x - state.mean
+    mean = jnp.where(first, x, state.mean + a * resid)
+    var = jnp.where(first, jnp.zeros_like(x), (1.0 - a) * (state.var + a * resid**2))
+
+    # Detector statistics stay at zero until warmup completes: the
+    # warmup window is for settling the EWMA baseline, and charging the
+    # detectors with the settling transient would discharge as a burst
+    # of false alarms on the first post-warmup flush.
+    warm = state.count >= cfg.warmup
+
+    # Two-sided CUSUM on the standardised residual.
+    cpos = jnp.where(warm, jnp.maximum(0.0, state.cusum_pos + z - cfg.cusum_k), 0.0)
+    cneg = jnp.where(warm, jnp.maximum(0.0, state.cusum_neg - z - cfg.cusum_k), 0.0)
+    cusum_alarm = (cpos > cfg.cusum_h) | (cneg > cfg.cusum_h)
+
+    # Two-sided Page-Hinkley on the standardised residual.  The two
+    # one-sided tests keep SEPARATE sums: the increase test drifts its
+    # sum down by delta (its running min follows, so the gap stays
+    # bounded under H0), the decrease test drifts up by delta.  A shared
+    # sum would make the opposite side's gap grow linearly in t and
+    # guarantee a false alarm at ~lambda/delta flushes.
+    ph_up = jnp.where(warm, state.ph_up + z - cfg.ph_delta, 0.0)
+    ph_dn = jnp.where(warm, state.ph_dn + z + cfg.ph_delta, 0.0)
+    ph_min = jnp.where(warm, jnp.minimum(state.ph_min, ph_up), 0.0)
+    ph_max = jnp.where(warm, jnp.maximum(state.ph_max, ph_dn), 0.0)
+    ph_alarm = ((ph_up - ph_min) > cfg.ph_lambda) | (
+        (ph_max - ph_dn) > cfg.ph_lambda
+    )
+
+    flags = (cusum_alarm | ph_alarm) & warm
+    scores = jnp.maximum(
+        jnp.maximum(cpos, cneg), jnp.maximum(ph_up - ph_min, ph_max - ph_dn)
+    )
+
+    # Fired detectors reset so a persistent shift re-alarms at a bounded
+    # rate while the EWMA baseline re-converges on the new regime.
+    zero = jnp.zeros_like(cpos)
+    new_state = MonitorState(
+        mean=mean,
+        var=var,
+        cusum_pos=jnp.where(flags, zero, cpos),
+        cusum_neg=jnp.where(flags, zero, cneg),
+        ph_up=jnp.where(flags, zero, ph_up),
+        ph_dn=jnp.where(flags, zero, ph_dn),
+        ph_min=jnp.where(flags, zero, ph_min),
+        ph_max=jnp.where(flags, zero, ph_max),
+        hist_ref=jnp.where(first, p, state.hist_ref + a * (p - state.hist_ref)),
+        last_drops=drops_total,
+        count=state.count + 1,
+        alarm_count=state.alarm_count + flags.astype(jnp.int32),
+        last_alarm=jnp.where(flags, bundle.round, state.last_alarm),
+    )
+    verdict = MonitorVerdict(
+        flags=flags, values=x, scores=scores, round=bundle.round
+    )
+    return new_state, verdict
+
+
+def alerts_from_verdict(verdict: MonitorVerdict) -> "list[dict]":
+    """Decode one flush's verdict into JSON-safe alert dicts (host side)."""
+    import numpy as np
+
+    flags = np.asarray(verdict.flags)
+    if not flags.any():
+        return []
+    values = np.asarray(verdict.values)
+    scores = np.asarray(verdict.scores)
+    rnd = int(np.asarray(verdict.round))
+    return [
+        {
+            "signal": MONITOR_SIGNALS[i],
+            "round": rnd,
+            "value": float(values[i]),
+            "score": float(scores[i]),
+        }
+        for i in np.flatnonzero(flags)
+    ]
+
+
+def monitor_to_dict(state: MonitorState) -> "dict":
+    """Host-side summary of detector state (for session summaries)."""
+    import numpy as np
+
+    alarm_count = np.asarray(state.alarm_count)
+    last_alarm = np.asarray(state.last_alarm)
+    return {
+        "flushes": int(np.asarray(state.count)),
+        "alarms_total": int(alarm_count.sum()),
+        "alarms_by_signal": {
+            name: int(alarm_count[i])
+            for i, name in enumerate(MONITOR_SIGNALS)
+            if alarm_count[i]
+        },
+        "last_alarm_round": {
+            name: int(last_alarm[i])
+            for i, name in enumerate(MONITOR_SIGNALS)
+            if last_alarm[i] >= 0
+        },
+    }

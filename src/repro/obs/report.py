@@ -1,0 +1,190 @@
+"""Run reports: markdown/terminal digest of a run's telemetry summary.
+
+Joins the two diagnosis views the plane produces — the span-attributed
+wall-clock breakdown (the measurement instrument for the e2e
+loop-overhead hunt) and the alert/incident timeline from the monitor —
+into one human-readable document.  Input is the JSON-safe
+``history["telemetry"]`` blob a :class:`~repro.obs.session.TelemetrySession`
+summary emits, so reports can be rendered live at the end of a run or
+offline from a saved history; no device state is touched.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.obs import forensics as forensics_mod
+
+
+def _fmt(v, nd: int = 3) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def _table(headers: "list[str]", rows: "list[list]") -> "list[str]":
+    out = ["| " + " | ".join(headers) + " |"]
+    out.append("|" + "|".join(" --- " for _ in headers) + "|")
+    for row in rows:
+        out.append("| " + " | ".join(_fmt(c) for c in row) + " |")
+    return out
+
+
+def run_report(
+    summary: "dict[str, Any]",
+    *,
+    title: str = "Run report",
+    history: "dict[str, Any] | None" = None,
+    client_rows: "list[dict] | None" = None,
+) -> str:
+    """Render one run's telemetry summary as markdown.
+
+    ``summary`` is ``history["telemetry"]`` (or ``session.summary()``);
+    ``history`` optionally adds headline loss/accuracy numbers;
+    ``client_rows`` (from :func:`~repro.obs.forensics.client_table`)
+    appends the per-client forensics section.  Disabled telemetry yields
+    a one-line report rather than an error.
+    """
+    lines = [f"# {title}", ""]
+    if not summary or not summary.get("enabled", False):
+        lines.append("Telemetry was disabled for this run — nothing to report.")
+        return "\n".join(lines) + "\n"
+
+    if history:
+        headline = []
+        for key in ("final_loss", "final_accuracy", "rounds", "flushes"):
+            if key in history:
+                headline.append(f"{key.replace('_', ' ')} {_fmt(history[key], 4)}")
+        if headline:
+            lines += ["**Headline:** " + " · ".join(headline), ""]
+
+    # ------------------------------------------------ wall-clock breakdown
+    spans = summary.get("spans", {})
+    lines.append("## Wall-clock breakdown (span-attributed)")
+    lines.append("")
+    if spans:
+        ordered = sorted(spans.items(), key=lambda kv: -kv[1]["total_ms"])
+        total_ms = sum(rec["total_ms"] for _, rec in ordered)
+        rows = [
+            [
+                name,
+                rec["count"],
+                f"{rec['total_ms']:.2f}",
+                f"{rec['mean_us']:.1f}",
+                f"{rec['max_us']:.1f}",
+                f"{100.0 * rec['total_ms'] / total_ms:.1f}%" if total_ms else "-",
+            ]
+            for name, rec in ordered
+        ]
+        lines += _table(
+            ["span", "count", "total ms", "mean us", "max us", "share"], rows
+        )
+    else:
+        lines.append("No spans recorded (spans disabled or nothing traced).")
+    lines.append("")
+
+    # -------------------------------------------------------- alert timeline
+    alerts = summary.get("alerts", [])
+    monitor = summary.get("monitor")
+    lines.append("## Alert timeline")
+    lines.append("")
+    if monitor is not None:
+        lines.append(
+            f"Monitor observed {monitor.get('flushes', 0)} flushes, "
+            f"{monitor.get('alarms_total', 0)} alarms total."
+        )
+        lines.append("")
+    if alerts:
+        rows = [
+            [a["round"], a["signal"], _fmt(a.get("value")), _fmt(a.get("score"), 2)]
+            for a in alerts
+        ]
+        lines += _table(["round", "signal", "value", "score"], rows)
+    elif monitor is not None:
+        lines.append("No alerts fired.")
+    else:
+        lines.append("No monitor configured.")
+    lines.append("")
+
+    # ------------------------------------------------------- flush timeline
+    timeline = forensics_mod.incident_timeline(summary)
+    lines.append("## Flush timeline (retained ring)")
+    lines.append("")
+    if timeline:
+        rows = [
+            [
+                r["round"],
+                "evicted" if r.get("evicted") else _fmt(r.get("fill")),
+                _fmt(r.get("div_mean")),
+                _fmt(r.get("dod_mean")),
+                _fmt(r.get("quarantined")),
+                _fmt(r.get("drops_total")),
+                ", ".join(a["signal"] for a in r.get("alerts", [])) or "-",
+            ]
+            for r in timeline
+        ]
+        rows = rows[-16:]  # keep reports readable; ring holds the rest
+        lines += _table(
+            ["round", "fill", "div_mean", "dod_mean", "quar", "drops", "alerts"],
+            rows,
+        )
+    else:
+        lines.append("Ring empty (metrics disabled or no flushes recorded).")
+    lines.append("")
+
+    # ---------------------------------------------------------------- drops
+    drops_total = summary.get("drops_total", 0)
+    lines.append("## Drop pressure")
+    lines.append("")
+    if drops_total:
+        lines.append(
+            f"{drops_total} uploads dropped; by client-hash bucket: "
+            + ", ".join(
+                f"{k}:{v}"
+                for k, v in sorted(summary.get("drops_by_bucket", {}).items())
+            )
+        )
+    else:
+        lines.append("No drops recorded.")
+    lines.append("")
+
+    # ------------------------------------------------------------- forensics
+    if client_rows:
+        lines.append("## Per-client forensics")
+        lines.append("")
+        rows = [
+            [
+                r["client"],
+                _fmt(r["reputation"]),
+                _fmt(r["div_ema"]),
+                r["seen"],
+                "Q" if r["quarantined"] else "-",
+                "flag" if r["flagged"] else "-",
+                ("mal" if r.get("malicious") else "ben")
+                if "malicious" in r
+                else "-",
+            ]
+            for r in client_rows
+        ]
+        lines += _table(
+            ["client", "rep", "div_ema", "seen", "quar", "flagged", "truth"], rows
+        )
+        quality = forensics_mod.detection_quality(client_rows)
+        if quality["tp"] + quality["fp"] + quality["fn"] + quality["tn"]:
+            lines.append("")
+            lines.append(
+                f"Detection: precision {_fmt(quality['precision'])} · "
+                f"recall {_fmt(quality['recall'])} · f1 {_fmt(quality['f1'])}"
+            )
+        lines.append("")
+
+    return "\n".join(lines) + "\n"
+
+
+def write_report(path: str, summary: "dict[str, Any]", **kwargs) -> str:
+    """Render :func:`run_report` to ``path``; returns the markdown."""
+    text = run_report(summary, **kwargs)
+    with open(path, "w") as f:
+        f.write(text)
+    return text

@@ -72,6 +72,8 @@ class TelemetrySession:
         )
         self.drops: dict[int, int] = {}  # host-side per-bucket mirror
         self.kernel_calls: dict[str, int] = {}  # traced call sites
+        self.alerts: list[dict] = []  # decoded monitor alerts, in order
+        self._monitor_state = None  # latest MonitorState seen (for summary)
         self._ring: metrics_mod.MetricsRing | None = None
         self._ring_push = None
         self._open = False
@@ -122,6 +124,29 @@ class TelemetrySession:
             self._ring_push = metrics_mod.make_ring_push()
         self._ring = self._ring_push(self._ring, bundle)
 
+    def record_alerts(self, verdict, state=None) -> None:
+        """Decode one flush's :class:`~repro.obs.monitor.MonitorVerdict`.
+
+        Host-side by design: syncs a handful of scalars per flush (only
+        when a monitor is configured), accumulates JSON-safe alert dicts,
+        and emits each through the tracer's typed ``alert`` event so
+        attached sinks (JSONL, benchmark recorders) see the timeline.
+        """
+        if not self.metrics_enabled or verdict is None:
+            return
+        from repro.obs import monitor as monitor_mod
+
+        if state is not None:
+            self._monitor_state = state
+        for alert in monitor_mod.alerts_from_verdict(verdict):
+            self.alerts.append(alert)
+            trace_mod.tracer.alert(
+                alert["signal"],
+                alert["round"],
+                value=alert["value"],
+                score=alert["score"],
+            )
+
     def record_drop(self, client_id: int) -> None:
         """Mirror a HOST-side drop decision into its client-hash bucket."""
         if not self.enabled:
@@ -167,6 +192,13 @@ class TelemetrySession:
         }
         if self.kernel_calls:
             out["kernel_calls_traced"] = dict(self.kernel_calls)
+        if self.alerts or self._monitor_state is not None:
+            out["alerts"] = list(self.alerts)
+            out["alerts_total"] = len(self.alerts)
+        if self._monitor_state is not None:
+            from repro.obs import monitor as monitor_mod
+
+            out["monitor"] = monitor_mod.monitor_to_dict(self._monitor_state)
         if self.jsonl_sink is not None:
             out["jsonl"] = self.jsonl_sink.path
         if self.perfetto_path:

@@ -114,6 +114,20 @@ def perfetto_trace(events, process_name: str = "repro") -> dict:
                 "tid": tid,
                 "args": ev.get("attrs", {}),
             })
+        elif kind == "alert":
+            # alerts render as process-scoped instants so onset markers
+            # line up against the flush spans they diagnosed
+            args = {"signal": ev["signal"], "round": ev["round"]}
+            args.update(ev.get("attrs", {}))
+            trace_events.append({
+                "name": ev["name"],
+                "ph": "i",
+                "s": "p",
+                "ts": ev["ts_us"],
+                "pid": 1,
+                "tid": tid,
+                "args": args,
+            })
         # meta events carry no timeline geometry; skipped by design
     return {"traceEvents": trace_events, "displayTimeUnit": "ms"}
 

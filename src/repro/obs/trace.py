@@ -40,6 +40,10 @@ EVENT_SCHEMA: dict[str, tuple[str, ...]] = {
     "counter": ("type", "name", "ts_us", "value"),
     "instant": ("type", "name", "ts_us"),
     "meta": ("type", "name", "ts_us", "attrs"),
+    # ``alert``: a monitor detector fired (repro.obs.monitor).  ``signal``
+    # names the MONITOR_SIGNALS entry, ``round`` the server round of the
+    # flush that tripped it; value/score evidence rides in ``attrs``.
+    "alert": ("type", "name", "ts_us", "signal", "round"),
 }
 
 
@@ -177,6 +181,23 @@ class Tracer:
             "type": "instant",
             "name": name,
             "ts_us": _now_us(),
+            "tid": threading.get_ident() & 0xFFFF,
+            "v": SCHEMA_VERSION,
+        }
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+
+    def alert(self, signal: str, round: int, **attrs) -> None:
+        """A monitor detector fired: typed alert event (diagnosis plane)."""
+        if not self.enabled:
+            return
+        ev = {
+            "type": "alert",
+            "name": f"alert/{signal}",
+            "ts_us": _now_us(),
+            "signal": signal,
+            "round": int(round),
             "tid": threading.get_ident() & 0xFFFF,
             "v": SCHEMA_VERSION,
         }

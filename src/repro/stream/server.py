@@ -51,6 +51,7 @@ from repro.core import flat as flat_mod
 from repro.core import pytree as pt
 from repro.fl.client import local_update
 from repro.obs import metrics as obs_metrics
+from repro.obs import monitor as obs_monitor
 from repro.obs import session as obs_session
 from repro.obs import trace as obs_trace
 from repro.stream import buffer as buf_mod
@@ -87,6 +88,9 @@ class StreamConfig:
     #   (repro.obs) — STATIC: off leaves the flush jaxpr untouched; on
     #   adds one extra pytree output assembled from the already-computed
     #   flush signals, never an extra pass over the stack
+    monitor: object = None  # obs.monitor.MonitorConfig | None — online
+    #   change-point detectors over the bundle (requires telemetry=True);
+    #   None (default) keeps the flush jaxpr monitor-free
 
 
 class StreamState(NamedTuple):
@@ -98,6 +102,7 @@ class StreamState(NamedTuple):
     buffer: buf_mod.BufferState
     adversary: pt.Pytree = ()  # attack memory (repro.adversary)
     trust: pt.Pytree = ()  # TrustState | () (repro.trust)
+    monitor: pt.Pytree = ()  # obs.monitor.MonitorState | () (diagnosis)
 
 
 def init_stream_state(
@@ -116,12 +121,15 @@ def init_stream_state(
     # them over its "pod" axis.
     adv_state: pt.Pytree = ()
     trust_state: pt.Pytree = ()
+    monitor_state: pt.Pytree = ()
     if cfg is not None:
         adv_state = adversary_engine.resolve(cfg.attack, dict(cfg.attack_kw)).init()
         if cfg.trust:
             if not n_clients:
                 raise ValueError("cfg.trust=True needs n_clients for the trust table")
             trust_state = trust_mod.init_trust(n_clients)
+        if cfg.telemetry and cfg.monitor is not None:
+            monitor_state = obs_monitor.monitor_init()
     if cfg is not None and cfg.shards > 0:
         buffer = sharded_mod.init_sharded_buffer(params, capacity, cfg.shards, mesh)
     else:
@@ -133,6 +141,7 @@ def init_stream_state(
         buffer=buffer,
         adversary=adv_state,
         trust=trust_state,
+        monitor=monitor_state,
     )
 
 
@@ -149,6 +158,7 @@ def flush(
     trust_state: pt.Pytree = (),  # TrustState | ()
     reference=None,  # precomputed r^t (RootReferenceCache); overrides root_batches
     mesh=None,  # pod mesh for the sharded buffer (repro.stream.sharded)
+    monitor_state: pt.Pytree = (),  # obs.monitor.MonitorState | ()
 ):
     """One global step from a full buffer; returns
     (params', drag', round+1, reset buffer, adv_state', trust_state',
@@ -169,6 +179,7 @@ def flush(
             loss_fn, cfg, params, drag_state, rnd, buf, key,
             root_batches=root_batches, adv_state=adv_state,
             trust_state=trust_state, reference=reference, mesh=mesh,
+            monitor_state=monitor_state,
         )
     # the buffer IS the flat plane: view it as the UpdateStack whose
     # metadata (staleness tags, client ids) is THE source the discounts
@@ -295,6 +306,15 @@ def flush(
             c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
             mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
         )
+        if cfg.monitor is not None:
+            # detectors read ONLY the already-reduced bundle; their O(1)
+            # state rides the metrics dict back to the host loop
+            mstate = (
+                monitor_state if monitor_state != () else obs_monitor.monitor_init()
+            )
+            metrics["obs_monitor"] = obs_monitor.monitor_step(
+                mstate, metrics["obs"], cfg.monitor
+            )
     return params, new_drag, rnd + 1, buf_mod.reset(buf), new_adv, new_trust, metrics
 
 
@@ -317,6 +337,7 @@ def _flush_sharded(
     trust_state: pt.Pytree = (),
     reference=None,
     mesh=None,
+    monitor_state: pt.Pytree = (),
 ):
     """:func:`flush` on the sharded plane (``repro.stream.sharded``).
 
@@ -428,6 +449,13 @@ def _flush_sharded(
             c=cfg.c if cfg.algorithm == "drag" else cfg.c_br,
             mode=cfg.algorithm if cfg.algorithm in ("drag", "br_drag") else "none",
         )
+        if cfg.monitor is not None:
+            mstate = (
+                monitor_state if monitor_state != () else obs_monitor.monitor_init()
+            )
+            metrics["obs_monitor"] = obs_monitor.monitor_step(
+                mstate, metrics["obs"], cfg.monitor
+            )
     return (
         params, new_drag, rnd + 1, sharded_mod.reset(buf), new_adv, new_trust,
         metrics,
@@ -449,20 +477,27 @@ def make_flush_fn(loss_fn: Callable, cfg: StreamConfig, with_root: bool, mesh=No
     if with_root:
 
         @partial(jax.jit, donate_argnums=(3,))
-        def fn(params, drag_state, rnd, buf, key, adv_state, trust_state, reference):
+        def fn(
+            params, drag_state, rnd, buf, key, adv_state, trust_state, reference,
+            monitor_state=(),
+        ):
             return flush(
                 loss_fn, cfg, params, drag_state, rnd, buf, key,
                 adv_state=adv_state, trust_state=trust_state, reference=reference,
-                mesh=mesh,
+                mesh=mesh, monitor_state=monitor_state,
             )
 
     else:
 
         @partial(jax.jit, donate_argnums=(3,))
-        def fn(params, drag_state, rnd, buf, key, adv_state, trust_state):
+        def fn(
+            params, drag_state, rnd, buf, key, adv_state, trust_state,
+            monitor_state=(),
+        ):
             return flush(
                 loss_fn, cfg, params, drag_state, rnd, buf, key,
                 adv_state=adv_state, trust_state=trust_state, mesh=mesh,
+                monitor_state=monitor_state,
             )
 
     return fn
@@ -613,7 +648,7 @@ class AsyncStreamServer:
     def flush_if_ready(self, key, root_batches=None) -> dict | None:
         if not self.buffer_ready():
             return None
-        with obs_trace.span("flush", round=self.t):
+        with obs_trace.span("flush", round=self.t, shards=self.cfg.shards):
             args = [
                 self.state.params, self.state.drag, self.state.round,
                 self.state.buffer, key, self.state.adversary, self.state.trust,
@@ -622,10 +657,28 @@ class AsyncStreamServer:
                 assert root_batches is not None
                 with obs_trace.span("root_reference"):
                     args.append(self.root_reference(root_batches))
-            params, new_drag, rnd, buf, adv, trust, metrics = self._flush(*args)
+            args.append(self.state.monitor)
+            if self.cfg.shards > 0:
+                # sharded span parity: the hierarchical one-psum flush
+                # gets its own nested span (host boundary — never in jit)
+                with obs_trace.span(
+                    sharded_mod.FLUSH_SPAN, **sharded_mod.span_attrs(self.cfg)
+                ):
+                    params, new_drag, rnd, buf, adv, trust, metrics = (
+                        self._flush(*args)
+                    )
+            else:
+                params, new_drag, rnd, buf, adv, trust, metrics = (
+                    self._flush(*args)
+                )
+            new_monitor = self.state.monitor
+            obs_mon = metrics.pop("obs_monitor", None)
+            if obs_mon is not None:
+                new_monitor, verdict = obs_mon
+                self.session.record_alerts(verdict, new_monitor)
             self.state = StreamState(
                 params=params, round=rnd, drag=new_drag, buffer=buf,
-                adversary=adv, trust=trust,
+                adversary=adv, trust=trust, monitor=new_monitor,
             )
             self.t += 1
             self.ingested = 0

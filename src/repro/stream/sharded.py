@@ -57,6 +57,26 @@ from repro.stream import buffer as buffer_mod
 #: the mesh axis the sub-buffers shard over (``launch.mesh.make_pod_mesh``)
 POD_AXIS = "pod"
 
+#: span name the host loop wraps the jitted hierarchical flush in
+#: (obs plane — span parity with the single-buffer flush/round spans;
+#: the span sits at the HOST boundary, never inside jit)
+FLUSH_SPAN = "sharded_flush"
+
+
+def span_attrs(cfg) -> dict:
+    """Span attributes identifying a sharded flush's pod geometry.
+
+    Takes the ``StreamConfig`` (duck-typed: ``shards`` /
+    ``buffer_capacity``) so the host loop can attribute wall-clock to a
+    pod layout without touching device state.
+    """
+    shards = int(getattr(cfg, "shards", 0))
+    capacity = int(getattr(cfg, "buffer_capacity", 0))
+    return {
+        "shards": shards,
+        "pod_capacity": capacity // shards if shards else capacity,
+    }
+
 
 class ShardedBufferState(NamedTuple):
     """Per-pod sub-buffers: ``slots[i]`` is pod i's ``[K/p, d]`` plane.

@@ -1,0 +1,514 @@
+"""Diagnosis layer (ISSUE 7): change-point monitor, forensics, run
+reports, and the perf regression sentinel — plus the acceptance
+invariants (monitor invisible to numerics/jaxpr, detection bounded)."""
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import (
+    MONITOR_SIGNALS,
+    MonitorConfig,
+    MonitorVerdict,
+    alert_latency,
+    alerts_from_verdict,
+    client_table,
+    detection_quality,
+    flush_bundle,
+    incident_timeline,
+    monitor_init,
+    monitor_step,
+    monitor_to_dict,
+    run_report,
+    write_report,
+)
+from repro.obs.monitor import N_SIGNALS
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = MonitorConfig()
+
+
+def _bundle(rnd: int, div: float, rng: np.random.RandomState, k: int = 8):
+    """A flush bundle whose div_mean sits at ``div`` (+ small noise)."""
+    cos = np.clip(
+        1.0 - div + rng.randn(k).astype(np.float32) * 0.01, -1.0, 1.0
+    )
+    return flush_bundle(
+        rnd=rnd, fill=k, capacity=k,
+        stats=(jnp.asarray(cos), jnp.ones((k,)), jnp.ones(())),
+        c=0.5, mode="drag",
+    )
+
+
+def _run(divs, cfg=CFG):
+    """Feed a div_mean trajectory through the monitor; collect verdicts."""
+    rng = np.random.RandomState(0)
+    state, verdicts = monitor_init(), []
+    for i, d in enumerate(divs):
+        state, v = monitor_step(state, _bundle(i, d, rng), cfg)
+        verdicts.append(v)
+    return state, verdicts
+
+
+def _alarm_rounds(verdicts):
+    return [int(v.round) for v in verdicts if bool(np.asarray(v.flags).any())]
+
+
+# ------------------------------------------------------------ detectors
+class TestMonitorStep:
+    def test_stationary_signal_never_alarms(self):
+        state, verdicts = _run([0.3] * 60)
+        assert _alarm_rounds(verdicts) == []
+        assert int(np.asarray(state.alarm_count).sum()) == 0
+        assert int(state.count) == 60
+
+    def test_mean_shift_alarms_within_bound(self):
+        shift_at = 30
+        state, verdicts = _run([0.3] * shift_at + [0.9] * 10)
+        alarms = _alarm_rounds(verdicts)
+        assert alarms, "a 12-sigma mean shift must alarm"
+        assert shift_at <= alarms[0] <= shift_at + 8
+        # the alarm names the divergence signal it watched
+        first = next(v for v in verdicts if bool(np.asarray(v.flags).any()))
+        fired = [MONITOR_SIGNALS[i]
+                 for i in np.flatnonzero(np.asarray(first.flags))]
+        assert "div_mean" in fired or "div_hist_shift" in fired
+
+    def test_warmup_suppresses_alarms(self):
+        # a violent shift INSIDE the warmup window must stay silent
+        divs = [0.3] * 3 + [0.9] * (CFG.warmup - 3)
+        _, verdicts = _run(divs)
+        assert _alarm_rounds(verdicts) == []
+
+    def test_fired_detectors_reset(self):
+        state, verdicts = _run([0.3] * 30 + [0.9] * 6)
+        fired = np.flatnonzero(
+            np.asarray(verdicts[-1].flags)
+            | np.asarray(state.alarm_count) > 0
+        )
+        assert fired.size  # something alarmed in the run
+        # whichever signals alarmed on the LAST flush are reset to zero
+        last_flags = np.asarray(verdicts[-1].flags)
+        for stat in (state.cusum_pos, state.cusum_neg, state.ph_up,
+                     state.ph_dn):
+            np.testing.assert_array_equal(
+                np.asarray(stat)[last_flags], 0.0
+            )
+
+    def test_state_is_o1_and_shape_stable(self):
+        from repro.obs.metrics import HIST_BINS
+
+        s0 = monitor_init()
+        s60, _ = _run([0.3] * 30 + [0.9] * 30)
+        for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(s60)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        n_elems = sum(x.size for x in jax.tree.leaves(s0))
+        assert n_elems == 10 * N_SIGNALS + HIST_BINS + 2
+
+    def test_monitor_step_is_jittable(self):
+        rng = np.random.RandomState(0)
+        step = jax.jit(monitor_step, static_argnums=(2,))
+        state = monitor_init()
+        state, v = step(state, _bundle(0, 0.3, rng), CFG)
+        assert isinstance(v, MonitorVerdict)
+        assert v.flags.shape == (N_SIGNALS,)
+
+    def test_alerts_decode_only_fired_signals(self):
+        flags = np.zeros((N_SIGNALS,), bool)
+        flags[0], flags[3] = True, True
+        v = MonitorVerdict(
+            flags=jnp.asarray(flags),
+            values=jnp.arange(N_SIGNALS, dtype=jnp.float32),
+            scores=jnp.full((N_SIGNALS,), 7.5),
+            round=jnp.asarray(12, jnp.int32),
+        )
+        alerts = alerts_from_verdict(v)
+        assert [a["signal"] for a in alerts] == [
+            MONITOR_SIGNALS[0], MONITOR_SIGNALS[3]
+        ]
+        assert all(a["round"] == 12 and a["score"] == 7.5 for a in alerts)
+        json.dumps(alerts)  # JSON-safe
+        # no flags -> no list allocation churn
+        v0 = v._replace(flags=jnp.zeros((N_SIGNALS,), bool))
+        assert alerts_from_verdict(v0) == []
+
+    def test_monitor_to_dict_summarises_alarms(self):
+        state, _ = _run([0.3] * 30 + [0.9] * 10)
+        d = monitor_to_dict(state)
+        assert d["flushes"] == 40
+        assert d["alarms_total"] >= 1
+        assert set(d["alarms_by_signal"]) <= set(MONITOR_SIGNALS)
+        for rnd in d["last_alarm_round"].values():
+            assert 30 <= rnd < 40
+
+
+# ---------------------------------------------------- engine invariance
+class TestMonitorInvariance:
+    """Wiring the monitor changes NOTHING but the observation."""
+
+    def _flush(self, monitor):
+        from repro.stream import buffer as buf_mod
+        from repro.stream.server import StreamConfig, flush, init_stream_state
+
+        p = {"w": jnp.ones((24,))}
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=4, trust=True,
+            discount="poly", telemetry=True, monitor=monitor,
+        )
+        state = init_stream_state(p, 4, cfg, n_clients=8)
+        key = jax.random.PRNGKey(0)
+        buf = state.buffer
+        for i in range(4):
+            g = {"w": jax.random.normal(jax.random.fold_in(key, i), (24,))}
+            buf = buf_mod.ingest(buf, g, 0, False, client_id=i)
+        return flush(
+            None, cfg, state.params, state.drag, state.round, buf, key,
+            adv_state=state.adversary, trust_state=state.trust,
+            monitor_state=state.monitor,
+        )
+
+    def test_flush_numerics_bit_for_bit_with_monitor(self):
+        off = self._flush(None)
+        on = self._flush(MonitorConfig())
+        m_off, m_on = off[-1], dict(on[-1])
+        assert "obs_monitor" not in m_off
+        new_state, verdict = m_on.pop("obs_monitor")
+        assert int(new_state.count) == 1
+        assert verdict.flags.shape == (N_SIGNALS,)
+        assert m_off.keys() == m_on.keys()
+        for a, b in zip(jax.tree.leaves((off[:4], m_off)),
+                        jax.tree.leaves((on[:4], m_on))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_telemetry_off_jaxpr_ignores_monitor_config(self):
+        """telemetry=False is the pre-obs program even when a monitor
+        config is present on the StreamConfig."""
+        from repro.stream import buffer as buf_mod
+        from repro.stream.server import StreamConfig, flush, init_stream_state
+
+        p = {"w": jnp.ones((16,))}
+        jaxprs = {}
+        for monitor in (None, MonitorConfig()):
+            cfg = StreamConfig(
+                algorithm="drag", buffer_capacity=4, trust=True,
+                discount="poly", telemetry=False, monitor=monitor,
+            )
+            state = init_stream_state(p, 4, cfg, n_clients=8)
+            buf = buf_mod.ingest(
+                state.buffer, {"w": jnp.ones((16,))}, 0, False, client_id=0
+            )
+
+            def fn(params, dstate, rnd, buf, key):
+                return flush(None, cfg, params, dstate, rnd, buf, key,
+                             adv_state=state.adversary,
+                             trust_state=state.trust)
+
+            jaxprs[monitor is None] = jax.make_jaxpr(fn)(
+                state.params, state.drag, state.round, buf,
+                jax.random.PRNGKey(0),
+            )
+        import re
+
+        # function object reprs embed memory addresses; strip them
+        canon = lambda j: re.sub(r"0x[0-9a-f]+", "0x", str(j))  # noqa: E731
+        assert canon(jaxprs[True]) == canon(jaxprs[False])
+
+    def test_spec_plane_round_trip_and_validation(self):
+        from repro.api import (
+            AggregationSpec,
+            AsyncRegime,
+            DataSpec,
+            ExperimentSpec,
+            ModelSpec,
+            MonitorSpec,
+            TelemetrySpec,
+            lowering,
+            validate,
+        )
+
+        spec = ExperimentSpec(
+            data=DataSpec(dataset="emnist", n_workers=4),
+            model=ModelSpec("mlp"),
+            aggregation=AggregationSpec("drag"),
+            regime=AsyncRegime(flushes=2, buffer_capacity=3, local_steps=1),
+            telemetry=TelemetrySpec(
+                enabled=True, monitor=MonitorSpec(enabled=True, warmup=3)
+            ),
+        )
+        back = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert back == spec and hash(back) == hash(spec)
+        cfg = lowering.stream_config(spec)
+        assert cfg.monitor is not None and cfg.monitor.warmup == 3
+
+        # monitor without telemetry is a spec error, not a silent no-op
+        dark = dataclasses.replace(
+            spec, telemetry=TelemetrySpec(monitor=MonitorSpec(enabled=True))
+        )
+        with pytest.raises(ValueError, match="monitor"):
+            validate(dark)
+        bad = dataclasses.replace(
+            spec,
+            telemetry=TelemetrySpec(
+                enabled=True,
+                monitor=MonitorSpec(enabled=True, ewma_alpha=1.5),
+            ),
+        )
+        with pytest.raises(ValueError, match="ewma_alpha"):
+            validate(bad)
+        # disabled monitor lowers to None -> monitor-free flush jaxpr
+        assert lowering.stream_config(
+            dataclasses.replace(spec, telemetry=TelemetrySpec(enabled=True))
+        ).monitor is None
+
+
+# ------------------------------------------------------------ forensics
+def _trust_state(m=6, quarantined=(0, 3), seen=20):
+    from repro.trust.reputation import TrustState
+
+    q = np.zeros((m,), bool)
+    q[list(quarantined)] = True
+    return TrustState(
+        div_ema=jnp.linspace(0.1, 0.9, m).astype(jnp.float32),
+        norm_ema=jnp.ones((m,), jnp.float32),
+        seen=jnp.full((m,), seen, jnp.int32),
+        quarantined=jnp.asarray(q),
+    )
+
+
+class TestForensics:
+    def test_client_table_flags_quarantined(self):
+        table = client_table(_trust_state(), malicious=[1, 0, 0, 1, 0, 0])
+        assert [r["client"] for r in table] == list(range(6))
+        by = {r["client"]: r for r in table}
+        assert by[0]["flagged"] and by[0]["quarantined"]
+        assert by[3]["flagged"] and by[3]["malicious"]
+        assert by[0]["reputation"] == 0.0
+        json.dumps(table)
+
+    def test_detection_quality_scores_confusion(self):
+        # flag_threshold=0 pins flagged == quarantined ({0, 3}), so the
+        # confusion matrix is exact regardless of the reputation curve
+        table = client_table(
+            _trust_state(), malicious=[1, 0, 0, 1, 0, 1], flag_threshold=0.0
+        )
+        q = detection_quality(table)
+        # quarantined {0, 3} vs malicious {0, 3, 5}: client 5 is missed
+        assert (q["tp"], q["fp"], q["fn"], q["tn"]) == (2, 0, 1, 3)
+        assert q["precision"] == 1.0 and q["recall"] == pytest.approx(2 / 3)
+
+    def test_detection_quality_without_truth_is_neutral(self):
+        q = detection_quality(client_table(_trust_state()))
+        assert (q["tp"], q["fp"], q["fn"], q["tn"]) == (0, 0, 0, 0)
+        assert q["precision"] == 1.0 and q["recall"] == 1.0
+
+    def test_alert_latency_from_onset(self):
+        alerts = [
+            {"signal": "div_mean", "round": 5},
+            {"signal": "div_mean", "round": 12},
+            {"signal": "quarantine", "round": 14},
+        ]
+        lat = alert_latency(alerts, onset_round=10)
+        assert lat["detected"] and lat["latency_flushes"] == 2
+        assert lat["first_alert_round"] == 12
+        assert lat["false_alarms"] == 1 and lat["alerts_total"] == 3
+        miss = alert_latency([{"signal": "div_mean", "round": 3}], 10)
+        assert not miss["detected"] and miss["latency_flushes"] is None
+
+    def test_incident_timeline_joins_and_keeps_evicted(self):
+        summary = {
+            "ring": [
+                {"round": 8, "fill": 4, "div_mean": 0.3, "dod_mean": 0.1,
+                 "discount_mean": 1.0, "quarantined": 0, "drops": [0, 1]},
+                {"round": 9, "fill": 4, "div_mean": 0.8, "dod_mean": 0.4,
+                 "discount_mean": 1.0, "quarantined": 2, "drops": [0, 0]},
+            ],
+            "alerts": [
+                {"signal": "div_mean", "round": 9},
+                {"signal": "div_mean", "round": 2},  # outside retention
+            ],
+        }
+        rows = incident_timeline(summary)
+        assert [r["round"] for r in rows] == [8, 9, 2]
+        assert rows[0]["alerts"] == [] and rows[0]["drops_total"] == 1
+        assert rows[1]["alerts"][0]["round"] == 9
+        assert rows[2].get("evicted") is True
+
+
+# -------------------------------------------------------------- reports
+class TestRunReport:
+    def _summary(self):
+        return {
+            "enabled": True,
+            "flushes_recorded": 3,
+            "spans": {
+                "flush": {"count": 3, "total_ms": 30.0, "mean_us": 10000.0,
+                          "max_us": 15000.0},
+                "ingest": {"count": 12, "total_ms": 6.0, "mean_us": 500.0,
+                           "max_us": 900.0},
+            },
+            "ring": [
+                {"round": r, "fill": 4, "div_mean": 0.3, "dod_mean": 0.1,
+                 "discount_mean": 1.0, "quarantined": 0, "drops": [0, 0]}
+                for r in range(3)
+            ],
+            "alerts": [{"signal": "div_mean", "round": 2, "value": 0.9,
+                        "score": 8.0}],
+            "monitor": {"flushes": 3, "alarms_total": 1,
+                        "alarms_by_signal": {"div_mean": 1},
+                        "last_alarm_round": {"div_mean": 2}},
+            "drops_by_bucket": {"0": 2},
+        }
+
+    def test_report_renders_all_sections(self):
+        md = run_report(
+            self._summary(),
+            title="smoke",
+            history={"final_loss": 0.01, "rounds": 3},
+            client_rows=client_table(
+                _trust_state(), malicious=[1, 0, 0, 1, 0, 0]
+            ),
+        )
+        for heading in (
+            "# smoke", "Wall-clock breakdown", "Alert timeline",
+            "Flush timeline", "Drop pressure", "Per-client forensics",
+        ):
+            assert heading in md, heading
+        assert "div_mean" in md and "flush" in md
+        assert "precision" in md  # forensics scored against ground truth
+
+    def test_disabled_telemetry_one_liner(self):
+        md = run_report({}, title="dark")
+        assert "telemetry" in md.lower() and len(md.splitlines()) <= 3
+
+    def test_write_report(self, tmp_path):
+        path = tmp_path / "report.md"
+        write_report(str(path), self._summary(), title="t")
+        assert path.read_text().startswith("# t")
+
+
+# ------------------------------------------------------------- sentinel
+class TestSentinel:
+    def _record(self):
+        return {
+            "e2e": {"wall_s": 2.0, "updates_per_s": 100.0,
+                    "flush_mean_us": 900.0},
+            "micro": [{"name": "ingest", "ingest_us": 20.0}],
+            "telemetry": {"overhead_us": 1e9},  # skipped section
+            "accuracy": 0.91,  # not a timing: ignored
+        }
+
+    def test_compare_clean_and_regressed(self):
+        from benchmarks.sentinel import compare
+
+        base = self._record()
+        clean = compare(base, json.loads(json.dumps(base)))
+        assert clean["regressions"] == []
+        paths = {c["metric"] for c in clean["checks"]}
+        assert "e2e.wall_s" in paths and "e2e.updates_per_s" in paths
+        assert not any(p.startswith("telemetry") for p in paths)
+        # sub-floor micro-timing is skipped, not compared
+        assert any("ingest_us" in s["metric"] for s in clean["skipped"])
+
+        slow = json.loads(json.dumps(base))
+        slow["e2e"]["wall_s"] = 4.0  # 2x
+        slow["e2e"]["updates_per_s"] = 50.0  # halved
+        diff = compare(base, slow)
+        regressed = {r["metric"] for r in diff["regressions"]}
+        assert regressed == {"e2e.wall_s", "e2e.updates_per_s"}
+
+    def test_within_tolerance_passes(self):
+        from benchmarks.sentinel import compare
+
+        base = self._record()
+        noisy = json.loads(json.dumps(base))
+        noisy["e2e"]["wall_s"] = 3.0  # 1.5x < 1 + 0.75
+        assert compare(base, noisy)["regressions"] == []
+
+    def test_run_sentinel_and_report_schema(self, tmp_path):
+        from benchmarks.sentinel import BENCH_FILES, run_sentinel
+        from benchmarks.validate import validate_sentinel
+
+        hist, fresh = tmp_path / "hist", tmp_path / "fresh"
+        hist.mkdir(), fresh.mkdir()
+        (hist / BENCH_FILES[0]).write_text(json.dumps(self._record()))
+        slow = self._record()
+        slow["e2e"]["wall_s"] = 5.0
+        (fresh / BENCH_FILES[0]).write_text(json.dumps(slow))
+        report = run_sentinel(str(hist), str(fresh))
+        assert not report["ok"] and report["regressions_total"] == 1
+        assert report["benches"][BENCH_FILES[0]]["status"] == "compared"
+        assert report["benches"][BENCH_FILES[1]]["status"] == "no baseline"
+        out = tmp_path / "SENTINEL_report.json"
+        out.write_text(json.dumps(report))
+        validated = validate_sentinel(str(out))  # schema-valid even on fail
+        assert validated["ok"] is False
+
+    def test_self_test_proves_the_instrument(self, tmp_path):
+        from benchmarks.sentinel import BENCH_FILES, self_test
+
+        (tmp_path / BENCH_FILES[0]).write_text(json.dumps(self._record()))
+        result = self_test(str(tmp_path))
+        assert result["ok"] and result["identical_pass"]
+        assert result["inflated_fail"] and result["dirty_regressions"] >= 1
+        empty = tmp_path / "empty"
+        empty.mkdir()
+        assert not self_test(str(empty))["ok"]
+
+    def test_committed_baselines_pass_self_test(self):
+        """The sentinel gate actually holds on the repo's own history."""
+        from benchmarks.sentinel import self_test
+
+        hist = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "benchmarks", "history")
+        if not os.path.isdir(hist):
+            pytest.skip("no committed baselines")
+        result = self_test(hist)
+        assert result["ok"], result
+
+
+# ---------------------------------------------------- detection, e2e
+class TestDetectionEndToEnd:
+    @pytest.mark.slow
+    def test_scheduled_onset_detected_benign_silent(self):
+        """Through the REAL async engine: a scheduled ALIE onset alarms
+        within a bounded number of flushes, the attack-free twin stays
+        silent, and forensics score against the lab's ground truth."""
+        from repro.adversary.scenarios import Scenario, run_stream_scenario
+        from repro.api import MonitorSpec, TelemetrySpec
+
+        onset, flushes = 12, 24
+        tel = TelemetrySpec(
+            enabled=True, spans=False, ring_capacity=flushes,
+            monitor=MonitorSpec(enabled=True),
+        )
+        attacked = run_stream_scenario(
+            Scenario(
+                aggregator="br_drag_trust", attack="schedule",
+                attack_kw=(("phases", ((onset, "alie"),)),),
+                malicious_fraction=0.4, n_clients=10, dim=16, seed=0,
+            ),
+            flushes=flushes, buffer_capacity=5, concurrency=8,
+            telemetry=tel,
+        )
+        alerts = attacked["telemetry"]["alerts"]
+        lat = alert_latency(alerts, onset)
+        assert lat["detected"], alerts
+        assert lat["latency_flushes"] <= 8
+        quality = detection_quality(client_table(
+            attacked["trust_state"], malicious=attacked["malicious"]
+        ))
+        assert quality["recall"] == 1.0  # every attacker flagged
+
+        benign = run_stream_scenario(
+            Scenario(aggregator="drag", attack="none",
+                     malicious_fraction=0.0, n_clients=10, dim=16, seed=0),
+            flushes=flushes, buffer_capacity=5, concurrency=8,
+            telemetry=tel,
+        )
+        assert benign["telemetry"].get("alerts", []) == []

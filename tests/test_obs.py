@@ -98,6 +98,58 @@ class TestMetricsRing:
         ring = ring_push(ring, flush_bundle(rnd=7, fill=1, capacity=2))
         assert [e["round"] for e in ring_read(ring)] == [7]
 
+    def test_ring_exactly_full_drains_in_push_order(self):
+        """cursor wraps to 0 at exactly-full: the drain's start index is
+        cursor - n = -capacity, the most negative the wraparound path
+        (obs/metrics.py ring_read) ever sees."""
+        proto = flush_bundle(rnd=0, fill=1, capacity=4)
+        ring = ring_init(proto, capacity=4)
+        for i in range(4):
+            ring = ring_push(ring, flush_bundle(rnd=i, fill=1, capacity=4))
+        assert int(ring.cursor) == 0  # wrapped
+        assert [e["round"] for e in ring_read(ring)] == [0, 1, 2, 3]
+
+    def test_ring_one_past_full_evicts_only_oldest(self):
+        proto = flush_bundle(rnd=0, fill=1, capacity=4)
+        ring = ring_init(proto, capacity=4)
+        for i in range(5):
+            ring = ring_push(ring, flush_bundle(rnd=i, fill=1, capacity=4))
+        assert int(ring.cursor) == 1 and int(ring.total) == 5
+        assert [e["round"] for e in ring_read(ring)] == [1, 2, 3, 4]
+
+    def test_ring_many_wraps_retains_last_window(self):
+        cap, pushes = 3, 11  # 3 full wraps + 2
+        proto = flush_bundle(rnd=0, fill=1, capacity=cap)
+        ring = ring_init(proto, capacity=cap)
+        for i in range(pushes):
+            ring = ring_push(ring, flush_bundle(rnd=i, fill=1, capacity=cap))
+        assert [e["round"] for e in ring_read(ring)] == [8, 9, 10]
+        assert int(ring.total) == pushes
+
+    def test_ring_capacity_one(self):
+        proto = flush_bundle(rnd=0, fill=1, capacity=1)
+        ring = ring_init(proto, capacity=1)
+        for i in range(7):
+            ring = ring_push(ring, flush_bundle(rnd=i, fill=1, capacity=1))
+        assert [e["round"] for e in ring_read(ring)] == [6]
+
+    def test_ring_jitted_push_wraps_identically(self):
+        """The donated jitted push and the plain push agree across a
+        wraparound boundary."""
+        from repro.obs import make_ring_push
+
+        proto = flush_bundle(rnd=0, fill=1, capacity=4)
+        plain = ring_init(proto, capacity=4)
+        jitted = ring_init(proto, capacity=4)
+        push = make_ring_push()
+        for i in range(6):
+            b = flush_bundle(rnd=i, fill=1, capacity=4)
+            plain = ring_push(plain, b)
+            jitted = push(jitted, b)
+        assert [e["round"] for e in ring_read(jitted)] == [
+            e["round"] for e in ring_read(plain)
+        ]
+
 
 # ------------------------------------------------------- spans and sinks
 class TestTrace:

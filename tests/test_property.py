@@ -352,6 +352,26 @@ def test_sharded_ingest_flush_matches_single_buffer(
     )
 
 
+# ------------------------------------------------- metrics ring retention
+# ISSUE 7 satellite: for ANY push count and capacity, the ring retains
+# exactly the last min(n, cap) bundles and drains them oldest-first —
+# pinning ring_read's negative-start wraparound arithmetic.
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(0, 40), cap=st.integers(1, 8))
+def test_metrics_ring_retention_any_push_count(n, cap):
+    from repro.obs import flush_bundle, ring_init, ring_push, ring_read
+
+    proto = flush_bundle(rnd=0, fill=1, capacity=cap)
+    ring = ring_init(proto, capacity=cap)
+    for i in range(n):
+        ring = ring_push(ring, flush_bundle(rnd=i, fill=1, capacity=cap))
+    got = [e["round"] for e in ring_read(ring)]
+    assert got == list(range(max(0, n - cap), n))
+    assert int(ring.total) == n
+
+
 @settings(max_examples=15, deadline=None)
 @given(m=mat)
 def test_linear_recurrence_zero_decay_is_identity(m):
