@@ -171,8 +171,33 @@ def run() -> None:
     assert kernel_calls_tel == TWO_PASS_CALLS, (
         f"telemetry added kernel passes to the flush: {kernel_calls_tel}"
     )
+    # autotune provenance: measure the per-(S, d, dtype) block choices
+    # for the two flush kernels on every cell shape and record them.
+    # Autotune is flipped on only for this probe — it changes the f32
+    # reduction split, so the timed cells above and the kernel-count
+    # asserts ran with the default (bit-for-bit) blocks.
+    from repro.kernels import ops
+
+    ops.set_autotune(True)
+    try:
+        for s, sizes in CELLS:
+            g = jnp.ones((s, sum(sizes)), jnp.float32)
+            ops.dot_norms_stats(g, jnp.ones((g.shape[1],), jnp.float32))
+            ops.blend_reduce(
+                g,
+                jnp.ones((g.shape[1],), jnp.float32),
+                jnp.ones((s,), jnp.float32),
+                jnp.ones((s,), jnp.float32),
+            )
+        autotune = ops.autotune_report()
+    finally:
+        ops.set_autotune(False)
+
     record = {
         "cells": cells,
+        # measured per-(op, S, d, dtype) block-size choices (sentinel
+        # skips this section: provenance, not a timing)
+        "provenance": {"autotune_blocks": autotune},
         "hbm_passes": {
             # pytree oracle: dots/norms + blend + weighted mean + trust
             # divergence pass over G, plus write+read of the calibrated V

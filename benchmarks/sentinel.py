@@ -6,9 +6,9 @@ under ``benchmarks/history/``.  The sentinel walks both records,
 extracts every comparable timing metric, and flags regressions with a
 noise-aware relative tolerance:
 
+  * keys ending ``_per_s`` / ``_per_wall_s`` are HIGHER-is-better rates;
   * keys ending ``_us``, ``us_per_*``, ``wall_s``, ``*_ms`` are
     LOWER-is-better timings;
-  * keys ending ``_per_s`` are HIGHER-is-better rates;
   * everything else (accuracies, counts, provenance) is ignored.
 
 A metric regresses when it worsens by more than ``tolerance`` relative
@@ -46,8 +46,12 @@ BENCH_FILES = ("BENCH_stream.json", "BENCH_aggplane.json", "BENCH_robustness.jso
 TIME_SUFFIXES = ("_us", "_ms", "wall_s", "_s_per_call")
 #: key substrings marking LOWER-is-better timings
 TIME_INFIXES = ("us_per_",)
-#: key suffixes marking HIGHER-is-better rates
-RATE_SUFFIXES = ("_per_s",)
+#: key suffixes marking HIGHER-is-better rates.  "_per_wall_s" must be
+#: listed explicitly: rates are matched BEFORE times, and without it
+#: "updates_per_wall_s" would fall through to the "wall_s" TIME suffix
+#: and be graded lower-is-better — a throughput gain would read as a
+#: regression.
+RATE_SUFFIXES = ("_per_s", "_per_wall_s")
 
 #: sections that never carry comparable timings (provenance, telemetry)
 SKIP_SECTIONS = ("telemetry", "spans", "provenance", "detection")

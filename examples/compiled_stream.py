@@ -1,0 +1,124 @@
+"""Compiled serving loop walkthrough — the device-resident megastep.
+
+    PYTHONPATH=src python examples/compiled_stream.py
+
+The legacy async loop drives ONE arrival at a time through jit
+boundaries; at small model sizes ~99% of its wall clock is host
+dispatch.  ``repro.stream.megastep`` compiles the loop itself — event
+heap, local training, batched ingest, threshold flush, root-reference
+schedule, trust/monitor update, telemetry ring, all inside one
+``lax.scan``.  This tour shows:
+
+  1. the spec-plane switch: ``AsyncRegime(compiled=True)`` — same
+     experiment, same history keys, one field;
+  2. what the fusion buys: legacy vs compiled updates/wall-s on the
+     identical workload (compile time included — a deployment pays it
+     once);
+  3. the correctness contract: megastep(block=1) replays the per-event
+     host loop BIT FOR BIT (params, drops, per-flush metrics), because
+     both read the same hash-derived event/batch/latency plane;
+  4. the megastep boundary: what rides the scan carry, what is
+     precomputed per chunk, what stays at the host boundary (see
+     ROADMAP "Compiled serving loop").
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.api import (
+    AggregationSpec,
+    AsyncRegime,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    TelemetrySpec,
+    TrustSpec,
+)
+from repro.api import compile as api_compile
+
+
+def banner(s):
+    print(f"\n=== {s} " + "=" * max(8, 60 - len(s)))
+
+
+def main():
+    base = ExperimentSpec(
+        data=DataSpec(dataset="emnist", n_workers=10, beta=0.5,
+                      malicious_fraction=0.3),
+        model=ModelSpec("mlp"),
+        aggregation=AggregationSpec(algorithm="drag"),
+        trust=TrustSpec(enabled=True),
+        telemetry=TelemetrySpec(enabled=True),
+        # enough flushes that the megastep's one-time trace amortises —
+        # at toy scale the compile IS the cost, and a serving deployment
+        # pays it exactly once
+        regime=AsyncRegime(
+            flushes=600, concurrency=8, buffer_capacity=4,
+            latency="exponential", local_steps=2, batch_size=4,
+            discount="poly", eval_every=300,
+        ),
+        seed=0,
+    )
+
+    banner("1. one declarative switch: AsyncRegime(compiled=True)")
+    compiled_spec = dataclasses.replace(
+        base, regime=dataclasses.replace(base.regime, compiled=True)
+    ).validate()
+    print("  regime:", compiled_spec.regime.kind,
+          "compiled =", compiled_spec.regime.compiled,
+          "| block = buffer_capacity, chunk = eval_every (the defaults)")
+
+    banner("2. legacy loop vs compiled megastep, same workload")
+    t0 = time.time()
+    h_legacy = api_compile(base).run()
+    legacy_s = time.time() - t0
+    t0 = time.time()
+    h_comp = api_compile(compiled_spec).run()
+    comp_s = time.time() - t0
+    print(f"  legacy  : {h_legacy['updates_total']} updates in {legacy_s:5.1f}s "
+          f"-> {h_legacy['updates_per_wall_s']:7.1f} upd/s")
+    print(f"  compiled: {h_comp['updates_total']} updates in {comp_s:5.1f}s "
+          f"-> {h_comp['updates_per_wall_s']:7.1f} upd/s (incl. compile)")
+    spans = h_comp["telemetry"]["spans"]
+    ms = spans["megastep"]
+    n_chunks = int(ms["count"])
+    print("  compiled chunks ran as", n_chunks,
+          "megastep span(s); host touched the loop once per chunk")
+    if n_chunks > 1:
+        # the longest span carries the one-time trace; the rest are the
+        # steady state a serving deployment actually runs at
+        warm_s = ms["total_ms"] / 1e3 - ms["max_us"] / 1e6
+        warm_updates = h_comp["updates_total"] * (n_chunks - 1) / n_chunks
+        print(f"  warm megastep rate (compile excluded): "
+              f"{warm_updates / warm_s:7.1f} upd/s")
+
+    banner("3. the contract: block=1 replays the host loop bit for bit")
+    # the megastep flushes through the UNCHANGED server.flush, and the
+    # hash-mode event plane (counter-keyed hashes + the block-drawn f32
+    # arrivals table) is shared by both drivers, so the per-event
+    # oracle in tests/test_megastep.py pins params, drop counters,
+    # every per-flush metric, the trust table and the telemetry ring.
+    for k in ("flush", "accuracy"):
+        print(f"  history[{k!r}]  legacy={h_legacy[k]}  compiled={h_comp[k]}")
+    # NOTE: legacy (mt-sampler) and compiled (hash-sampler) histories
+    # agree in SHAPE, not bits — the bit-for-bit twin of the compiled
+    # run is serve_unrolled, the per-event driver of the same hash
+    # regime.  Accuracies land close because the workload is identical
+    # in distribution:
+    da = max(abs(a - b) for a, b in zip(h_legacy["accuracy"], h_comp["accuracy"]))
+    print(f"  max |accuracy diff| across evals: {da:.3f}")
+
+    banner("4. the megastep boundary (ROADMAP 'Compiled serving loop')")
+    print("  scan carry : params, drag, buffer, adversary, trust, monitor,")
+    print("               key, event heap + snapshots, root reference, ring")
+    print("  chunk xs   : arrivals slice, root-batch stack, refresh schedule")
+    print("  host, once per chunk: eval, ring drain, alert decode, span")
+    tel = h_comp["telemetry"]
+    print("  drained ring bundles:", tel["flushes_recorded"],
+          "| drops_total:", tel["drops_total"])
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,24 @@ class BiasedLatency(LatencyModel):
         )
         return self.base.sample(rng, client_id) * float(bias)
 
+    def icdf(self, u, client_id):
+        # HOST-side only (the bias callback needs concrete ids); the
+        # device megastep gathers the same f32 biases from a precomputed
+        # per-client table instead — one elementwise multiply after the
+        # base inverse CDF either way, so both paths are bit-identical
+        import jax.numpy as jnp
+        import numpy as np
+
+        cids = np.atleast_1d(np.asarray(client_id))
+        bias = np.array(
+            [
+                self.adversary.latency_bias(int(c), bool(self.malicious_lookup(int(c))))
+                for c in cids
+            ],
+            np.float32,
+        ).reshape(np.shape(client_id))
+        return self.base.icdf(u, client_id) * jnp.asarray(bias)
+
 
 class BufferFlood(engine.Adversary):
     """Byzantine clients race the ingest buffer (see module docstring).

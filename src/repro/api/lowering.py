@@ -135,6 +135,19 @@ def stream_config(spec: ExperimentSpec) -> StreamConfig:
     )
 
 
+def megastep_params(spec: ExperimentSpec) -> dict:
+    """Compiled-serving lowering: the AsyncRegime megastep knobs ->
+    ``repro.stream.megastep.CompiledStream`` constructor kwargs.  The
+    documented ``0 = derive`` defaults resolve here: block 0 -> K (whole
+    flush per vmapped batch), chunk 0 -> eval_every (evals land exactly
+    on megastep boundaries)."""
+    regime = spec.regime
+    return dict(
+        block=regime.compiled_block or regime.buffer_capacity,
+        chunk=regime.compiled_chunk or regime.eval_every,
+    )
+
+
 def stream_config_from_round(
     cfg: RoundConfig, capacity: int, shards: int = 0
 ) -> StreamConfig:

@@ -251,6 +251,18 @@ class AsyncRegime:
     root_refresh_every: int = 1  # r^t cache coarsening (1 = exact)
     root_cache: bool = True  # version-keyed RootReferenceCache
     eval_every: int = 10  # in flushes
+    compiled: bool = False  # device-resident megastep serving loop
+    #   (repro.stream.megastep): the whole event->ingest->flush cycle as
+    #   one lax.scan, host round-trips only at eval/telemetry boundaries.
+    #   Requires a latency model with an inverse CDF (all built-ins) and
+    #   swaps the MT19937 host sampling for the hash-mode event plane —
+    #   a distinct-but-deterministic regime, pinned bit-for-bit against
+    #   its own per-event unrolled execution (tests/test_megastep.py)
+    compiled_block: int = 0  # events per vmapped client-update batch
+    #   inside the megastep; 0 = K (whole flush), 1 = the unrolled
+    #   oracle's per-event structure. Must divide buffer_capacity
+    compiled_chunk: int = 0  # flushes per megastep host round-trip;
+    #   0 = eval_every (evals land exactly on chunk boundaries)
 
     def __post_init__(self):
         object.__setattr__(

@@ -166,6 +166,28 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
                 f"unknown staleness discount {regime.discount!r}; "
                 f"have {sorted(DISCOUNTS)}"
             )
+        if regime.compiled_block < 0:
+            _err(f"compiled_block must be >= 0, got {regime.compiled_block}")
+        if regime.compiled_chunk < 0:
+            _err(f"compiled_chunk must be >= 0, got {regime.compiled_chunk}")
+        if regime.compiled:
+            from repro.stream.events import LatencyModel, make_latency
+
+            lat = make_latency(regime.latency, **dict(regime.latency_kw))
+            if type(lat).icdf is LatencyModel.icdf:
+                _err(
+                    f"latency {regime.latency!r} has no inverse CDF — the "
+                    "compiled megastep draws arrivals through "
+                    "LatencyModel.icdf; use a built-in model or add one"
+                )
+            if (
+                regime.compiled_block
+                and regime.buffer_capacity % regime.compiled_block != 0
+            ):
+                _err(
+                    f"compiled_block={regime.compiled_block} must divide "
+                    f"buffer_capacity={regime.buffer_capacity}"
+                )
     if regime.kind == "sharded":
         if regime.shards < 1:
             _err(f"shards must be >= 1, got {regime.shards}")
@@ -187,6 +209,12 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
                 f"shards={regime.shards} without a pod mesh: pass mesh="
                 f"repro.launch.mesh.make_pod_mesh({regime.shards}) or set "
                 "emulate=True for single-device emulation"
+            )
+        if regime.compiled and mesh is not None:
+            _err(
+                "compiled=True runs the megastep on the single-device "
+                "emulation path only; drop the pod mesh or set "
+                "compiled=False"
             )
 
     # ---- adversary name + typed kwargs against the live registry

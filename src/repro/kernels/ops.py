@@ -11,6 +11,9 @@ the same calls compile to Mosaic.
 """
 from __future__ import annotations
 
+import math
+import os
+import time
 from functools import partial
 
 import jax
@@ -95,6 +98,96 @@ def _block_sizes(s: int, d: int) -> tuple[int, int]:
     return bs, _lane_block(d) if d % 128 == 0 else d
 
 
+# ------------------------------------------------------- autotune cache
+# Measured per-(op, S, d, dtype) block-size selection for the two flush
+# kernels (``dot_norms`` / ``blend_reduce``), memoized in-process.
+#
+# OPT-IN ONLY (``REPRO_AUTOTUNE=1`` or :func:`set_autotune`): the block
+# split IS the f32 reduction order, so a measured tile that differs from
+# the static ``_block_sizes`` choice changes results by reassociation
+# ULPs — which would break the bit-for-bit oracles (sync<->async bridge,
+# megastep-vs-unrolled) if it were ever on by default.
+_AUTOTUNE = os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0", "false")
+_AUTOTUNE_CACHE: dict = {}  # (op, s, d, dtype) -> (block_s, block_d)
+_AUTOTUNE_TRIALS = 3
+
+
+def set_autotune(enabled: bool) -> None:
+    """Toggle measured block-size selection (process-wide)."""
+    global _AUTOTUNE
+    _AUTOTUNE = bool(enabled)
+
+
+def autotune_report() -> dict:
+    """JSON-safe provenance of every measured choice this process made —
+    benchmarks attach it next to their timing cells."""
+    return {
+        f"{op}[{s}x{d}:{dt}]": {"block_s": bs, "block_d": bd}
+        for (op, s, d, dt), (bs, bd) in sorted(_AUTOTUNE_CACHE.items())
+    }
+
+
+def _block_candidates(s: int, d: int) -> list[tuple[int, int]]:
+    """Legal (bs, bd) tiles for an ALIGNED [s, d] problem: bs from the
+    sublane ladder (divisors of s), bd from the aligned-128 divisor set
+    under the VMEM cap — every candidate satisfies the same Mosaic
+    constraints ``_block_sizes`` does."""
+    bs0, bd0 = _block_sizes(s, d)
+    bss = {bs0} | {b for b in (8, 16, 32) if s % b == 0}
+    bds = {bd0}
+    if d % 128 == 0:
+        for bd in (128, 1024, 8192, _MAX_LANE_TILE, d):
+            if bd <= min(d, _MAX_LANE_TILE) and d % bd == 0:
+                bds.add(bd)
+    return [(bs, bd) for bs in sorted(bss) for bd in sorted(bds)]
+
+
+def _time_call(fn) -> float:
+    jax.block_until_ready(fn())  # compile + warm outside the timer
+    best = math.inf
+    for _ in range(_AUTOTUNE_TRIALS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tuned_blocks(op: str, s: int, d: int, dtype, interpret: bool) -> tuple[int, int]:
+    """The measured (block_s, block_d) for one kernel shape, cached.
+
+    Measurement runs EAGERLY on synthetic inputs of the caller's shape —
+    only shapes/dtypes are read from the (possibly traced) caller
+    arrays, so this is safe to hit from inside a jit trace."""
+    key = (op, s, d, str(dtype))
+    if key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    g1 = jnp.ones((s, d), dtype)
+    r1 = jnp.ones((d,), dtype)
+    w1 = jnp.ones((s,), jnp.float32)
+
+    def call(bs, bd):
+        if op == "dot_norms":
+            return dk.dot_norms(g1, r1, block_s=bs, block_d=bd, interpret=interpret)
+        return dk.blend_reduce(g1, r1, w1, w1, block_s=bs, block_d=bd,
+                               interpret=interpret)
+
+    best, best_t = _block_sizes(s, d), math.inf
+    for bs, bd in _block_candidates(s, d):
+        t = _time_call(lambda: call(bs, bd))
+        if t < best_t:
+            best, best_t = (bs, bd), t
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+def _select_blocks(op: str, gp, interpret: bool) -> tuple[int, int]:
+    """Static tiling policy, or the measured choice when autotune is on."""
+    s, d = gp.shape
+    if not _AUTOTUNE:
+        return _block_sizes(s, d)
+    return _tuned_blocks(op, s, d, gp.dtype, interpret)
+
+
 def _pad_grid(g, r, pad_s: bool = True):
     """Zero-pad G (rows and/or lanes) and r (lanes) to tile-aligned shapes.
 
@@ -146,7 +239,7 @@ def dot_norms_stats(g, r, interpret: bool | None = None):
     """
     interpret = _interpret_default() if interpret is None else interpret
     gp, rp, s, _ = _pad_grid(g, r)
-    bs, bd = _block_sizes(*gp.shape)
+    bs, bd = _select_blocks("dot_norms", gp, interpret)
     dots, gsq, rsq = dk.dot_norms(gp, rp, block_s=bs, block_d=bd, interpret=interpret)
     return dots[:s], gsq[:s], rsq  # padded zero rows sliced off
 
@@ -162,7 +255,7 @@ def blend_reduce(g, r, aw, bw, interpret: bool | None = None):
     if gp.shape[0] != s:
         aw, _ = _pad_to(aw, gp.shape[0], axis=0)
         bw, _ = _pad_to(bw, gp.shape[0], axis=0)
-    bs, bd = _block_sizes(*gp.shape)
+    bs, bd = _select_blocks("blend_reduce", gp, interpret)
     out = dk.blend_reduce(gp, rp, aw, bw, block_s=bs, block_d=bd, interpret=interpret)
     return out[:d]
 

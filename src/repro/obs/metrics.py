@@ -259,6 +259,26 @@ def make_ring_push():
     return jax.jit(ring_push, donate_argnums=(0,))
 
 
+def ring_tail(ring: MetricsRing, n: int) -> "list[MetricsBundle]":
+    """The most recent ``n`` retained bundles, oldest first, as bundle
+    pytrees (host-side).
+
+    The compiled megastep's drain: each chunk pushes its flushes into
+    the scan-carried transport ring, then the driver re-records them
+    into the telemetry session one bundle at a time — preserving the
+    legacy per-flush ``record_flush`` semantics (and retention) exactly.
+    """
+    cap = jax.tree.leaves(ring.bundles)[0].shape[0]
+    n = min(n, int(ring.total), cap)
+    start = int(ring.cursor) - n  # may be negative: wraps
+    host = jax.tree.map(np.asarray, ring.bundles)
+    out = []
+    for i in range(n):
+        slot = (start + i) % cap
+        out.append(jax.tree.map(lambda a, s=slot: a[s], host))
+    return out
+
+
 def ring_read(ring: MetricsRing) -> list[dict]:
     """Host-side drain: the retained bundles, oldest first, as dicts."""
     cap = jax.tree.leaves(ring.bundles)[0].shape[0]

@@ -120,6 +120,40 @@ def ingest(
     )
 
 
+def ingest_batch(buf: BufferState, rows, dispatch_rounds, malicious,
+                 client_ids) -> BufferState:
+    """Write B already-flat upload rows in one segment-scatter.
+
+    Bit-equivalent to B sequential :func:`ingest` calls: the fill count
+    is monotone, so row i lands in slot ``count + i`` iff that is still
+    inside the buffer; later rows are DROPPED (scatter ``mode="drop"``
+    discards their out-of-bounds writes) and accounted in the same
+    cumulative per-client-hash ``drops`` buckets, one scatter-add.  This
+    is the megastep's ingest: one write per [B, d] block instead of B
+    jit round-trips.
+    """
+    b, k = rows.shape[0], capacity_of(buf)
+    pos = buf.count + jnp.arange(b, dtype=jnp.int32)
+    keep = pos < k
+    slot = jnp.where(keep, pos, k)  # k = one past the end -> dropped
+    return BufferState(
+        slots=buf.slots.at[slot].set(rows.astype(jnp.float32), mode="drop"),
+        dispatch_rounds=buf.dispatch_rounds.at[slot].set(
+            jnp.asarray(dispatch_rounds, jnp.int32), mode="drop"
+        ),
+        malicious=buf.malicious.at[slot].set(
+            jnp.asarray(malicious, bool), mode="drop"
+        ),
+        count=buf.count + keep.astype(jnp.int32).sum(),
+        client_ids=buf.client_ids.at[slot].set(
+            jnp.asarray(client_ids, jnp.int32), mode="drop"
+        ),
+        drops=buf.drops.at[drop_bucket(client_ids)].add(
+            (~keep).astype(jnp.int32)
+        ),
+    )
+
+
 def reset(buf: BufferState) -> BufferState:
     """Empty the buffer without touching slot storage."""
     return buf._replace(count=jnp.zeros((), jnp.int32))
@@ -143,3 +177,8 @@ def as_stack(buf: BufferState, spec: flat_mod.StackSpec, server_round) -> flat_m
 def make_ingest_fn():
     """Jitted donated ingest: the buffer argument is consumed in place."""
     return jax.jit(ingest, donate_argnums=(0,))
+
+
+def make_ingest_batch_fn():
+    """Jitted donated batch ingest (one segment-scatter per [B, d] block)."""
+    return jax.jit(ingest_batch, donate_argnums=(0,))

@@ -12,14 +12,34 @@ Latency models are pluggable (:data:`LATENCIES`); completion events pop
 in virtual-time order with FIFO tie-breaking, so the zero-latency model
 degenerates to exact dispatch order — the property the sync bridge
 (``repro.fl.bridge``) relies on.
+
+Two sampling modes share the simulator:
+
+  * ``sampler="mt"`` (default, legacy): client ids and latencies come
+    from a sequential ``np.random.RandomState`` — faithful to the
+    original host loop but impossible to replay inside ``jax.jit``.
+  * ``sampler="hash"``: every draw is a pure function of the dispatch
+    sequence number through a 32-bit counter hash (:func:`hash_unit`)
+    and the latency model's inverse CDF (:meth:`LatencyModel.icdf`).
+    The SAME draw functions power the jittable device-resident
+    simulator (:class:`DeviceEventState` / :func:`device_step` /
+    :func:`drain_events`) that the compiled serving megastep
+    (``repro.stream.megastep``) scans over, so the batched device
+    sampler replays the per-event host stream bit for bit — the
+    property ``tests/test_megastep.py`` proves by hypothesis.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import math
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.stream.buffer import mix32
 
 
 # ---------------------------------------------------------------- hashing
@@ -37,12 +57,68 @@ def client_uniform(seed: int, client_id: int, salt: int) -> float:
     return h / float(1 << 64)
 
 
+# ------------------------------------------------- 32-bit hash plane
+# SplitMix64 needs uint64, which jax disables by default (x64 off), so
+# the jittable twin of the hash plane is 32-bit: the stream plane's own
+# ``mix32`` finaliser (repro.stream.buffer) over a salted counter.  ALL
+# hash-mode draws — host EventStream replay and the device megastep —
+# go through these exact functions, which is what makes the compiled
+# path bit-for-bit against the per-event loop.
+_GOLDEN32 = 0x9E3779B9
+SALT_CLIENT = 0x5EED  # which client a dispatch goes to (counter = seq)
+SALT_LATENCY = 0x1A7E  # the latency CDF draw (counter = seq)
+SALT_MALICIOUS = 0xBAD  # Byzantine control (counter = client id)
+SALT_STRAGGLER = 0xD1  # device-speed class (counter = client id)
+SALT_BATCH = 0xB47C  # local-batch sample indices (counter = seq * UB + j)
+SALT_FLIP = 0xF11F  # label-flip coin per sample (counter = seq * UB + j)
+
+
+def hash_u32(seed, salt: int, ctr) -> jax.Array:
+    """Counter-keyed uint32 hash: two mix32 rounds over a salted seed."""
+    base = jnp.uint32(seed) ^ (jnp.uint32(salt) * jnp.uint32(_GOLDEN32))
+    return mix32(mix32(base) ^ jnp.asarray(ctr, jnp.uint32))
+
+
+def hash_unit(seed, salt: int, ctr) -> jax.Array:
+    """Uniform f32 in [0, 1) from the top 24 hash bits (exact in f32, so
+    host numpy scalars and device arrays convert identically)."""
+    h = hash_u32(seed, salt, ctr) >> jnp.uint32(8)
+    return h.astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def client_unit32(seed, client_id, salt: int) -> jax.Array:
+    """32-bit twin of :func:`client_uniform` (hash mode / device path)."""
+    return hash_unit(seed, salt, client_id)
+
+
+def hash_client_ids(seed, seqs, n_clients: int) -> jax.Array:
+    """Client id(s) for dispatch seq number(s): uniform over [0, M)."""
+    u = hash_unit(seed, SALT_CLIENT, seqs)
+    cid = (u * jnp.float32(n_clients)).astype(jnp.int32)
+    return jnp.minimum(cid, n_clients - 1)
+
+
 # ---------------------------------------------------------------- latency
 class LatencyModel:
-    """Round-trip latency (dispatch -> completed upload) in virtual time."""
+    """Round-trip latency (dispatch -> completed upload) in virtual time.
+
+    ``sample`` is the sequential (MT19937) draw; ``icdf`` is the
+    hash-mode inverse CDF over a uniform ``u`` — pure jnp so the same
+    transform runs per-event on the host and batched inside the
+    compiled megastep.  Hash-mode per-client properties (the straggler
+    speed class) use the 32-bit :func:`client_unit32` hash, so the two
+    sampling modes are distinct-but-each-deterministic regimes.
+    """
 
     def sample(self, rng: np.random.RandomState, client_id: int) -> float:
         raise NotImplementedError
+
+    def icdf(self, u, client_id):
+        """Latency at quantile ``u`` (f32, vectorized, jittable)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no inverse CDF — hash-mode "
+            "event sampling (AsyncRegime.compiled) needs one"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +127,9 @@ class Constant(LatencyModel):
 
     def sample(self, rng, client_id):
         return self.value
+
+    def icdf(self, u, client_id):
+        return jnp.full(jnp.shape(u), self.value, jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +140,9 @@ class Uniform(LatencyModel):
     def sample(self, rng, client_id):
         return float(rng.uniform(self.lo, self.hi))
 
+    def icdf(self, u, client_id):
+        return jnp.float32(self.lo) + jnp.float32(self.hi - self.lo) * u
+
 
 @dataclasses.dataclass(frozen=True)
 class Exponential(LatencyModel):
@@ -68,6 +150,9 @@ class Exponential(LatencyModel):
 
     def sample(self, rng, client_id):
         return float(rng.exponential(self.scale))
+
+    def icdf(self, u, client_id):
+        return -jnp.float32(self.scale) * jnp.log1p(-u)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +162,12 @@ class LogNormal(LatencyModel):
 
     def sample(self, rng, client_id):
         return float(rng.lognormal(self.mu, self.sigma))
+
+    def icdf(self, u, client_id):
+        from jax.scipy.special import ndtri
+
+        # u = 0 maps to exp(-inf) = 0 — a valid (instant) latency
+        return jnp.exp(jnp.float32(self.mu) + jnp.float32(self.sigma) * ndtri(u))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +185,12 @@ class Straggler(LatencyModel):
     def sample(self, rng, client_id):
         u = client_uniform(self.seed, client_id, salt=0xD1)
         return self.base.sample(rng, client_id) * (1.0 + self.spread * u * u)
+
+    def icdf(self, u, client_id):
+        cu = client_unit32(self.seed, client_id, SALT_STRAGGLER)
+        return self.base.icdf(u, client_id) * (
+            jnp.float32(1.0) + jnp.float32(self.spread) * cu * cu
+        )
 
 
 LATENCIES = {
@@ -143,13 +240,21 @@ class EventStream:
         seed: int = 0,
         malicious_fraction: float = 0.0,
         malicious_lookup=None,  # optional callable client_id -> bool
+        sampler: str = "mt",  # "mt" (sequential RandomState) | "hash"
     ):
+        if sampler not in ("mt", "hash"):
+            raise ValueError(f"unknown sampler {sampler!r}; use 'mt' or 'hash'")
         self.n_clients = int(n_clients)
         self.latency = make_latency(latency) if isinstance(latency, str) else latency
         self.seed = seed
         self.malicious_fraction = float(malicious_fraction)
         self._malicious_lookup = malicious_lookup
+        self.sampler = sampler
         self._rng = np.random.RandomState(seed)
+        self._arrivals = (
+            HashArrivals(seed, self.latency, self.n_clients)
+            if sampler == "hash" else None
+        )
         self._heap: list = []
         self._seq = 0
         self.now = 0.0
@@ -161,22 +266,53 @@ class EventStream:
             return bool(self._malicious_lookup(client_id))
         if self.malicious_fraction <= 0.0:
             return False
+        if self.sampler == "hash":
+            # compare in f32 through jnp so the verdict matches the
+            # device sampler's even when the fraction is not f32-exact
+            return bool(
+                client_unit32(self.seed, client_id, SALT_MALICIOUS)
+                < jnp.float32(self.malicious_fraction)
+            )
         return client_uniform(self.seed, client_id, salt=0xBAD) < self.malicious_fraction
 
     # ---- scheduling
     def dispatch(self, server_round: int, client_id: int | None = None) -> ClientEvent:
         """Schedule one job; samples a client UAR unless one is given."""
-        if client_id is None:
-            client_id = int(self._rng.randint(0, self.n_clients))
-        dt = self.latency.sample(self._rng, client_id)
+        if self.sampler == "hash":
+            if client_id is None:
+                client_id = int(hash_client_ids(self.seed, self._seq, self.n_clients))
+                # the block-materialised arrivals table — the same f32
+                # values the device sampler gathers, so replay is
+                # bit-for-bit
+                dt = self._arrivals.dt(self._seq)
+            else:
+                # explicitly-targeted dispatch (bridge oracle): the table
+                # is keyed on the hash-drawn client, so draw directly
+                dt = float(
+                    self.latency.icdf(
+                        hash_unit(self.seed, SALT_LATENCY, self._seq),
+                        int(client_id),
+                    )
+                )
+        else:
+            if client_id is None:
+                client_id = int(self._rng.randint(0, self.n_clients))
+            dt = self.latency.sample(self._rng, client_id)
         if not (math.isfinite(dt) and dt >= 0.0):
             raise ValueError(f"latency model produced invalid delay {dt!r}")
+        # hash mode accumulates virtual time in f32 (the device sampler's
+        # dtype) so host clocks hold exactly the values the megastep sees
+        completion = (
+            float(np.float32(self.now) + np.float32(dt))
+            if self.sampler == "hash"
+            else self.now + dt
+        )
         ev = ClientEvent(
             seq=self._seq,
             client_id=int(client_id),
             dispatch_round=int(server_round),
             dispatch_time=self.now,
-            completion_time=self.now + dt,
+            completion_time=completion,
             malicious=self.is_malicious(int(client_id)),
         )
         # FIFO tie-break on equal completion times (zero-latency determinism)
@@ -195,3 +331,179 @@ class EventStream:
 
     def in_flight(self) -> int:
         return len(self._heap)
+
+
+# ------------------------------------------------- arrival-time table
+#: arrivals are materialised in fixed blocks so every instance evaluates
+#: the inverse CDF on identical [ARRIVAL_BLOCK] vectors — vectorized
+#: transcendentals (exp/ndtri) are only reproducible for identical call
+#: shapes, so a request-dependent growth pattern could desynchronise two
+#: replicas by remainder-lane ULPs
+ARRIVAL_BLOCK = 1024
+
+
+class HashArrivals:
+    """Append-only table of hash-mode latency draws, dt per dispatch seq.
+
+    THE vectorized arrival generator: one batched inverse-CDF pass per
+    block instead of a transcendental per dispatch.  Both consumers of
+    hash mode — the per-event host :class:`EventStream` replay and the
+    compiled megastep's device simulator — read (slices of) this same
+    f32 table, which is what makes them bit-for-bit: integer hash draws
+    (client ids, Byzantine flags) are fusion-stable and stay functional,
+    but latency transforms chain rounded f32 ops whose compiled fusion
+    (e.g. FMA contraction inside a scan body) need not match an eager
+    per-event evaluation.
+
+    ``bias_table`` ([n_clients] f32) applies arrival-shaping adversaries
+    (``repro.adversary.stream_attacks``) as one elementwise multiply —
+    the same two-op structure ``BiasedLatency.icdf`` performs, so a
+    wrapped latency and a base latency + table produce identical bits.
+    """
+
+    def __init__(self, seed, latency: LatencyModel, n_clients: int, *,
+                 bias_table=None):
+        self.seed = seed
+        self.latency = latency
+        self.n_clients = int(n_clients)
+        self.bias_table = None if bias_table is None else jnp.asarray(bias_table)
+        self._dt = np.zeros((0,), np.float32)
+
+    def upto(self, n: int) -> np.ndarray:
+        """The dt table covering seqs [0, n), growing block-aligned."""
+        while len(self._dt) < n:
+            s0 = len(self._dt)
+            seqs = jnp.arange(s0, s0 + ARRIVAL_BLOCK, dtype=jnp.int32)
+            cid = hash_client_ids(self.seed, seqs, self.n_clients)
+            dt = self.latency.icdf(hash_unit(self.seed, SALT_LATENCY, seqs), cid)
+            if self.bias_table is not None:
+                dt = dt * self.bias_table[cid]
+            self._dt = np.concatenate([self._dt, np.asarray(dt, np.float32)])
+        return self._dt
+
+    def dt(self, seq: int) -> float:
+        return float(self.upto(seq + 1)[seq])
+
+
+# ------------------------------------------------- device-resident sim
+class DeviceEventState(NamedTuple):
+    """The hash-mode event heap as fixed-shape arrays (one row per
+    in-flight job, W = dispatch concurrency).  The megastep scans
+    :func:`device_step` over this; snapshots of the dispatch-time params
+    live next to it in the megastep carry, indexed by the same slot.
+    """
+
+    now: jax.Array  # [] f32 — virtual clock
+    next_seq: jax.Array  # [] i32 — next dispatch sequence number
+    comp_time: jax.Array  # [W] f32 — per-slot completion times
+    seq: jax.Array  # [W] i32 — dispatch seq of the job in each slot
+    client: jax.Array  # [W] i32 — client ids
+    disp_round: jax.Array  # [W] i32 — server version at dispatch
+    malicious: jax.Array  # [W] bool — Byzantine control flags
+
+
+def _draw_jobs(seed, seqs, now, dt_table, n_clients, *, malicious_fraction=0.0,
+               malicious_table=None, dt_offset=0):
+    """Hash-mode dispatch draw(s) for sequence number(s) ``seqs``.
+
+    Latencies come from the precomputed :class:`HashArrivals` table
+    (``dt_table``, indexed by ``seq - dt_offset`` so a chunked caller can
+    ship just the slice its seqs cover); client ids and Byzantine flags
+    are functional — their integer/exact-f32 ops are identical under any
+    compilation context, so they need no table."""
+    cid = hash_client_ids(seed, seqs, n_clients)
+    dt = dt_table[seqs - jnp.asarray(dt_offset, jnp.int32)]
+    if malicious_table is not None:
+        mal = malicious_table[cid]
+    elif malicious_fraction > 0.0:
+        mal = client_unit32(seed, cid, SALT_MALICIOUS) < jnp.float32(malicious_fraction)
+    else:
+        mal = jnp.zeros(jnp.shape(seqs), bool)
+    return cid, jnp.float32(now) + dt, mal
+
+
+def device_stream_init(seed, n_clients: int, concurrency: int, dt_table,
+                       *, malicious_fraction: float = 0.0,
+                       malicious_table=None) -> DeviceEventState:
+    """W primed jobs at t=0 — the pipeline-fill the host loop does with
+    W sequential ``dispatch(0)`` calls (hash draws are counter-keyed,
+    so the vectorized prime is the same stream)."""
+    seqs = jnp.arange(concurrency, dtype=jnp.int32)
+    cid, comp, mal = _draw_jobs(
+        seed, seqs, jnp.float32(0.0), dt_table, n_clients,
+        malicious_fraction=malicious_fraction, malicious_table=malicious_table,
+    )
+    return DeviceEventState(
+        now=jnp.float32(0.0),
+        next_seq=jnp.int32(concurrency),
+        comp_time=comp,
+        seq=seqs,
+        client=cid,
+        disp_round=jnp.zeros((concurrency,), jnp.int32),
+        malicious=mal,
+    )
+
+
+def device_step(state: DeviceEventState, server_round, seed, n_clients: int,
+                dt_table, *, malicious_fraction: float = 0.0,
+                malicious_table=None, dt_offset=0):
+    """Pop the earliest completion (FIFO tie-break on seq — the heap's
+    lexicographic order) and re-dispatch a fresh job into the freed slot
+    at the popped virtual time.  Returns ``(state', popped)`` where
+    ``popped`` carries the completed event's fields plus its slot."""
+    tmin = jnp.min(state.comp_time)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    slot = jnp.argmin(
+        jnp.where(state.comp_time == tmin, state.seq, big)
+    ).astype(jnp.int32)
+    now = state.comp_time[slot]
+    popped = {
+        "slot": slot,
+        "seq": state.seq[slot],
+        "client": state.client[slot],
+        "dispatch_round": state.disp_round[slot],
+        "malicious": state.malicious[slot],
+        "time": now,
+    }
+    nseq = state.next_seq
+    cid, comp, mal = _draw_jobs(
+        seed, nseq, now, dt_table, n_clients,
+        malicious_fraction=malicious_fraction, malicious_table=malicious_table,
+        dt_offset=dt_offset,
+    )
+    state = DeviceEventState(
+        now=now,
+        next_seq=nseq + 1,
+        comp_time=state.comp_time.at[slot].set(comp),
+        seq=state.seq.at[slot].set(nseq),
+        client=state.client.at[slot].set(cid),
+        disp_round=state.disp_round.at[slot].set(jnp.asarray(server_round, jnp.int32)),
+        malicious=state.malicious.at[slot].set(mal),
+    )
+    return state, popped
+
+
+def drain_events(state: DeviceEventState, n_events: int, flush_every: int, completed0,
+                 seed, n_clients: int, dt_table, *,
+                 malicious_fraction: float = 0.0, malicious_table=None):
+    """THE batched sampler: pop + re-dispatch ``n_events`` completions as
+    one ``lax.scan``.  ``flush_every`` = buffer capacity K — the serving
+    loop flushes after every K-th completion and re-dispatches BEFORE
+    the flush, so event i re-dispatches at server round floor(i / K).
+    ``dt_table`` must cover seqs [0, completed0 + n_events + W).
+    Returns ``(state', events)`` with events stacked ``[n_events]``."""
+
+    def body(carry, _):
+        st, completed = carry
+        rnd = completed // flush_every
+        st, ev = device_step(
+            st, rnd, seed, n_clients, dt_table,
+            malicious_fraction=malicious_fraction,
+            malicious_table=malicious_table,
+        )
+        return (st, completed + 1), ev
+
+    (state, _), events = jax.lax.scan(
+        body, (state, jnp.asarray(completed0, jnp.int32)), None, length=n_events
+    )
+    return state, events

@@ -585,6 +585,7 @@ class AsyncStreamServer:
         session: obs_session.TelemetrySession | None = None,
     ):
         self.cfg = cfg
+        self.loss_fn = loss_fn  # the compiled megastep re-traces the flush
         # telemetry session (repro.obs): flush bundles ring-accumulate
         # here, host-side drop decisions mirror into its buckets, and the
         # ingest/flush host boundaries carry spans.  None = inert.
@@ -686,6 +687,31 @@ class AsyncStreamServer:
             # metrics dict here and accumulates in the session's ring
             self.session.record_flush(metrics.pop("obs", None))
             return metrics
+
+    def serve_compiled(
+        self, n_events: int, *, data, seed, key, concurrency: int,
+        local_steps: int, batch_size: int, latency, bias_table=None,
+        root_samples: int = 3000, rng=None, block: int = 0, chunk: int = 64,
+    ) -> dict:
+        """Complete ``n_events`` (a multiple of K) through the compiled
+        megastep (``repro.stream.megastep``): the whole event -> client
+        update -> ingest -> flush cycle runs as one lax.scan, with host
+        round-trips only at chunk boundaries.  Uses hash-mode event
+        sampling — a distinct-but-deterministic regime from the MT19937
+        host loop, pinned bit-for-bit against its own per-event unrolled
+        execution (``megastep.serve_unrolled``).  The first call builds
+        the driver; later calls continue the same stream (the kwargs are
+        then ignored).  Returns stacked per-flush metrics arrays."""
+        from repro.stream import megastep as mega
+
+        if getattr(self, "_compiled", None) is None:
+            self._compiled = mega.CompiledStream(
+                self, data, seed=seed, key=key, concurrency=concurrency,
+                local_steps=local_steps, batch_size=batch_size,
+                latency=latency, bias_table=bias_table,
+                root_samples=root_samples, rng=rng, block=block, chunk=chunk,
+            )
+        return self._compiled.serve_events(n_events)
 
 
 # ------------------------------------------------------------- experiment
@@ -800,80 +826,124 @@ def run_stream_experiment(
     )
     malicious_lookup = lambda m: bool(data.malicious[m])  # noqa: E731
     latency = make_latency(regime.latency, **dict(regime.latency_kw))
-    if spec.attack.name != "none":
-        # async-native adversaries shape arrival times (buffer_flood /
-        # staleness_camouflage); for everything else the bias is 1.0
-        latency = BiasedLatency(latency, server.adversary, malicious_lookup)
-    stream = EventStream(
-        d.n_workers,
-        latency,
-        seed=spec.seed,
-        malicious_lookup=malicious_lookup,
-    )
 
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
     tb = data.test_batch()
     test_batch = {"x": jnp.asarray(tb["x"]), "y": jnp.asarray(tb["y"])}
-
-    # prime the pipeline: W concurrent jobs against the initial model
-    inflight: dict[int, pt.Pytree] = {}
-    for _ in range(regime.concurrency):
-        ev = stream.dispatch(server.t)
-        inflight[ev.seq] = server.params
 
     history = {
         "flush": [], "accuracy": [], "staleness_mean": [],
         "virtual_time": [], "wall_s": [], "update_norm": [],
     }
     t0 = time.time()
-    with session:
-        while server.t < regime.flushes:
-            ev = stream.next_completion()
-            snapshot = inflight.pop(ev.seq)
-            batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
-            batches = {
-                "x": jnp.asarray(batch_np["x"][0]),
-                "y": jnp.asarray(batch_np["y"][0]),
-            }
-            with obs_trace.span("client_update"):
-                g = server.client_update(snapshot, batches)
-            server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
 
-            # keep the pipeline full: re-dispatch against the CURRENT model
-            ev2 = stream.dispatch(server.t)
-            inflight[ev2.seq] = server.params
+    def record_eval(staleness_mean, virtual_time, update_norm, extra):
+        with obs_trace.span("eval"):
+            acc = float(eval_jit(server.params, test_batch))
+        history["flush"].append(server.t)
+        history["accuracy"].append(acc)
+        history["staleness_mean"].append(float(staleness_mean))
+        history["virtual_time"].append(float(virtual_time))
+        history["wall_s"].append(time.time() - t0)
+        history["update_norm"].append(float(update_norm))
+        if progress:
+            progress({"flush": server.t, "accuracy": acc, **extra})
 
-            metrics = None
-            if server.buffer_ready():
-                key, k_flush = jax.random.split(key)
-                root = None
-                if server.with_root:
-                    root_np = data.root_batches(
-                        rng, regime.local_steps, regime.batch_size, d.root_samples
+    if getattr(regime, "compiled", False):
+        # ---- compiled serving (repro.stream.megastep): the event loop
+        # runs device-resident, chunk boundaries are the only host stops —
+        # aligned on eval points so the eval cadence matches the host loop
+        from repro.stream.megastep import CompiledStream
+
+        bias = None
+        if spec.attack.name != "none":
+            # the arrival-shaping half of async-native adversaries, as
+            # the precomputed per-client table HashArrivals multiplies in
+            bias = np.array(
+                [
+                    server.adversary.latency_bias(m, malicious_lookup(m))
+                    for m in range(d.n_workers)
+                ],
+                np.float32,
+            )
+        cs = CompiledStream(
+            server, data, seed=spec.seed, key=key,
+            concurrency=regime.concurrency, local_steps=regime.local_steps,
+            batch_size=regime.batch_size, latency=latency, bias_table=bias,
+            root_samples=d.root_samples, rng=rng,
+            **lowering.megastep_params(spec),
+        )
+        with session:
+            while server.t < regime.flushes:
+                boundary = (server.t // regime.eval_every + 1) * regime.eval_every
+                c = min(boundary, regime.flushes) - server.t
+                mets = cs.serve_flushes(c)
+                if server.t % regime.eval_every == 0 or server.t == regime.flushes:
+                    record_eval(
+                        mets["staleness_mean"][-1], mets["virtual_time"][-1],
+                        mets["update_norm_mean"][-1],
+                        {k: float(v[-1]) for k, v in mets.items()},
                     )
-                    root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
-                metrics = server.flush_if_ready(k_flush, root)
+        updates_total = cs.events_done
+    else:
+        if spec.attack.name != "none":
+            # async-native adversaries shape arrival times (buffer_flood /
+            # staleness_camouflage); for everything else the bias is 1.0
+            latency = BiasedLatency(latency, server.adversary, malicious_lookup)
+        stream = EventStream(
+            d.n_workers,
+            latency,
+            seed=spec.seed,
+            malicious_lookup=malicious_lookup,
+        )
 
-            if metrics is not None and (
-                server.t % regime.eval_every == 0 or server.t == regime.flushes
-            ):
-                with obs_trace.span("eval"):
-                    acc = float(eval_jit(server.params, test_batch))
-                history["flush"].append(server.t)
-                history["accuracy"].append(acc)
-                history["staleness_mean"].append(float(metrics["staleness_mean"]))
-                history["virtual_time"].append(stream.now)
-                history["wall_s"].append(time.time() - t0)
-                history["update_norm"].append(float(metrics["update_norm_mean"]))
-                if progress:
-                    progress({
-                        "flush": server.t, "accuracy": acc,
-                        **{k: float(v) for k, v in metrics.items()},
-                    })
+        # prime the pipeline: W concurrent jobs against the initial model
+        inflight: dict[int, pt.Pytree] = {}
+        for _ in range(regime.concurrency):
+            ev = stream.dispatch(server.t)
+            inflight[ev.seq] = server.params
+
+        with session:
+            while server.t < regime.flushes:
+                ev = stream.next_completion()
+                snapshot = inflight.pop(ev.seq)
+                batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
+                batches = {
+                    "x": jnp.asarray(batch_np["x"][0]),
+                    "y": jnp.asarray(batch_np["y"][0]),
+                }
+                with obs_trace.span("client_update"):
+                    g = server.client_update(snapshot, batches)
+                server.ingest(g, ev.dispatch_round, ev.malicious, ev.client_id)
+
+                # keep the pipeline full: re-dispatch against the CURRENT model
+                ev2 = stream.dispatch(server.t)
+                inflight[ev2.seq] = server.params
+
+                metrics = None
+                if server.buffer_ready():
+                    key, k_flush = jax.random.split(key)
+                    root = None
+                    if server.with_root:
+                        root_np = data.root_batches(
+                            rng, regime.local_steps, regime.batch_size, d.root_samples
+                        )
+                        root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
+                    metrics = server.flush_if_ready(k_flush, root)
+
+                if metrics is not None and (
+                    server.t % regime.eval_every == 0 or server.t == regime.flushes
+                ):
+                    record_eval(
+                        metrics["staleness_mean"], stream.now,
+                        metrics["update_norm_mean"],
+                        {k: float(v) for k, v in metrics.items()},
+                    )
+        updates_total = stream.completed
 
     history["final_accuracy"] = history["accuracy"][-1] if history["accuracy"] else 0.0
-    history["updates_total"] = stream.completed
-    history["updates_per_wall_s"] = stream.completed / max(time.time() - t0, 1e-9)
+    history["updates_total"] = updates_total
+    history["updates_per_wall_s"] = updates_total / max(time.time() - t0, 1e-9)
     if server.root_cache is not None:
         history["root_cache_hits"] = server.root_cache.hits
         history["root_cache_misses"] = server.root_cache.misses

@@ -1,0 +1,436 @@
+"""Compiled serving megastep: batched sampler replay, batched ingest,
+and megastep-vs-unrolled bit-for-bit parity (ISSUE 8 acceptance).
+
+The oracle chain: ``serve_unrolled`` drives the SAME hash regime one
+event at a time through the host ``AsyncStreamServer`` methods (whose
+flush the sync bridge pins bit-for-bit in ``test_stream.py``), and the
+megastep at ``block=1`` must reproduce it exactly — params, drop
+counters, per-flush metrics, trust table, telemetry ring and monitor
+alerts included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.stream import buffer as buf_mod
+from repro.stream import events
+from repro.stream import megastep as mega
+from repro.stream.events import EventStream, HashArrivals, make_latency
+from repro.stream.server import AsyncStreamServer, StreamConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: seeded tests still run
+    HAVE_HYPOTHESIS = False
+
+SEED = 0
+
+
+# ------------------------------------------------ batched arrival sampler
+def _replay_host(latency, n_clients, w, k, n_events, mf, seed):
+    """Sequential reference: the hash-mode EventStream, one pop at a time."""
+    stream = EventStream(
+        n_clients, latency, seed=seed, malicious_fraction=mf, sampler="hash"
+    )
+    for _ in range(w):
+        stream.dispatch(0)
+    out = []
+    for i in range(n_events):
+        ev = stream.next_completion()
+        out.append(ev)
+        stream.dispatch(i // k)
+    return out
+
+
+def _replay_device(latency, n_clients, w, k, n_events, mf, seed):
+    """The batched sampler: one lax.scan over pop + re-dispatch."""
+    table = jnp.asarray(HashArrivals(seed, latency, n_clients).upto(w + n_events))
+    state = events.device_stream_init(
+        seed, n_clients, w, table, malicious_fraction=mf
+    )
+    _, evs = events.drain_events(
+        state, n_events, k, 0, seed, n_clients, table, malicious_fraction=mf
+    )
+    return jax.tree.map(np.asarray, evs)
+
+
+def _assert_replay_equal(host, dev, n_events):
+    for i in range(n_events):
+        ev = host[i]
+        assert int(dev["seq"][i]) == ev.seq
+        assert int(dev["client"][i]) == ev.client_id
+        assert int(dev["dispatch_round"][i]) == ev.dispatch_round
+        assert bool(dev["malicious"][i]) == ev.malicious
+        # hash-mode host clocks are f32-accumulated for exactly this
+        assert dev["time"][i] == np.float32(ev.completion_time)
+
+
+@pytest.mark.parametrize(
+    "name", ["zero", "constant", "uniform", "exponential", "lognormal", "straggler"]
+)
+def test_batched_sampler_replays_eventstream(name):
+    """drain_events == per-event EventStream replay, every latency model."""
+    lat = make_latency(name)
+    w, k, n_events, mf = 5, 3, 24, 0.3
+    host = _replay_host(lat, 9, w, k, n_events, mf, SEED)
+    dev = _replay_device(lat, 9, w, k, n_events, mf, SEED)
+    _assert_replay_equal(host, dev, n_events)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        name=st.sampled_from(
+            ["zero", "constant", "uniform", "exponential", "lognormal", "straggler"]
+        ),
+        n_clients=st.integers(1, 16),
+        w=st.integers(1, 6),
+        k=st.integers(1, 4),
+        flushes=st.integers(1, 5),
+        mf=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_batched_sampler_property(name, n_clients, w, k, flushes, mf, seed):
+        """Hypothesis proof: the vectorized sampler replays the per-event
+        stream exactly for arbitrary (model, population, concurrency,
+        threshold, Byzantine fraction, seed)."""
+        lat = make_latency(name)
+        n_events = k * flushes
+        host = _replay_host(lat, n_clients, w, k, n_events, mf, seed)
+        dev = _replay_device(lat, n_clients, w, k, n_events, mf, seed)
+        _assert_replay_equal(host, dev, n_events)
+
+
+def test_bias_table_matches_wrapped_latency():
+    """HashArrivals(base, bias_table) == HashArrivals(BiasedLatency(base))
+    bit for bit — the compiled regime ships adversarial arrival shaping
+    as one table instead of a wrapped model."""
+    from repro.adversary.stream_attacks import BiasedLatency, BufferFlood
+
+    adv = BufferFlood()
+    base = make_latency("exponential")
+    malicious = np.arange(8) < 3
+    bias = np.asarray(
+        [adv.latency_bias(m, bool(malicious[m])) for m in range(8)], np.float32
+    )
+    wrapped = HashArrivals(
+        SEED, BiasedLatency(base, adv, lambda m: bool(malicious[m])), 8
+    )
+    tabled = HashArrivals(SEED, base, 8, bias_table=bias)
+    np.testing.assert_array_equal(wrapped.upto(512), tabled.upto(512))
+
+
+# ------------------------------------------------------- batched ingest
+def _ingest_pair(k, rows_np, start_fill):
+    p = {"w": jnp.zeros((rows_np.shape[1],), jnp.float32)}
+    seq_buf = buf_mod.init_buffer(p, k)
+    for i in range(start_fill):
+        seq_buf = buf_mod.ingest(
+            seq_buf, {"w": jnp.full_like(p["w"], i)}, 0, False, client_id=i
+        )
+    bat_buf = seq_buf
+    b = rows_np.shape[0]
+    drs = np.arange(b, dtype=np.int32)
+    mals = (np.arange(b) % 2).astype(bool)
+    cids = (np.arange(b) * 7 % 23).astype(np.int32)
+    for i in range(b):
+        seq_buf = buf_mod.ingest(
+            seq_buf, {"w": jnp.asarray(rows_np[i])}, int(drs[i]), bool(mals[i]),
+            client_id=int(cids[i]),
+        )
+    bat_buf = buf_mod.ingest_batch(
+        bat_buf, jnp.asarray(rows_np), jnp.asarray(drs), jnp.asarray(mals),
+        jnp.asarray(cids),
+    )
+    return seq_buf, bat_buf
+
+
+def _assert_buffers_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("start_fill,b", [(0, 4), (2, 4), (0, 9), (3, 6)])
+def test_ingest_batch_matches_sequential(start_fill, b):
+    """One segment-scatter == B sequential ingests, overflow drops and
+    per-client-hash drop buckets included."""
+    rng = np.random.RandomState(1)
+    rows = rng.randn(b, 33).astype(np.float32)
+    seq_buf, bat_buf = _ingest_pair(4, rows, start_fill)
+    _assert_buffers_equal(seq_buf, bat_buf)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 8),
+        b=st.integers(1, 12),
+        start_fill=st.integers(0, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_ingest_batch_property(k, b, start_fill, seed):
+        start_fill = min(start_fill, k)
+        rows = np.random.RandomState(seed).randn(b, 17).astype(np.float32)
+        seq_buf, bat_buf = _ingest_pair(k, rows, start_fill)
+        _assert_buffers_equal(seq_buf, bat_buf)
+
+
+# --------------------------------------------- megastep vs unrolled oracle
+@pytest.fixture(scope="module")
+def mlp():
+    from repro.data.pipeline import build_federated_data
+    from repro.models import cnn
+
+    data = build_federated_data(
+        "emnist", 10, 0.5, malicious_fraction=0.3, attack="label_flipping",
+        seed=SEED,
+    )
+    init_fn, apply_fn = cnn.MODELS["mlp"]
+    in_dim = int(np.prod(data.x.shape[1:]))
+    params = init_fn(jax.random.PRNGKey(SEED), in_dim, 64, data.n_classes)
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(apply_fn, p, b)
+
+    return data, params, loss_fn
+
+
+def _run_pair(mlp, cfg, *, n_flushes=4, chunk=2, block=1, sessions=False):
+    """(unrolled server, compiled server, metrics list, metrics dict)."""
+    from repro.obs import session as obs_session
+
+    data, params, loss_fn = mlp
+    lat = make_latency("exponential")
+    mk_sess = (
+        (lambda: obs_session.TelemetrySession(enabled=True))
+        if sessions else (lambda: None)
+    )
+    sA = AsyncStreamServer(loss_fn, params, cfg, n_clients=10, session=mk_sess())
+    metsA, _ = mega.serve_unrolled(
+        sA, data, seed=SEED, key=jax.random.PRNGKey(1), n_flushes=n_flushes,
+        concurrency=6, local_steps=2, batch_size=4, latency=lat,
+        rng=np.random.RandomState(SEED), root_samples=64,
+    )
+    sB = AsyncStreamServer(loss_fn, params, cfg, n_clients=10, session=mk_sess())
+    cs = mega.CompiledStream(
+        sB, data, seed=SEED, key=jax.random.PRNGKey(1), concurrency=6,
+        local_steps=2, batch_size=4, latency=lat, block=block, chunk=chunk,
+        rng=np.random.RandomState(SEED), root_samples=64,
+    )
+    metsB = cs.serve_flushes(n_flushes)
+    return sA, sB, metsA, metsB
+
+
+def _assert_pair_bitwise(sA, sB, metsA, metsB):
+    for a, b in zip(jax.tree.leaves(sA.state.params), jax.tree.leaves(sB.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(sA.state.buffer.drops), np.asarray(sB.state.buffer.drops)
+    )
+    for i, m in enumerate(metsA):
+        for name, v in m.items():
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(metsB[name][i]),
+                err_msg=f"flush {i} metric {name}",
+            )
+    for a, b in zip(jax.tree.leaves(sA.state.trust), jax.tree.leaves(sB.state.trust)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMegastepParity:
+    def test_block1_bitwise_drag_trust_telemetry(self, mlp):
+        """ISSUE acceptance: megastep(block=1) == unrolled per-event loop
+        bit for bit — params, drops, every per-flush metric, trust table."""
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=4, local_steps=2, lr=0.05,
+            discount="poly", trust=True, telemetry=True, attack="label_flipping",
+        )
+        _assert_pair_bitwise(*_run_pair(mlp, cfg))
+
+    def test_block_k_matches_oracle(self, mlp):
+        """block=K (vmapped client updates + one segment-scatter) stays on
+        the oracle's trajectory."""
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=4, local_steps=2, lr=0.05,
+            discount="poly", attack="label_flipping",
+        )
+        sA, sB, _, _ = _run_pair(mlp, cfg, block=4)
+        for a, b in zip(
+            jax.tree.leaves(sA.state.params), jax.tree.leaves(sB.state.params)
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=0, atol=1e-5
+            )
+
+    @pytest.mark.parametrize("chunk", [1, 3])
+    def test_root_refresh_schedule(self, mlp, chunk):
+        """br_drag with root_refresh_every=2: the precomputed per-chunk
+        refresh schedule reproduces the host RootReferenceCache exactly —
+        same params AND same hit/miss counters, at chunk=1 and across a
+        chunk boundary."""
+        cfg = StreamConfig(
+            algorithm="br_drag", buffer_capacity=4, local_steps=2, lr=0.05,
+            discount="poly", root_refresh_every=2, attack="label_flipping",
+        )
+        sA, sB, metsA, metsB = _run_pair(mlp, cfg, chunk=chunk)
+        _assert_pair_bitwise(sA, sB, metsA, metsB)
+        assert (sA.root_cache.hits, sA.root_cache.misses) == (
+            sB.root_cache.hits, sB.root_cache.misses
+        )
+        assert sB.root_cache.misses == 2 and sB.root_cache.hits == 2
+
+    @pytest.mark.parametrize("shards", [1, 2])
+    def test_sharded_parity(self, mlp, shards):
+        """p=1 (ISSUE acceptance) and p=2 sharded emulation through the
+        megastep's in-scan per-pod ingest."""
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=4, local_steps=2, lr=0.05,
+            discount="poly", shards=shards, attack="label_flipping",
+        )
+        sA, sB, metsA, metsB = _run_pair(mlp, cfg)
+        for a, b in zip(
+            jax.tree.leaves(sA.state.params), jax.tree.leaves(sB.state.params)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for i, m in enumerate(metsA):
+            for name, v in m.items():
+                np.testing.assert_array_equal(
+                    np.asarray(v), np.asarray(metsB[name][i]),
+                    err_msg=f"flush {i} metric {name}",
+                )
+
+    def test_session_ring_and_alert_parity(self, mlp):
+        """With the change-point monitor on, the device telemetry ring
+        drained at the chunk boundary holds the SAME flush bundles the
+        per-event loop recorded, and the decoded alerts match."""
+        from repro.obs.monitor import MonitorConfig
+
+        cfg = StreamConfig(
+            algorithm="drag", buffer_capacity=4, local_steps=2, lr=0.05,
+            discount="poly", telemetry=True, monitor=MonitorConfig(),
+            attack="label_flipping",
+        )
+        sA, sB, metsA, metsB = _run_pair(mlp, cfg, sessions=True)
+        _assert_pair_bitwise(sA, sB, metsA, metsB)
+        ra, rb = sA.session.ring_bundles(), sB.session.ring_bundles()
+        assert len(ra) == len(rb) > 0
+        for i, (a, b) in enumerate(zip(ra, rb)):
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(
+                    np.asarray(la), np.asarray(lb), err_msg=f"ring bundle {i}"
+                )
+        assert sA.session.alerts == sB.session.alerts
+
+    def test_serve_events_threshold(self, mlp):
+        data, params, loss_fn = mlp
+        cfg = StreamConfig(algorithm="drag", buffer_capacity=4, local_steps=2)
+        s = AsyncStreamServer(loss_fn, params, cfg, n_clients=10)
+        cs = mega.CompiledStream(
+            s, data, seed=SEED, key=jax.random.PRNGKey(1), concurrency=6,
+            local_steps=2, batch_size=4, latency=make_latency("exponential"),
+        )
+        with pytest.raises(ValueError, match="multiple"):
+            cs.serve_events(6)
+        cs.serve_events(8)
+        assert cs.events_done == 8 and s.t == 2
+
+
+# ----------------------------------------------------- spec plane + e2e
+class TestCompiledSpec:
+    def _spec(self, **regime_kw):
+        from repro.api import (
+            AggregationSpec, AsyncRegime, DataSpec, ExperimentSpec, ModelSpec,
+        )
+
+        return ExperimentSpec(
+            data=DataSpec(dataset="emnist", n_workers=10, beta=0.5),
+            model=ModelSpec("mlp"),
+            aggregation=AggregationSpec(algorithm="drag"),
+            regime=AsyncRegime(
+                flushes=6, concurrency=6, buffer_capacity=4,
+                latency="exponential", local_steps=2, batch_size=4,
+                discount="poly", eval_every=3, compiled=True, **regime_kw,
+            ),
+            seed=SEED,
+        )
+
+    def test_roundtrip(self):
+        from repro.api import ExperimentSpec
+
+        spec = self._spec(compiled_block=2, compiled_chunk=5)
+        rt = ExperimentSpec.from_json(spec.to_json())
+        assert rt == spec
+        assert rt.regime.compiled and rt.regime.compiled_block == 2
+
+    def test_validation_rejects_bad_block(self):
+        with pytest.raises(ValueError, match="compiled_block"):
+            self._spec(compiled_block=3).validate()
+
+    def test_validation_rejects_mesh(self):
+        import dataclasses as dc
+        import types
+
+        from repro.api import ShardedRegime
+        from repro.api.validation import validate
+
+        spec = self._spec()
+        sharded = ShardedRegime(**{**dc.asdict(spec.regime), "shards": 2})
+        mesh = types.SimpleNamespace(shape={"pod": 2})
+        with pytest.raises(ValueError, match="single-device"):
+            validate(dc.replace(spec, regime=sharded), mesh=mesh)
+
+    def test_run_stream_experiment_compiled(self):
+        from repro.api import TelemetrySpec
+        from repro.stream.server import run_stream_experiment
+
+        spec = dataclasses.replace(
+            self._spec(), telemetry=TelemetrySpec(enabled=True)
+        ).validate()
+        h = run_stream_experiment(spec)
+        assert h["flush"] == [3, 6]
+        assert h["updates_total"] == 24
+        assert len(h["accuracy"]) == 2
+        assert h["telemetry"]["flushes_recorded"] == 6
+
+
+# ------------------------------------------------------- kernel autotune
+class TestAutotune:
+    def test_exact_and_memoized(self):
+        from repro.kernels import ops
+
+        rng = np.random.RandomState(3)
+        g = jnp.asarray(rng.randn(8, 256).astype(np.float32))
+        r = jnp.asarray(rng.randn(256).astype(np.float32))
+        aw = jnp.asarray(rng.rand(8).astype(np.float32))
+        bw = jnp.asarray(rng.rand(8).astype(np.float32))
+        ref_dots = ops.dot_norms_stats(g, r)
+        ref_blend = ops.blend_reduce(g, r, aw, bw)
+        ops.set_autotune(True)
+        try:
+            tuned_dots = ops.dot_norms_stats(g, r)
+            tuned_blend = ops.blend_reduce(g, r, aw, bw)
+            report = ops.autotune_report()
+            # memoized: a second call must not re-measure (same report)
+            ops.dot_norms_stats(g, r)
+            assert ops.autotune_report() == report
+        finally:
+            ops.set_autotune(False)
+        for a, b in zip(jax.tree.leaves(ref_dots), jax.tree.leaves(tuned_dots)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(ref_blend), np.asarray(tuned_blend), rtol=1e-5
+        )
+        assert any(k.startswith("dot_norms[") for k in report)
+        assert any(k.startswith("blend_reduce[") for k in report)
+        for rec in report.values():
+            assert rec["block_s"] >= 1 and rec["block_d"] >= 1
