@@ -1,58 +1,89 @@
-"""Aggregation-plane benchmark: pytree oracle vs flat serving path.
+"""Aggregation-plane benchmark: S x d crossover grid for the flush.
 
-ISSUE 3 satellite.  One trust-enabled, staleness-discounted DRAG flush
-is measured two ways:
+One trust-enabled, staleness-discounted DRAG flush is measured three
+ways on every (S, d) cell of a crossover grid (S up to 1024, d up to
+10^7):
 
   * PYTREE oracle (`core.drag.aggregate` + `trust.divergence_signals`):
-    the pre-refactor serving path.  It traverses the stacked updates
-    four times — dots/norms for the DoD, the blend, the weighted mean
-    over the materialised calibrated stack, and a separate full
-    divergence pass for the trust layer — plus it writes AND re-reads
-    the [S, d]-sized calibrated stack V.
-  * FLAT plane (`core.drag.aggregate_flat` + `trust.signals_from_stats`):
-    two fused kernel passes over G (`dot_norms` + `blend_reduce`), the
-    trust signals reconstructed from the phase-1 scalars for free, V
-    never materialised.
+    the pre-refactor serving path.  Four traversals of the stacked
+    updates plus a write AND re-read of the materialised [S, d]
+    calibrated stack V.
+  * TWO-PASS flat plane (`kernels.ops._flush_two_pass`): the streaming
+    `dot_norms` + `blend_reduce` kernel pair, trust signals
+    reconstructed from the phase-1 scalars for free.
+  * FUSED single pass (`kernels.ops._flush_fused`): one `fused_flush`
+    kernel holding the whole padded stack VMEM-resident — coefficients
+    formed in-kernel from the reduced scalars, one HBM read of G.
+    Measured on every cell: beyond the residency budget
+    (`ops.FUSED_VMEM_BYTES`) the cell records `fused_resident: false` —
+    there the number is interpret-only roofline evidence (one traversal
+    instead of two), not a path `flush_path` would pick on hardware.
+
+`flat_us` is the best of the two flat passes — the ISSUE acceptance is
+`speedup = tree_us / flat_us >= 1` on EVERY cell — and `path` records
+which one `ops.flush_path(S, d)` selects in production.
+
+Robust-reducer cells ride along at the streaming serving shape S=64,
+d=65536 ("scaling past S=64"): the production fedavg flush
+(`calibrated_reduce`, mode="mean") vs the sort-free `trimmed_mean`
+kernel (acceptance: within 3x of the fedavg flush) vs the tiled-Gram
+krum scores.
 
 Writes ``BENCH_aggplane.json``::
 
-    {"cells": {cell: {"tree_us", "flat_us", "speedup"}},
-     "hbm_passes": {"tree": .., "flat": 2,
-                    "flush_kernel_calls": {"dot_norms": 1,
-                                           "blend_reduce": 1, "blend": 0}}}
+    {"cells": {cell: {"tree_us", "two_pass_us", "fused_us"?, "flat_us",
+                      "path", "speedup", ...}},
+     "reducers": {...}, "acceptance": {...},
+     "hbm_passes": {..., "flush_kernel_calls": {...}},
+     "provenance": {"autotune_blocks": ..., "grid": ...},
+     "telemetry": {"flush_kernel_calls_recorded": {...}}}
 
 ``flush_kernel_calls`` is counted live on a real stream flush with
-trust + staleness enabled — the acceptance evidence that a whole flush
-is exactly two HBM passes over the stacked updates.  CSV rows
-(``benchmarks.common.emit``) ride along.  NOTE: on this CPU container
-the kernels run in interpret mode, so ``*_us`` measures program
-structure, not Mosaic performance; the pass counts are the
-hardware-relevant quantity.
+trust + staleness enabled — the acceptance evidence that a VMEM-
+resident flush is exactly ONE kernel pass (`fused_flush`) over the
+stacked updates.  CSV rows (``benchmarks.common.emit``) ride along.
+NOTE: on this CPU container the kernels run in interpret mode, so
+``*_us`` measures program structure, not Mosaic performance; the pass
+counts are the hardware-relevant quantity.
 """
 from __future__ import annotations
 
 import json
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import FAST, emit, timeit
+from repro.core import aggregators as agg
 from repro.core import drag
 from repro.core import flat as flat_mod
-from repro.core import pytree as pt
+from repro.kernels import ops
 from repro.trust import reputation as trust_mod
 
-# (S, per-leaf sizes): multi-leaf pytrees so the oracle path pays the
-# per-leaf traversal it pays in production
-CELLS = (
-    [(16, (1 << 12, 1 << 13, 257))]
-    if FAST
-    else [
-        (16, (1 << 12, 1 << 13, 257)),
-        (16, (1 << 16, 1 << 15, 4099)),
-        (64, (1 << 16, 1 << 15, 4099)),
-    ]
-)
+# the S x d crossover grid: (S, per-leaf sizes).  Multi-leaf pytrees so
+# the oracle path pays the per-leaf traversal it pays in production.
+# Spans both flush regimes: VMEM-resident single-pass cells (including
+# non-aligned S=16/d=12545 and the exact 4 MiB residency boundary at
+# 64 x 16384) and streaming two-pass cells out to S=1024 and d=10^7.
+GRID = [
+    (8, (1 << 11, 1 << 10, 1 << 10)),            # 4096      fused
+    (16, (1 << 13, 1 << 12, 257)),               # 12545     fused, non-aligned
+    (64, (1 << 13, 1 << 12, 1 << 12)),           # 16384     fused, boundary
+    (64, (1 << 15, 1 << 14, 1 << 14)),           # 65536     two-pass
+    (256, (1 << 15, 1 << 14, 1 << 14)),          # 65536     two-pass
+    (1024, (1 << 13, 1 << 12, 1 << 12)),         # 16384     two-pass, S=1024
+    # > 10^7 params, 8192-lane-aligned (serving deployments pad model
+    # dims; an unaligned d would bill a full-stack repack to the flat
+    # plane that no path pays in production — the non-aligned case is
+    # covered by the S16_d12545 cell and the parity tests)
+    (8, (5_000_000, 3_000_000, 2_002_432)),      # 10002432  two-pass, d>10^7
+]
+#: weekly-CI slice: one cell per regime, names a subset of the full
+#: grid so the sentinel can diff them against the committed baseline
+FAST_GRID = [GRID[0], GRID[1], GRID[3]]
+
+CELLS = FAST_GRID if FAST else GRID
 
 
 def _setup(s: int, leaf_sizes: tuple[int, ...]):
@@ -67,9 +98,26 @@ def _setup(s: int, leaf_sizes: tuple[int, ...]):
     return ups, r, discounts, weights
 
 
-def bench_cell(s: int, leaf_sizes: tuple[int, ...]) -> dict:
+def _flat_flush(kind: str):
+    """jitted flat flush (two_pass | fused) + trust signals from stats."""
+    fn = ops._flush_fused if kind == "fused" else ops._flush_two_pass
+
+    @jax.jit
+    def run(g, r_flat, discounts, w):
+        delta, lam, stats = fn(
+            g, r_flat, 0.3, "drag", w=w, discounts=discounts,
+            init=None, boot_aw=None, interpret=ops._interpret_default(),
+        )
+        div, nr = trust_mod.signals_from_stats(*stats)
+        return delta, lam, div, nr
+
+    return run
+
+
+def bench_cell(s: int, leaf_sizes: tuple[int, ...]) -> tuple[str, dict]:
     ups, r, discounts, weights = _setup(s, leaf_sizes)
     d = sum(leaf_sizes)
+    stack_mb = s * d * 4 / 1e6
 
     @jax.jit
     def tree_path(ups, r, discounts, weights):
@@ -77,39 +125,74 @@ def bench_cell(s: int, leaf_sizes: tuple[int, ...]) -> dict:
         div, nr = trust_mod.divergence_signals(ups, r)
         return delta, lams, div, nr
 
-    @jax.jit
-    def flat_path(g, r_flat, discounts, weights):
-        delta, lam, stats = drag.aggregate_flat(
-            g, r_flat, 0.3, discounts=discounts, weights=weights
-        )
-        div, nr = trust_mod.signals_from_stats(*stats)
-        return delta, lam, div, nr
-
     g = flat_mod.flatten_stacked(ups)
     r_flat = flat_mod.flatten_tree(r)
+    w = ops.normalize_weights(weights, s)
 
-    iters = 5 if FAST else 20
+    iters = 3 if FAST else (5 if stack_mb <= 16 else (3 if stack_mb <= 128 else 2))
     tree_s = timeit(tree_path, ups, r, discounts, weights, iters=iters)
-    flat_s = timeit(flat_path, g, r_flat, discounts, weights, iters=iters)
+    two_s = timeit(_flat_flush("two_pass"), g, r_flat, discounts, w, iters=iters)
+    fused_s = timeit(_flat_flush("fused"), g, r_flat, discounts, w, iters=iters)
+    path = ops.flush_path(s, d)
+    flat_s = min(two_s, fused_s)
     cell = f"S{s}_d{d}"
-    stack_bytes = s * d * 4
     rec = {
         "S": s,
         "d": d,
+        "path": path,
+        "fused_resident": path == "fused",
         "tree_us": tree_s * 1e6,
+        "two_pass_us": two_s * 1e6,
+        "fused_us": fused_s * 1e6,
         "flat_us": flat_s * 1e6,
         "speedup": tree_s / flat_s,
-        "stack_mb": stack_bytes / 1e6,
+        "stack_mb": stack_mb,
         # the roofline quantity (the op is memory-bound): bytes moved
         # through HBM per flush on real hardware — 4 G reads + V write +
-        # V read for the oracle vs 2 G reads for the fused path
-        "hbm_mb_tree": 6 * stack_bytes / 1e6,
-        "hbm_mb_flat": 2 * stack_bytes / 1e6,
-        "hbm_traffic_ratio": 3.0,
+        # V read for the oracle vs 2 G reads two-pass vs 1 read fused
+        "hbm_mb_tree": 6 * stack_mb,
+        "hbm_mb_flat": (1 if path == "fused" else 2) * stack_mb,
     }
+    emit(f"aggplane/fused/{cell}", fused_s * 1e6, f"{stack_mb:.1f}MB-stack")
     emit(f"aggplane/tree/{cell}", tree_s * 1e6, f"{rec['hbm_mb_tree']:.1f}MB-HBM")
     emit(f"aggplane/flat/{cell}", flat_s * 1e6, f"{rec['hbm_mb_flat']:.1f}MB-HBM")
     return cell, rec
+
+
+def bench_reducers() -> dict:
+    """Robust reducers at the streaming serving shape S=64: the ISSUE
+    acceptance pins the sort-free trimmed mean within 3x of the
+    production fedavg flush at the same [S, d]."""
+    s, d, trim = 64, 65536, 4
+    key = jax.random.PRNGKey(2)
+    g = jax.random.normal(key, (s, d), jnp.float32)
+    r_flat = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    w = ops.normalize_weights(None, s)
+
+    @jax.jit
+    def fedavg_flush(g, r_flat, w):
+        delta, _, _ = ops.calibrated_reduce(g, r_flat, 0.0, "mean", w=w)
+        return delta
+
+    trimmed = jax.jit(partial(ops.trimmed_mean, trim=trim))
+    krum_scores = jax.jit(partial(agg._krum_scores_flat, n_byzantine=2))
+
+    iters = 3 if FAST else 10
+    fed_s = timeit(fedavg_flush, g, r_flat, w, iters=iters)
+    trim_s = timeit(trimmed, g, iters=iters)
+    krum_s = timeit(krum_scores, g, iters=iters)
+    emit(f"aggplane/reducer/fedavg_S{s}_d{d}", fed_s * 1e6, "flush")
+    emit(f"aggplane/reducer/trimmed_S{s}_d{d}", trim_s * 1e6, f"trim{trim}")
+    emit(f"aggplane/reducer/krum_S{s}_d{d}", krum_s * 1e6, "scores")
+    return {
+        "S": s,
+        "d": d,
+        "trim": trim,
+        "fedavg_flush_us": fed_s * 1e6,
+        "trimmed_mean_us": trim_s * 1e6,
+        "krum_scores_us": krum_s * 1e6,
+        "trimmed_over_fedavg": trim_s / fed_s,
+    }
 
 
 def count_flush_kernel_calls(telemetry: bool = False) -> dict:
@@ -161,48 +244,77 @@ def run() -> None:
     for s, sizes in CELLS:
         cell, rec = bench_cell(s, sizes)
         cells[cell] = rec
-    from repro.kernels.instrument import TWO_PASS_CALLS
 
+    reducers = bench_reducers()
+
+    from repro.kernels.instrument import expected_flush_calls
+
+    # the probe's serving shape is VMEM-resident -> ONE fused_flush pass
+    probe_expected = expected_flush_calls(8, (1 << 10) + 37)
+    assert probe_expected["fused_flush"] == 1, probe_expected
     kernel_calls = count_flush_kernel_calls()
-    assert kernel_calls == TWO_PASS_CALLS, (
-        f"flush is no longer two kernel passes: {kernel_calls}"
+    assert kernel_calls == probe_expected, (
+        f"flush is no longer the minimum kernel passes: {kernel_calls} "
+        f"!= {probe_expected}"
     )
     kernel_calls_tel = count_flush_kernel_calls(telemetry=True)
-    assert kernel_calls_tel == TWO_PASS_CALLS, (
+    assert kernel_calls_tel == probe_expected, (
         f"telemetry added kernel passes to the flush: {kernel_calls_tel}"
     )
-    # autotune provenance: measure the per-(S, d, dtype) block choices
-    # for the two flush kernels on every cell shape and record them.
+
+    # autotune provenance: measure the per-(op, S, d, dtype) block (and
+    # flush-path) choices on the resident cell shapes and record them.
     # Autotune is flipped on only for this probe — it changes the f32
     # reduction split, so the timed cells above and the kernel-count
     # asserts ran with the default (bit-for-bit) blocks.
-    from repro.kernels import ops
-
     ops.set_autotune(True)
     try:
-        for s, sizes in CELLS:
-            g = jnp.ones((s, sum(sizes)), jnp.float32)
-            ops.dot_norms_stats(g, jnp.ones((g.shape[1],), jnp.float32))
-            ops.blend_reduce(
-                g,
-                jnp.ones((g.shape[1],), jnp.float32),
-                jnp.ones((s,), jnp.float32),
-                jnp.ones((s,), jnp.float32),
-            )
+        for s, d in [(8, 4096), (64, 16384)]:
+            g = jnp.ones((s, d), jnp.float32)
+            r1 = jnp.ones((d,), jnp.float32)
+            ops.dot_norms_stats(g, r1)
+            ops.blend_reduce(g, r1, jnp.ones((s,)), jnp.ones((s,)))
+            ops.trimmed_mean(g, 2)
+            ops.pairwise_sq_dists(g)
         autotune = ops.autotune_report()
     finally:
         ops.set_autotune(False)
+    assert autotune, "autotune probe recorded no block choices"
 
+    # acceptance: flat plane >= 1x the pytree oracle on EVERY grid cell;
+    # sort-free trimmed mean within 3x of the fedavg flush at S=64
+    failures = [
+        f"{cell}: flat {rec['flat_us']:.0f}us slower than tree "
+        f"{rec['tree_us']:.0f}us"
+        for cell, rec in cells.items()
+        if rec["speedup"] < 1.0
+    ]
+    if reducers["trimmed_over_fedavg"] > 3.0:
+        failures.append(
+            f"trimmed_mean {reducers['trimmed_mean_us']:.0f}us > 3x fedavg "
+            f"flush {reducers['fedavg_flush_us']:.0f}us"
+        )
     record = {
         "cells": cells,
+        "reducers": reducers,
+        "acceptance": {
+            "flat_ge_oracle_all_cells": all(r["speedup"] >= 1.0 for r in cells.values()),
+            "trimmed_within_3x_fedavg": reducers["trimmed_over_fedavg"] <= 3.0,
+            "failures": failures,
+        },
         # measured per-(op, S, d, dtype) block-size choices (sentinel
         # skips this section: provenance, not a timing)
-        "provenance": {"autotune_blocks": autotune},
+        "provenance": {
+            "autotune_blocks": autotune,
+            "grid": [[s, sum(sizes)] for s, sizes in CELLS],
+            "fast": FAST,
+        },
         "hbm_passes": {
             # pytree oracle: dots/norms + blend + weighted mean + trust
             # divergence pass over G, plus write+read of the calibrated V
             "tree": {"g_passes": 4, "v_write_read": 2},
-            "flat": {"g_passes": 2, "v_write_read": 0},
+            "two_pass": {"g_passes": 2, "v_write_read": 0},
+            "fused": {"g_passes": 1, "v_write_read": 0},
             "flush_kernel_calls": kernel_calls,
         },
         # telemetry-plane provenance: recording the MetricsBundle must
@@ -212,6 +324,8 @@ def run() -> None:
     with open("BENCH_aggplane.json", "w") as f:
         json.dump(record, f, indent=2)
     print("wrote BENCH_aggplane.json", flush=True)
+    if failures:
+        raise SystemExit(f"aggplane acceptance failed: {failures}")
 
 
 if __name__ == "__main__":

@@ -7,10 +7,11 @@ same program shard_maps with a real psum):
 
   1. hash routing: client ids spread over per-pod [K/p, d] sub-buffers,
      with the least-full fallback soaking up a crowded pod;
-  2. the hierarchical flush: each pod runs the SAME two fused HBM passes
-     as the single-buffer serving path (dot_norms + blend_reduce) over
-     its own rows, and everything cross-pod — the partial [d] weighted
-     sums, the scattered DoD/trust scalars — meets in exactly ONE psum;
+  2. the hierarchical flush: each pod runs the SAME fused flush as the
+     single-buffer serving path (one fused_flush kernel here — the
+     [K/p, d] sub-stacks are VMEM-resident) over its own rows, and
+     everything cross-pod — the partial [d] weighted sums, the scattered
+     DoD/trust scalars — meets in exactly ONE psum;
   3. parity: p = 1 is bit-for-bit the single-buffer flush, p > 1 is the
      same math reassociated across pods (~1e-7).
 """
@@ -49,7 +50,7 @@ def main():
               f"{np.asarray(buf.counts).tolist()}")
     assert int(sharded.total_count(buf)) == K  # fallback => nothing dropped
 
-    banner("2. hierarchical flush: two passes per pod, ONE psum")
+    banner("2. hierarchical flush: one fused pass per pod, ONE psum")
     r = jax.random.normal(jax.random.fold_in(key, 999), (2048 + 64,))
     disc = (1.0 + sharded.staleness(buf, 3).astype(jnp.float32)) ** -0.5
     with instrument.count_collective_calls() as coll:
@@ -57,10 +58,10 @@ def main():
             delta, lam, stats = sharded.hierarchical_flush(
                 buf.slots, r, mode="drag", c=0.3, discounts2=disc,
             )
-    print(f"  kernel calls: {kern}  (dot_norms + blend_reduce per pod)")
+    print(f"  kernel calls: {kern}  (one fused_flush per pod)")
     print(f"  cross-pod reductions: {coll}  <- the ONE psum")
     assert coll == instrument.ONE_PSUM_CALLS
-    assert kern["dot_norms"] == P and kern["blend_reduce"] == P
+    assert kern["fused_flush"] == P and kern["blend"] == 0
     print(f"  per-flush collective traffic: one [d]={r.shape[0]} partial sum "
           f"+ {3 * K} scalars — O(d), independent of K")
 

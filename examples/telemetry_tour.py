@@ -15,9 +15,9 @@ One async BR-DRAG run under a SCHEDULED ALIE onset (benign until flush
   * host-side trace spans around the engine's boundaries
     (ingest / flush / root_reference / client_update / eval);
   * a JSONL event log and a Chrome/Perfetto trace — open
-    ``telemetry_tour_trace.json`` at https://ui.perfetto.dev to see the
-    wall-clock anatomy of the event loop (alerts appear as instants);
-  * forensics + a markdown run report (``telemetry_tour_report.md``)
+    ``out/telemetry_tour_trace.json`` at https://ui.perfetto.dev to see
+    the wall-clock anatomy of the event loop (alerts appear as instants);
+  * forensics + a markdown run report (``out/telemetry_tour_report.md``)
     joining the span breakdown with the alert and flush timelines.
 
 Everything is declared on the spec: ``TelemetrySpec(enabled=True, ...)``
@@ -26,6 +26,8 @@ provably changes nothing but the observation.
 
     PYTHONPATH=src python examples/telemetry_tour.py
 """
+import os
+
 from repro.api import (
     AggregationSpec,
     AsyncRegime,
@@ -40,9 +42,11 @@ from repro.api import (
 )
 from repro.obs import alert_latency, incident_timeline, write_report
 
-JSONL = "telemetry_tour_events.jsonl"
-PERFETTO = "telemetry_tour_trace.json"
-REPORT = "telemetry_tour_report.md"
+# artifacts land in out/ (gitignored), never the repo root
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "out")
+JSONL = os.path.join(OUT_DIR, "telemetry_tour_events.jsonl")
+PERFETTO = os.path.join(OUT_DIR, "telemetry_tour_trace.json")
+REPORT = os.path.join(OUT_DIR, "telemetry_tour_report.md")
 
 #: first flush the ALIE collusion is active (earlier flushes are benign,
 #: so the monitor's EWMA baselines settle on honest traffic first)
@@ -81,6 +85,7 @@ def specs() -> list[tuple[str, ExperimentSpec]]:
 
 
 def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
     (_, spec), = specs()
     print(f"== BR-DRAG vs scheduled ALIE (benign until flush {ONSET}, "
           "then 40% malicious), telemetry + monitor recording ==")

@@ -107,21 +107,33 @@ raga = geometric_median
 
 
 # ------------------------------------------------------------------ Krum
+def _krum_scores_from_d2(d2: jax.Array, n_byzantine: int) -> jax.Array:
+    """Krum score tail shared by both tiers: sum of the S-f-2 smallest
+    pairwise distances per row (self excluded)."""
+    s = d2.shape[0]
+    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)  # exclude self
+    k = max(s - n_byzantine - 2, 1)
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+
+
 def _krum_scores(flat: jax.Array, n_byzantine: int) -> jax.Array:
-    """Per-worker Krum scores over the flat [S, d] stack (shared by the
-    pytree and flat tiers of krum / multi_krum / bulyan).
+    """Per-worker Krum scores over the flat [S, d] stack (the pytree
+    tier's oracle form — the flat tier uses :func:`_krum_scores_flat`).
 
     Pairwise distances via the Gram matrix — O(S d + S^2) memory, never
     the [S, S, d] broadcast difference tensor (4 GB at S=64, d=2^18;
     same trick as the min_max attack in ``repro.adversary.attacks``).
     """
-    s = flat.shape[0]
     f32 = flat.astype(jnp.float32)
     sq = jnp.sum(f32 * f32, axis=-1)  # [S]
     d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (f32 @ f32.T), 0.0)
-    d2 = jnp.where(jnp.eye(s, dtype=bool), jnp.inf, d2)  # exclude self
-    k = max(s - n_byzantine - 2, 1)
-    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    return _krum_scores_from_d2(d2, n_byzantine)
+
+
+def _krum_scores_flat(g: jax.Array, n_byzantine: int) -> jax.Array:
+    """Flat-tier Krum scores: the tiled Gram Pallas kernel (one HBM pass
+    over G, [S, S] accumulator resident) feeds the same score tail."""
+    return _krum_scores_from_d2(kops.pairwise_sq_dists(g), n_byzantine)
 
 
 def krum(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
@@ -131,9 +143,10 @@ def krum(updates_stacked: pt.Pytree, n_byzantine: int) -> pt.Pytree:
     return pt.tree_index(updates_stacked, best)
 
 
-def _multi_krum_weights(flat: jax.Array, n_byzantine: int, m: int = 0) -> jax.Array:
+def _multi_krum_weights(flat: jax.Array, n_byzantine: int, m: int = 0,
+                        scores: jax.Array | None = None) -> jax.Array:
     s = flat.shape[0]
-    scores = _krum_scores(flat, n_byzantine)
+    scores = _krum_scores(flat, n_byzantine) if scores is None else scores
     m = m or max(s - n_byzantine - 2, 1)
     sel = jnp.argsort(scores)[:m]  # m best
     return jnp.zeros((s,)).at[sel].set(1.0 / m)
@@ -153,11 +166,12 @@ def multi_krum(updates_stacked: pt.Pytree, n_byzantine: int, m: int = 0) -> pt.P
     return jax.tree.map(avg, updates_stacked)
 
 
-def _bulyan_selection(flat: jax.Array, n_byzantine: int):
+def _bulyan_selection(flat: jax.Array, n_byzantine: int,
+                      scores: jax.Array | None = None):
     """(selected row indices [theta], trim beta) for Bulyan."""
     s = flat.shape[0]
     theta = max(s - 2 * n_byzantine, 1)
-    scores = _krum_scores(flat, n_byzantine)
+    scores = _krum_scores(flat, n_byzantine) if scores is None else scores
     sel = jnp.argsort(scores)[:theta]  # theta best by Krum score
     beta = min(n_byzantine, max((theta - 1) // 2, 0))
     return sel, theta, beta
@@ -230,8 +244,8 @@ NEEDS_REFERENCE = {"fltrust", "drag", "br_drag"}
 # -------------------------------------------------- flat update plane tier
 # Flat twins over the raw [S, d] matrix -> [d] delta: the serving tier
 # both dispatchers (repro.fl.round / repro.stream.server) actually call.
-# trimmed_mean and geomed hit the Pallas kernels; the rest is row algebra
-# the flat representation makes trivial.
+# trimmed_mean, geomed and the krum family hit the Pallas kernels; the
+# rest is row algebra the flat representation makes trivial.
 
 def fedavg_flat(g: jax.Array) -> jax.Array:
     return jnp.mean(g, axis=0)
@@ -266,15 +280,17 @@ def geometric_median_flat(g: jax.Array, iters: int = 8) -> jax.Array:
 
 
 def krum_flat(g: jax.Array, n_byzantine: int) -> jax.Array:
-    return g[jnp.argmin(_krum_scores(g, n_byzantine))]
+    return g[jnp.argmin(_krum_scores_flat(g, n_byzantine))]
 
 
 def multi_krum_flat(g: jax.Array, n_byzantine: int, m: int = 0) -> jax.Array:
-    return _multi_krum_weights(g, n_byzantine, m) @ g
+    scores = _krum_scores_flat(g, n_byzantine)
+    return _multi_krum_weights(g, n_byzantine, m, scores=scores) @ g
 
 
 def bulyan_flat(g: jax.Array, n_byzantine: int) -> jax.Array:
-    sel, theta, beta = _bulyan_selection(g, n_byzantine)
+    scores = _krum_scores_flat(g, n_byzantine)
+    sel, theta, beta = _bulyan_selection(g, n_byzantine, scores=scores)
     gs = jnp.sort(g[sel], axis=0)  # [theta, d]
     return jnp.mean(gs[beta : theta - beta], axis=0)
 

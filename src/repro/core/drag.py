@@ -164,7 +164,8 @@ def aggregate_flat(
     """:func:`aggregate` on the flat plane: G [S, d], r [d].
 
     Dispatches to the fused Pallas kernels (``repro.kernels.ops``) —
-    exactly two HBM passes over G.  Returns (delta [d] f32, lam [S],
+    one ``fused_flush`` pass for VMEM-resident stacks, else the two
+    streaming passes.  Returns (delta [d] f32, lam [S],
     (dots, g_sq, r_sq)); the phase-1 stats feed the trust layer's
     divergence signals for free (``trust.signals_from_stats``).
     """
@@ -188,10 +189,12 @@ def round_step_flat(
 
     Same semantics (bootstrap = uniform raw mean seeding r^0, eq. 5a;
     afterwards calibrated weighted mean + reference EMA, eqs. 5b/6/10/11)
-    but expressed as TWO HBM passes over the [S, d] stack: the bootstrap
-    switch is a select on the [S]-sized blend coefficients, never a
-    separate raw-mean pass, and the reference round-trips through its
-    flat form so only [d]-sized vectors are unflattened.
+    but expressed through ``kops.calibrated_reduce`` — ONE fused HBM pass
+    for VMEM-resident stacks, two streaming passes otherwise
+    (``kops.flush_path``): the bootstrap switch is a select on the
+    [S]-sized blend coefficients, never a separate raw-mean pass, and the
+    reference round-trips through its flat form so only [d]-sized
+    vectors are unflattened.
 
     Returns (params', state', metrics, (dots, g_sq, r_sq)) — the stats
     are against the PRE-update reference, exactly what the trust layer
@@ -200,15 +203,13 @@ def round_step_flat(
     g = stack.data
     s = g.shape[0]
     r_flat = flat_mod.flatten_tree(state.reference)
-    dots, gsq, rsq = kops.dot_norms_stats(g, r_flat, interpret=interpret)
-    a, b, lam = kops.calibrate_coeffs(dots, gsq, rsq, c, "drag", discounts)
     w = kops.normalize_weights(weights, s)
     init = state.initialized
     # bootstrap (eq. 5a): uniform raw mean — a = 1, b = 0, w = 1/S
-    aw = jnp.where(init, w * a, 1.0 / s)
-    bw = jnp.where(init, w * b, 0.0)
-    lam = jnp.where(init, lam, 0.0)
-    delta_flat = kops.blend_reduce(g, r_flat, aw, bw, interpret=interpret)
+    delta_flat, lam, (dots, gsq, rsq) = kops.calibrated_reduce(
+        g, r_flat, c, "drag", w=w, discounts=discounts, init=init,
+        boot_aw=jnp.full((s,), 1.0 / s, jnp.float32), interpret=interpret,
+    )
     ema = (1.0 - alpha) * r_flat + alpha * delta_flat
     new_ref_flat = jnp.where(init, ema, delta_flat)
     new_params = pt.tree_add(params, flat_mod.unflatten_tree(delta_flat, stack.spec))

@@ -20,6 +20,16 @@ scale, blend).  Two kernels bring that to two passes:
     whole DRAG/BR-DRAG flush is then exactly two HBM passes over G:
     dot_norms + blend_reduce.
 
+  * ``fused_flush`` — ONE pass: for stacks whose [S, d] working set fits
+    the VMEM budget (small-S serving regimes, exactly where per-kernel
+    launch overhead dominates the two-pass path) the whole flush runs as
+    a single kernel: phase-1 scalars reduced over the resident block,
+    blend coefficients formed IN-KERNEL from the already-reduced scalars
+    (same ``calibrate_coeffs`` formulas as the host path — the oracle
+    pins parity at 1e-5), bootstrap select applied, and Delta emitted —
+    G is read from HBM exactly once.  Eligibility/selection lives in
+    ``kernels.ops`` (``_select_blocks``-style policy + autotune).
+
 Block sizes default to (8, 1024): G tile 8x1024xf32 = 32 KiB VMEM, r
 tile 4 KiB — well inside the ~16 MiB VMEM budget, lane-dim 1024 is a
 multiple of 128 for clean vectorisation.
@@ -31,6 +41,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.ref import calibrate_coeffs
 
 DEF_BS = 8  # workers per tile (sublane dim)
 DEF_BD = 1024  # parameter-dim tile (lane dim, multiple of 128)
@@ -161,3 +173,60 @@ def blend_reduce(g, r, aw, bw, *, block_s: int = DEF_BS, block_d: int = DEF_BD,
         out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
         interpret=interpret,
     )(g, r, aw, bw)
+
+
+# ---------------------------------------------------------- fused_flush
+
+def _fused_flush_kernel(g_ref, r_ref, phi_ref, w_ref, u_ref, sel_ref,
+                        delta_ref, dots_ref, gsq_ref, rsq_ref,
+                        *, c: float, mode: str):
+    # the whole [S, d] block is VMEM-resident: phase-1 scalars reduce
+    # over it in place of the separate dot_norms pass...
+    g = g_ref[...].astype(jnp.float32)  # [S, d]
+    r = r_ref[...].astype(jnp.float32)  # [d]
+    dots = g @ r
+    gsq = jnp.sum(g * g, axis=1)
+    rsq = jnp.sum(r * r)
+    # ...and the blend coefficients come straight from the just-reduced
+    # scalars — the exact host-side formulas (eqs. (11)/(15)), so the
+    # two-pass path and the pytree oracle stay 1e-5 targets
+    if mode == "mean":
+        a = jnp.ones_like(dots)
+        b = jnp.zeros_like(dots)
+    else:
+        a, b, _ = calibrate_coeffs(dots, gsq, rsq, c, mode, phi_ref[...])
+    sel = sel_ref[0] > 0.5  # DRAG bootstrap switch (eq. 5a)
+    aw = jnp.where(sel, w_ref[...] * a, u_ref[...])
+    bw = jnp.where(sel, w_ref[...] * b, 0.0)
+    delta_ref[...] = aw @ g + jnp.sum(bw) * r
+    dots_ref[...] = dots
+    gsq_ref[...] = gsq
+    rsq_ref[...] = rsq[None]
+
+
+def fused_flush(g, r, phi, w, u, sel, *, c: float, mode: str,
+                interpret: bool = False):
+    """Single-pass DRAG/BR-DRAG flush for VMEM-resident stacks.
+
+    One HBM read of ``G:[S, d]`` produces (delta [d], dots [S], gsq [S],
+    rsq [1]): the phase-1 scalars, the in-kernel coefficients, the
+    bootstrap select ``aw = sel ? w*a : u`` / ``bw = sel ? w*b : 0`` and
+    the fused weighted reduction.  ``phi`` are staleness discounts
+    (ones when fresh), ``w`` the normalised aggregation weights, ``u``
+    the bootstrap fallback weights (zeros disable), ``sel`` a [1] f32
+    switch (1 = calibrated, 0 = bootstrap).  Padded rows must carry
+    w = u = 0 so they drop out of the reduction exactly.  Eligibility
+    (the VMEM fit) is the caller's job — see ``ops.flush_path``.
+    """
+    s, d = g.shape
+    delta, dots, gsq, rsq = pl.pallas_call(
+        functools.partial(_fused_flush_kernel, c=c, mode=mode),
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, r, phi, w, u, sel)
+    return delta, dots, gsq, rsq[0]

@@ -1,11 +1,13 @@
-"""Kernel-call instrumentation: the two-HBM-pass and one-psum probes.
+"""Kernel-call instrumentation: the HBM-pass and one-psum probes.
 
 The flat update plane's headline invariant — a whole DRAG/BR-DRAG flush
-is exactly two kernel passes over the stacked updates (``dot_norms`` +
-``blend_reduce``, never ``blend``) — is asserted in tests AND measured
-in ``benchmarks/aggplane_bench.py``.  The sharded plane
-(``repro.stream.sharded``) adds the cross-pod invariant: a hierarchical
-flush performs exactly ONE cross-pod reduction (``psum_bundle``).
+is AT MOST two kernel passes over the stacked updates: ``fused_flush``
+alone when the stack is VMEM-resident (``ops.flush_path`` says
+``"fused"``), else ``dot_norms`` + ``blend_reduce``, never ``blend`` —
+is asserted in tests AND measured in ``benchmarks/aggplane_bench.py``.
+The sharded plane (``repro.stream.sharded``) adds the cross-pod
+invariant: a hierarchical flush performs exactly ONE cross-pod
+reduction (``psum_bundle``).
 
 The counting machinery itself lives in the telemetry plane
 (:func:`repro.obs.probes.counted_calls`); the context managers here are
@@ -20,10 +22,27 @@ from repro.kernels import drag_calibrate as dk
 from repro.obs.probes import counted_calls
 
 #: the calibration kernels a flush may invoke (counted per call)
-FLUSH_KERNELS = ("dot_norms", "blend_reduce", "blend")
+FLUSH_KERNELS = ("dot_norms", "blend_reduce", "blend", "fused_flush")
 
-#: what one fused serving flush must invoke — the two-pass invariant
-TWO_PASS_CALLS = {"dot_norms": 1, "blend_reduce": 1, "blend": 0}
+#: what one streaming (two-pass) flush must invoke
+TWO_PASS_CALLS = {"dot_norms": 1, "blend_reduce": 1, "blend": 0, "fused_flush": 0}
+
+#: what one VMEM-resident (single-pass) flush must invoke
+SINGLE_PASS_CALLS = {"dot_norms": 0, "blend_reduce": 0, "blend": 0, "fused_flush": 1}
+
+
+def expected_flush_calls(s: int, d: int) -> dict:
+    """The kernel-call dict one flush over an [s, d] stack must produce.
+
+    Resolves the path the same way the flush itself does
+    (:func:`repro.kernels.ops.flush_path`), so assertion sites track the
+    selection policy instead of hard-coding a path.
+    """
+    from repro.kernels import ops
+
+    return dict(
+        SINGLE_PASS_CALLS if ops.flush_path(s, d) == "fused" else TWO_PASS_CALLS
+    )
 
 
 def count_kernel_calls(sink=None):

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels import drag_calibrate as dk
 from repro.kernels import flash_attention as fk
+from repro.kernels import krum as kk
 from repro.kernels import linear_recurrence as lrk
 from repro.kernels import selective_scan as sk
 from repro.kernels import trimmed_mean as tk
@@ -47,6 +48,18 @@ def _pad_to(x, mult, axis):
 #: lane-tile ceiling: bs=8 x 65536 x f32 = 2 MiB per G tile — comfortably
 #: inside the ~16 MiB VMEM budget with r/out tiles and double buffering
 _MAX_LANE_TILE = 1 << 16
+
+#: joint (bs x bd) G-tile budget for STREAMING kernels (double-buffered
+#: against HBM): the default 8 x 65536 x f32 tile exactly
+TILE_BUDGET = _MAX_LANE_TILE * 8 * 4
+
+#: [S, bd] working-set budget for RESIDENT kernels (gram / trimmed_mean,
+#: whole worker axis in one tile).  Larger than TILE_BUDGET because these
+#: pipeline only the d-axis: no r/V tiles alongside, one accumulator
+RESIDENT_BUDGET = 1 << 22
+
+#: ops whose kernels need the whole worker axis tile-resident
+_RESIDENT_OPS = ("gram", "trimmed_mean")
 
 
 def _lane_mult(d: int) -> int:
@@ -127,19 +140,34 @@ def autotune_report() -> dict:
     }
 
 
-def _block_candidates(s: int, d: int) -> list[tuple[int, int]]:
+def _resident_lane_block(s: int, d: int) -> int:
+    """Lane tile for a resident op: [s, bd] f32 within RESIDENT_BUDGET."""
+    return _lane_block(d, cap=max(128, (RESIDENT_BUDGET // 4) // s))
+
+
+def _block_candidates(s: int, d: int, *, bs_fixed: int | None = None,
+                      budget: int = TILE_BUDGET) -> list[tuple[int, int]]:
     """Legal (bs, bd) tiles for an ALIGNED [s, d] problem: bs from the
     sublane ladder (divisors of s), bd from the aligned-128 divisor set
-    under the VMEM cap — every candidate satisfies the same Mosaic
-    constraints ``_block_sizes`` does."""
-    bs0, bd0 = _block_sizes(s, d)
-    bss = {bs0} | {b for b in (8, 16, 32) if s % b == 0}
-    bds = {bd0}
+    under the lane cap — every candidate satisfies the same Mosaic
+    constraints ``_block_sizes`` does, AND the joint bs*bd*4 VMEM tile
+    budget (a wide bs must shrink bd with it — 32 x 65536 x f32 is 8 MiB,
+    quadruple the streaming budget).  ``bs_fixed`` pins the worker axis
+    (resident ops, which must see every row per tile)."""
+    if bs_fixed is not None:
+        bss = {bs_fixed}
+        bds = {_resident_lane_block(s, d)}
+    else:
+        bs0, bd0 = _block_sizes(s, d)
+        bss = {bs0} | {b for b in (8, 16, 32) if s % b == 0}
+        bds = {bd0}
     if d % 128 == 0:
         for bd in (128, 1024, 8192, _MAX_LANE_TILE, d):
             if bd <= min(d, _MAX_LANE_TILE) and d % bd == 0:
                 bds.add(bd)
-    return [(bs, bd) for bs in sorted(bss) for bd in sorted(bds)]
+    out = [(bs, bd) for bs in sorted(bss) for bd in sorted(bds)
+           if bs * bd * 4 <= budget]
+    return out or [(min(bss), min(bds))]
 
 
 def _time_call(fn) -> float:
@@ -168,11 +196,27 @@ def _tuned_blocks(op: str, s: int, d: int, dtype, interpret: bool) -> tuple[int,
     def call(bs, bd):
         if op == "dot_norms":
             return dk.dot_norms(g1, r1, block_s=bs, block_d=bd, interpret=interpret)
+        if op == "blend":
+            return dk.blend(g1, r1, w1, w1, block_s=bs, block_d=bd,
+                            interpret=interpret)
+        if op == "weiszfeld":
+            return wk.sq_dists(g1, r1, block_s=bs, block_d=bd, interpret=interpret)
+        if op == "gram":
+            return kk.gram(g1, block_d=bd, interpret=interpret)
+        if op == "trimmed_mean":
+            return tk.trimmed_mean(g1, 1, block_d=bd, interpret=interpret)
         return dk.blend_reduce(g1, r1, w1, w1, block_s=bs, block_d=bd,
                                interpret=interpret)
 
-    best, best_t = _block_sizes(s, d), math.inf
-    for bs, bd in _block_candidates(s, d):
+    resident = op in _RESIDENT_OPS
+    if resident:
+        cands = _block_candidates(s, d, bs_fixed=s, budget=RESIDENT_BUDGET)
+        best = (s, _resident_lane_block(s, d))
+    else:
+        cands = _block_candidates(s, d)
+        best = _block_sizes(s, d)
+    best_t = math.inf
+    for bs, bd in cands:
         t = _time_call(lambda: call(bs, bd))
         if t < best_t:
             best, best_t = (bs, bd), t
@@ -181,11 +225,15 @@ def _tuned_blocks(op: str, s: int, d: int, dtype, interpret: bool) -> tuple[int,
 
 
 def _select_blocks(op: str, gp, interpret: bool) -> tuple[int, int]:
-    """Static tiling policy, or the measured choice when autotune is on."""
+    """One selection point for EVERY matrix-level op's tiling: the static
+    policy (``_block_sizes``, or the resident-budget lane block for
+    gram/trimmed_mean), or the measured choice when autotune is on."""
     s, d = gp.shape
-    if not _AUTOTUNE:
-        return _block_sizes(s, d)
-    return _tuned_blocks(op, s, d, gp.dtype, interpret)
+    if _AUTOTUNE:
+        return _tuned_blocks(op, s, d, gp.dtype, interpret)
+    if op in _RESIDENT_OPS:
+        return s, _resident_lane_block(s, d)
+    return _block_sizes(s, d)
 
 
 def _pad_grid(g, r, pad_s: bool = True):
@@ -209,6 +257,141 @@ def _pad_grid(g, r, pad_s: bool = True):
     return g, r, s, d
 
 
+# ------------------------------------------------------- flush-path policy
+
+#: padded [S, d] f32 working-set ceiling for the single-pass flush: the
+#: whole stack must be VMEM-resident (the blend coefficients need global
+#: d-reductions, so no per-tile Delta can be emitted before they finish)
+FUSED_VMEM_BYTES = 1 << 22
+
+_PATH_CACHE: dict = {}  # (s, d) -> "fused" | "two_pass" (autotuned)
+
+
+def _padded_shape(s: int, d: int) -> tuple[int, int]:
+    """The [S, d] shape ``_pad_grid`` would produce, arithmetically."""
+    d_pad = d + (-d) % _lane_mult(d)
+    s_pad = s + ((-s) % 8 if s > 8 else 0)
+    return s_pad, d_pad
+
+
+def flush_path(s: int, d: int) -> str:
+    """Which flush a [s, d] stack takes: ``"fused"`` (one ``fused_flush``
+    kernel, VMEM-resident) or ``"two_pass"`` (``dot_norms`` +
+    ``blend_reduce``).  Deterministic in the shape — every call site
+    (flat engines, sharded pods, instrumentation, benchmarks) resolves
+    through here, so the bit-for-bit oracles stay path-consistent.  With
+    autotune on, an eligible shape is measured both ways instead.
+    """
+    s_pad, d_pad = _padded_shape(s, d)
+    if s_pad * d_pad * 4 > FUSED_VMEM_BYTES:
+        return "two_pass"
+    if _AUTOTUNE:
+        return _tuned_path(s, d)
+    return "fused"
+
+
+def _tuned_path(s: int, d: int) -> str:
+    """Measured fused-vs-two-pass choice for one eligible shape, cached.
+
+    Same eager-on-synthetic-inputs contract as ``_tuned_blocks``."""
+    key = (s, d)
+    if key in _PATH_CACHE:
+        return _PATH_CACHE[key]
+    g1 = jnp.ones((s, d), jnp.float32)
+    r1 = jnp.ones((d,), jnp.float32)
+    w1 = jnp.full((s,), 1.0 / s, jnp.float32)
+    interpret = _interpret_default()
+    t_fused = _time_call(lambda: _flush_fused(
+        g1, r1, 0.5, "drag", w=w1, discounts=None, init=None, boot_aw=None,
+        interpret=interpret))
+    t_two = _time_call(lambda: _flush_two_pass(
+        g1, r1, 0.5, "drag", w=w1, discounts=None, init=None, boot_aw=None,
+        interpret=interpret))
+    path = "fused" if t_fused <= t_two else "two_pass"
+    _PATH_CACHE[key] = path
+    return path
+
+
+def _flush_two_pass(g, r, c: float, mode: str, *, w, discounts, init,
+                    boot_aw, interpret):
+    """dot_norms + blend_reduce — the exact pre-existing op sequence
+    (bit-for-bit with what the callers previously inlined)."""
+    dots, gsq, rsq = dot_norms_stats(g, r, interpret=interpret)
+    if mode == "mean":
+        a = jnp.ones_like(dots)
+        b = jnp.zeros_like(dots)
+        lam = jnp.zeros_like(dots)
+    else:
+        a, b, lam = calibrate_coeffs(dots, gsq, rsq, c, mode, discounts)
+    wf = jnp.asarray(w, jnp.float32)
+    aw, bw = wf * a, wf * b
+    if init is not None:
+        u = jnp.zeros_like(aw) if boot_aw is None else jnp.asarray(boot_aw, jnp.float32)
+        aw = jnp.where(init, aw, u)
+        bw = jnp.where(init, bw, 0.0)
+        lam = jnp.where(init, lam, 0.0)
+    delta = blend_reduce(g, r, aw, bw, interpret=interpret)
+    return delta, lam, (dots, gsq, rsq)
+
+
+def _flush_fused(g, r, c: float, mode: str, *, w, discounts, init, boot_aw,
+                 interpret):
+    """One ``fused_flush`` kernel over the padded stack."""
+    s, d = g.shape
+    gp, rp, _, _ = _pad_grid(g, r)
+    sp = gp.shape[0]
+    phi = (jnp.ones((s,), jnp.float32) if discounts is None
+           else jnp.asarray(discounts, jnp.float32))
+    wf = jnp.asarray(w, jnp.float32)
+    u = (jnp.zeros((s,), jnp.float32) if boot_aw is None
+         else jnp.asarray(boot_aw, jnp.float32))
+    if sp != s:  # padded rows: w = u = 0 -> exact-zero contribution
+        phi, _ = _pad_to(phi, sp, axis=0)
+        wf, _ = _pad_to(wf, sp, axis=0)
+        u, _ = _pad_to(u, sp, axis=0)
+    sel = (jnp.ones((1,), jnp.float32) if init is None
+           else jnp.asarray(init).astype(jnp.float32).reshape(1))
+    delta, dots, gsq, rsq = dk.fused_flush(
+        gp, rp, phi, wf, u, sel, c=c, mode=mode, interpret=interpret)
+    dots, gsq = dots[:s], gsq[:s]
+    if mode == "mean":
+        lam = jnp.zeros((s,), jnp.float32)
+    else:
+        # same formula on the same kernel-reduced scalars the in-kernel
+        # coefficients used — bit-identical lam, no second HBM pass
+        _, _, lam = calibrate_coeffs(dots, gsq, rsq, c, mode, discounts)
+    if init is not None:
+        lam = jnp.where(init, lam, 0.0)
+    return delta[:d], lam, (dots, gsq, rsq)
+
+
+def calibrated_reduce(g, r, c: float, mode: str, *, w, discounts=None,
+                      init=None, boot_aw=None, interpret: bool | None = None):
+    """The whole calibrated flush over flat G:[S,d] — fused or two-pass.
+
+    The ONE entry point every flush takes (flat engines, async stream,
+    sharded pods): ``flush_path`` picks single-pass ``fused_flush`` for
+    VMEM-resident stacks, else the streaming ``dot_norms`` +
+    ``blend_reduce`` pair.
+
+    ``w``: ALREADY-normalised [S] aggregation weights (callers own
+    normalisation — the sharded plane normalises globally, then slices).
+    ``mode``: "drag" / "br_drag" / "mean" (a=1, b=0, lam=0).
+    ``init`` (optional bool scalar): DRAG bootstrap switch — when falsy
+    the flush reduces with ``boot_aw`` (e.g. uniform 1/S) instead of
+    ``w * a`` and zero r-coefficients/lam (eq. 5a).
+
+    Returns (delta [d] f32, lam [S], (dots, g_sq, r_sq)).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    s, d = g.shape
+    if flush_path(s, d) == "fused":
+        return _flush_fused(g, r, c, mode, w=w, discounts=discounts,
+                            init=init, boot_aw=boot_aw, interpret=interpret)
+    return _flush_two_pass(g, r, c, mode, w=w, discounts=discounts,
+                           init=init, boot_aw=boot_aw, interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("c", "mode", "interpret"))
 def drag_calibrate(g, r, c: float, mode: str = "drag", interpret: bool | None = None):
     """Fused eqs. (10)+(11)/(15) over G:[S,d], r:[d].
@@ -217,7 +400,7 @@ def drag_calibrate(g, r, c: float, mode: str = "drag", interpret: bool | None = 
     """
     interpret = _interpret_default() if interpret is None else interpret
     gp, rp, s, d = _pad_grid(g, r)
-    bs, bd = _block_sizes(*gp.shape)
+    bs, bd = _select_blocks("blend", gp, interpret)
     dots, gsq, rsq = dk.dot_norms(gp, rp, block_s=bs, block_d=bd, interpret=interpret)
     a, b, lam = calibrate_coeffs(dots[:s], gsq[:s], rsq, c, mode)
     if gp.shape[0] != s:  # padded rows blend with zero coefficients
@@ -278,22 +461,17 @@ def drag_calibrate_reduce(
     g, r, c: float, mode: str = "drag", discounts=None, weights=None,
     interpret: bool | None = None,
 ):
-    """The whole DRAG/BR-DRAG flush over flat G:[S,d] — two HBM passes.
+    """The whole DRAG/BR-DRAG flush over flat G:[S,d].
 
-    Pass 1 (``dot_norms``) produces the per-worker scalars; the blend
-    coefficients, staleness discounts phi(tau), and normalised
-    aggregation weights (uniform / trust reputations) are folded into
-    [S]-sized vectors on-host; pass 2 (``blend_reduce``) emits Delta
-    without materialising the calibrated stack.
+    Normalises the aggregation weights (uniform / trust reputations) and
+    defers to :func:`calibrated_reduce` — one ``fused_flush`` pass for
+    VMEM-resident stacks, else ``dot_norms`` + ``blend_reduce``.
 
     Returns (delta [d] f32, lam [S], (dots, g_sq, r_sq)).
     """
-    s = g.shape[0]
-    dots, gsq, rsq = dot_norms_stats(g, r, interpret=interpret)
-    a, b, lam = calibrate_coeffs(dots, gsq, rsq, c, mode, discounts)
-    w = normalize_weights(weights, s)
-    delta = blend_reduce(g, r, w * a, w * b, interpret=interpret)
-    return delta, lam, (dots, gsq, rsq)
+    w = normalize_weights(weights, g.shape[0])
+    return calibrated_reduce(g, r, c, mode, w=w, discounts=discounts,
+                             interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("iters", "interpret"))
@@ -304,7 +482,7 @@ def geometric_median(g, iters: int = 8, eps: float = 1e-8, interpret: bool | Non
     # iteration; padded rows would enter the Weiszfeld weights, so the
     # worker axis keeps its exact-divisor tiling instead
     gp, d0 = _pad_to(g, _lane_mult(g.shape[1]), axis=1)
-    bs, bd = _block_sizes(*gp.shape)
+    bs, bd = _select_blocks("weiszfeld", gp, interpret)
     z = jnp.mean(gp.astype(jnp.float32), axis=0)
 
     def body(z, _):
@@ -317,17 +495,42 @@ def geometric_median(g, iters: int = 8, eps: float = 1e-8, interpret: bool | Non
     return z[:d0].astype(g.dtype)
 
 
+#: regime gate for the trimmed-mean cascade kernel: the unrolled
+#: compare-exchange network is O(s * trim) min/max per coordinate and
+#: O(s * trim) trace size — past this, rank selection wins
+_CASCADE_MAX = 512
+
+
 @partial(jax.jit, static_argnames=("trim", "interpret"))
 def trimmed_mean(g, trim: int, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
+    s = g.shape[0]
+    if s * trim > _CASCADE_MAX:  # large-S regime: lax.top_k rank selection
+        return tk.trimmed_mean_rank(g, trim)
     # lane-align; padded zero columns are trimmed/averaged among
     # themselves and sliced off — real coordinates never see them
-    s = g.shape[0]
     gp, d0 = _pad_to(g, _lane_mult(g.shape[1]), axis=1)
-    # whole worker axis is tile-resident here: cap the lane tile so the
-    # [S, bd] f32 block stays ~512 KiB
-    bd = _lane_block(gp.shape[1], cap=max(128, (1 << 17) // s))
+    _, bd = _select_blocks("trimmed_mean", gp, interpret)
     return tk.trimmed_mean(gp, trim, block_d=bd, interpret=interpret)[:d0]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pairwise_sq_dists(g, interpret: bool | None = None):
+    """All-pairs ||g_i - g_j||^2 over G:[S,d] — one Gram pass, [S,S] f32.
+
+    The Krum-family front half: d2 = sq_i + sq_j - 2 * (G @ G.T) with the
+    row sq-norms read off the Gram diagonal, clamped at 0 (reassociation
+    can push tiny true distances negative).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    s = g.shape[0]
+    gp, _ = _pad_to(g.astype(jnp.float32), _lane_mult(g.shape[1]), axis=1)
+    if s > 8:  # zero rows: zero Gram entries, sliced off below
+        gp, _ = _pad_to(gp, 8, axis=0)
+    _, bd = _select_blocks("gram", gp, interpret)
+    gm = kk.gram(gp, block_d=bd, interpret=interpret)[:s, :s]
+    sq = jnp.diagonal(gm)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gm, 0.0)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))

@@ -94,6 +94,38 @@ def trimmed_mean_ref(g, trim: int):
     return jnp.mean(gs[trim : s - trim], axis=0).astype(g.dtype)
 
 
+def trimmed_mean_masked_ref(g, trim: int):
+    """Non-finite-aware trimmed mean oracle (Byzantine overflow rows).
+
+    NaN/inf entries are excluded outright; the ``trim`` largest/smallest
+    among the FINITE entries are dropped and the divisor is the true
+    per-column keep count.  Columns with fewer than ``2*trim + 1`` finite
+    entries yield 0.0.  On all-finite stacks this equals
+    :func:`trimmed_mean_ref` exactly (multiset trim, ties included).
+    """
+    gf = g.astype(jnp.float32)
+    valid = jnp.isfinite(gf)
+    nval = jnp.sum(valid.astype(jnp.float32), axis=0)
+    total = jnp.sum(jnp.where(valid, gf, 0.0), axis=0)
+    # sorts push invalid entries to the far end of each side; slice the
+    # trim extremes and mask out any sentinel that leaked in (columns
+    # with < trim finite entries)
+    hi = jnp.sort(jnp.where(valid, gf, -jnp.inf), axis=0)[g.shape[0] - trim:]
+    lo = jnp.sort(jnp.where(valid, gf, jnp.inf), axis=0)[:trim]
+    hi_sum = jnp.sum(jnp.where(jnp.isfinite(hi), hi, 0.0), axis=0)
+    lo_sum = jnp.sum(jnp.where(jnp.isfinite(lo), lo, 0.0), axis=0)
+    keep = nval - 2.0 * trim
+    kept = total - hi_sum - lo_sum
+    return jnp.where(keep >= 1.0, kept / jnp.maximum(keep, 1.0), 0.0).astype(g.dtype)
+
+
+def pairwise_sq_dists_ref(g):
+    """[S, d] -> [S, S] squared distances (Gram identity, f32)."""
+    f32 = g.astype(jnp.float32)
+    sq = jnp.sum(f32 * f32, axis=-1)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (f32 @ f32.T), 0.0)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """Materialised-softmax attention with GQA + causal/window masking.
 

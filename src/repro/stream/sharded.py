@@ -6,8 +6,9 @@ laid out with a plain ``NamedSharding`` over a mesh axis (rows = clients
 shard over the pod axis; metadata stays replicated — it is O(K), not
 O(K·d)).  This is what lets the async stream engine ride
 ``launch.train``'s SPMD round: each pod ingests its own clients and runs
-the fused two-pass flush (``dot_norms`` + ``blend_reduce``) over ITS
-rows only.
+the fused flush (``kernels.ops.calibrated_reduce`` — one ``fused_flush``
+pass for VMEM-resident sub-stacks, else ``dot_norms`` +
+``blend_reduce``) over ITS rows only.
 
 Routing: ``client_id`` hash-routes to a home pod (:func:`route_pod`),
 falling back to the least-full pod when the home sub-buffer is full —
@@ -23,7 +24,7 @@ pod scale.  Everything cross-pod is ONE ``psum``:
   * the aggregation weights (staleness discounts × trust reputations)
     are computed REPLICATED from the replicated metadata and normalised
     globally before the blend — no collective;
-  * each pod's ``blend_reduce`` emits a partial ``[d]`` weighted sum;
+  * each pod's flush emits a partial ``[d]`` weighted sum;
     the partials — together with the per-row DoD/trust scalars,
     scattered into their ``[p, K/p]`` slots — meet in exactly one
     ``psum`` (:func:`psum_bundle`, the probe point counted by
@@ -268,26 +269,22 @@ def psum_bundle(bundle: pt.Pytree, axis_name: str | None):
 
 def _pod_passes(g_local, r_flat, w_local, disc_local, *, mode, c, init,
                 k_total, interpret):
-    """One pod's share of the flush: the SAME two fused HBM passes the
-    single-buffer flush runs, over the local ``[K/p, d]`` rows only.
+    """One pod's share of the flush: the SAME fused flush the
+    single-buffer plane runs (``kops.calibrated_reduce`` — single-pass
+    when the local stack is VMEM-resident, two streaming passes
+    otherwise), over the local ``[K/p, d]`` rows only.
 
     Returns (partial delta [d], dots [K/p], g_sq [K/p], lam [K/p],
     r_sq []).  The partial delta carries the globally-normalised weights
-    already multiplied in, so partials sum directly.
+    already multiplied in, so partials sum directly.  The bootstrap
+    fallback (eq. 5a) is uniform 1/K over the GLOBAL worker count.
     """
-    dots, gsq, rsq = kops.dot_norms_stats(g_local, r_flat, interpret=interpret)
-    if mode == "mean":
-        a = jnp.ones_like(dots)
-        b = jnp.zeros_like(dots)
-        lam = jnp.zeros_like(dots)
-    else:
-        a, b, lam = kops.calibrate_coeffs(dots, gsq, rsq, c, mode, disc_local)
-    aw, bw = w_local * a, w_local * b
-    if init is not None:  # DRAG bootstrap (eq. 5a): uniform raw mean
-        aw = jnp.where(init, aw, 1.0 / k_total)
-        bw = jnp.where(init, bw, 0.0)
-        lam = jnp.where(init, lam, 0.0)
-    partial = kops.blend_reduce(g_local, r_flat, aw, bw, interpret=interpret)
+    kp = g_local.shape[0]
+    partial, lam, (dots, gsq, rsq) = kops.calibrated_reduce(
+        g_local, r_flat, c, mode, w=w_local, discounts=disc_local,
+        init=init, boot_aw=jnp.full((kp,), 1.0 / k_total, jnp.float32),
+        interpret=interpret,
+    )
     return partial, dots, gsq, lam, rsq
 
 
@@ -393,9 +390,9 @@ def drag_round_step(
     """``drag.round_step_flat`` on the sharded plane.
 
     Identical semantics and — at p = 1 — identical operations: the same
-    ``dot_norms_stats`` / ``calibrate_coeffs`` / ``normalize_weights`` /
-    ``blend_reduce`` sequence over the same ``[K, d]`` rows, so the
-    single-pod flush is bit-for-bit the single-buffer flush.
+    ``kops.calibrated_reduce`` flush (same ``flush_path`` selection,
+    same kernels, same operation order) over the same ``[K, d]`` rows,
+    so the single-pod flush is bit-for-bit the single-buffer flush.
 
     Returns (params', state', metrics, (dots, g_sq, r_sq)).
     """

@@ -112,6 +112,7 @@ class TestLabelFlipping:
             b_mal["y"], poisoned.n_classes - b_clean["y"] - 1
         )
 
+    @pytest.mark.slow
     def test_benign_clients_and_root_data_unaffected(self):
         clean, poisoned = self._paired(flip_fraction=1.0)
         ben = int(np.where(~poisoned.malicious)[0][0])
@@ -121,6 +122,7 @@ class TestLabelFlipping:
         root = poisoned.root_batches(np.random.RandomState(11), 2, 4, 500)
         assert root["y"].min() >= 0 and root["y"].max() < poisoned.n_classes
 
+    @pytest.mark.slow
     def test_partial_flip_fraction(self):
         """The paper's 50% flip: about half the malicious samples move,
         and every moved label is the involutive L - l - 1 image."""

@@ -1,0 +1,254 @@
+"""Single-pass fused flush + crossover policy + robust-reducer kernels.
+
+ISSUE acceptance:
+
+  * the fused single-pass flush is pinned to the pytree/jnp oracle AND
+    to the two-pass path at 1e-5 across the crossover grid, including
+    non-aligned shapes (S not a multiple of 8, d not a multiple of 128)
+    and the all-quarantined (zero-weight) fallback;
+  * ``flush_path`` is deterministic in the shape and flips to two_pass
+    exactly at the VMEM-residency boundary;
+  * ``_block_candidates`` respects the JOINT bs*bd*4 tile budget (the
+    32 x 65536 = 8 MiB proposal bug);
+  * the trimmed-mean kernels implement the non-finite exclusion
+    semantics (NaN / +-inf rows, ties, short columns) in BOTH regimes
+    (compare-exchange cascade and lax.top_k rank selection);
+  * the tiled Gram kernel matches the pairwise-distance oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import trimmed_mean as tk
+
+
+def _gr(shape, seed=0):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, shape, jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (shape[1],), jnp.float32)
+    return g, r
+
+
+def _oracle_delta(g, r, c, mode, w, discounts=None):
+    dots, gsq, rsq = ref.dot_norms_ref(g, r)
+    if mode == "mean":
+        a, b = jnp.ones_like(dots), jnp.zeros_like(dots)
+    else:
+        a, b, _ = ref.calibrate_coeffs(dots, gsq, rsq, c, mode, discounts)
+    return ref.blend_reduce_ref(g, r, w * a, w * b)
+
+
+# ------------------------------------------------------ crossover parity
+class TestFusedFlushParity:
+    # aligned, non-aligned-S, non-aligned-d, both non-aligned
+    GRID = [(8, 4096), (5, 700), (33, 1000), (16, 12545), (4, 11)]
+
+    @pytest.mark.parametrize("s,d", GRID)
+    @pytest.mark.parametrize("mode", ["drag", "br_drag", "mean"])
+    def test_fused_vs_two_pass_vs_oracle(self, s, d, mode):
+        g, r = _gr((s, d), seed=s * 1000 + d)
+        w = ops.normalize_weights(jnp.linspace(0.5, 1.5, s), s)
+        kw = dict(w=w, discounts=None, init=None, boot_aw=None, interpret=True)
+        d_fused, l_fused, st_fused = ops._flush_fused(g, r, 0.4, mode, **kw)
+        d_two, l_two, st_two = ops._flush_two_pass(g, r, 0.4, mode, **kw)
+        d_ref = _oracle_delta(g, r, 0.4, mode, w)
+        scale = max(1.0, float(jnp.max(jnp.abs(d_ref))))
+        np.testing.assert_allclose(
+            np.asarray(d_fused) / scale, np.asarray(d_ref) / scale, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(d_fused) / scale, np.asarray(d_two) / scale, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(l_fused), np.asarray(l_two), atol=1e-6
+        )
+        for a, b in zip(st_fused, st_two):  # shared phase-1 stats
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5
+            )
+
+    def test_discounts_and_bootstrap_select(self):
+        s, d = 7, 900  # both axes non-aligned
+        g, r = _gr((s, d), seed=3)
+        phi = jnp.linspace(0.2, 1.0, s)
+        w = ops.normalize_weights(None, s)
+        boot = jnp.full((s,), 1.0 / s, jnp.float32)
+        for init in (jnp.asarray(True), jnp.asarray(False)):
+            kw = dict(w=w, discounts=phi, init=init, boot_aw=boot, interpret=True)
+            d_f, l_f, _ = ops._flush_fused(g, r, 0.5, "drag", **kw)
+            d_t, l_t, _ = ops._flush_two_pass(g, r, 0.5, "drag", **kw)
+            np.testing.assert_allclose(
+                np.asarray(d_f), np.asarray(d_t), rtol=1e-5, atol=1e-5
+            )
+            np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_t), atol=1e-6)
+            if not bool(init):  # bootstrap: uniform raw mean, lam = 0
+                np.testing.assert_allclose(
+                    np.asarray(d_f), np.asarray(jnp.mean(g, axis=0)),
+                    rtol=1e-5, atol=1e-5,
+                )
+                assert float(jnp.max(jnp.abs(l_f))) == 0.0
+
+    def test_zero_weight_rows_all_quarantined(self):
+        """normalize_weights' all-quarantined fallback (uniform) must ride
+        both paths identically — and a PARTIAL zero-weight row set must
+        contribute exactly zero."""
+        s, d = 6, 500
+        g, r = _gr((s, d), seed=4)
+        w_all_zero = ops.normalize_weights(jnp.zeros((s,)), s)  # -> uniform
+        w_partial = ops.normalize_weights(
+            jnp.array([1.0, 0.0, 2.0, 0.0, 1.0, 0.0]), s
+        )
+        for w in (w_all_zero, w_partial):
+            kw = dict(w=w, discounts=None, init=None, boot_aw=None, interpret=True)
+            d_f, _, _ = ops._flush_fused(g, r, 0.4, "drag", **kw)
+            d_t, _, _ = ops._flush_two_pass(g, r, 0.4, "drag", **kw)
+            d_ref = _oracle_delta(g, r, 0.4, "drag", w)
+            np.testing.assert_allclose(
+                np.asarray(d_f), np.asarray(d_ref), rtol=1e-5, atol=1e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(d_f), np.asarray(d_t), rtol=1e-5, atol=1e-5
+            )
+        # rows with zero weight are excluded exactly, not approximately
+        g_poison = g.at[1].set(1e30).at[3].set(-1e30).at[5].set(1e30)
+        d_f, _, _ = ops._flush_fused(
+            g_poison, r, 0.4, "mean", w=w_partial, discounts=None, init=None,
+            boot_aw=None, interpret=True,
+        )
+        assert bool(jnp.all(jnp.isfinite(d_f)))
+
+    def test_calibrated_reduce_follows_flush_path(self):
+        from repro.kernels.instrument import (
+            SINGLE_PASS_CALLS, TWO_PASS_CALLS, count_kernel_calls)
+
+        w = ops.normalize_weights(None, 8)
+        lim = ops.FUSED_VMEM_BYTES // (8 * 4)
+        for d, want in (
+            (2048, SINGLE_PASS_CALLS),
+            (lim + (1 << 13), TWO_PASS_CALLS),
+        ):
+            g, r = _gr((8, d), seed=5)
+            with count_kernel_calls() as calls:
+                ops.calibrated_reduce(g, r, 0.3, "drag", w=w, interpret=True)
+            assert calls == want, (d, calls)
+        assert ops.flush_path(8, 2048) == "fused"
+        # policy flips exactly at the padded-VMEM boundary
+        assert ops.flush_path(8, lim) == "fused"
+        assert ops.flush_path(8, lim + (1 << 13)) == "two_pass"
+
+
+# ----------------------------------------------------- tiling candidates
+class TestBlockCandidates:
+    def test_joint_tile_budget_capped(self):
+        """Every autotune candidate obeys bs * bd * 4 <= TILE_BUDGET:
+        s=32 once proposed 32 x 65536 x f32 = 8 MiB, 4x the streaming
+        budget."""
+        for s, d in [(32, 1 << 20), (16, 1 << 18), (8, 1 << 16), (64, 1 << 19)]:
+            cands = ops._block_candidates(s, d)
+            assert cands, (s, d)
+            for bs, bd in cands:
+                assert bs * bd * 4 <= ops.TILE_BUDGET, (s, d, bs, bd)
+        # the default streaming tile itself survives the cap exactly
+        assert (8, ops._MAX_LANE_TILE) in ops._block_candidates(32, 1 << 20)
+
+    def test_resident_candidates_pin_worker_axis(self):
+        for s, d in [(8, 1 << 16), (64, 1 << 16)]:
+            cands = ops._block_candidates(
+                s, d, bs_fixed=s, budget=ops.RESIDENT_BUDGET
+            )
+            assert cands
+            for bs, bd in cands:
+                assert bs == s
+                assert bs * bd * 4 <= ops.RESIDENT_BUDGET, (s, d, bd)
+
+
+# ------------------------------------------------------- robust reducers
+class TestTrimmedMeanNonFinite:
+    def _adversarial(self, s=10, d=384, seed=6):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (s, d), jnp.float32)
+        g = g.at[0].set(jnp.nan)          # whole-row NaN (overflow attack)
+        g = g.at[1, ::2].set(jnp.inf)     # half +inf
+        g = g.at[2, ::3].set(-jnp.inf)    # third -inf
+        g = g.at[3].set(g[4])             # exact tie rows
+        return g
+
+    @pytest.mark.parametrize("trim", [1, 2, 3])
+    def test_cascade_masks_non_finite(self, trim):
+        g = self._adversarial()
+        out = ops.trimmed_mean(g, trim, interpret=True)
+        want = ref.trimmed_mean_masked_ref(g, trim)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+    @pytest.mark.parametrize("trim", [1, 2, 3])
+    def test_rank_path_masks_non_finite(self, trim):
+        g = self._adversarial()
+        out = tk.trimmed_mean_rank(g, trim)
+        want = ref.trimmed_mean_masked_ref(g, trim)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+    def test_short_columns_gate_to_zero(self):
+        """A column with fewer than 2*trim+1 finite entries yields 0.0 —
+        never a sentinel-polluted average or NaN."""
+        g = jax.random.normal(jax.random.PRNGKey(7), (6, 256), jnp.float32)
+        g = g.at[:5, 0].set(jnp.nan)   # 1 finite < 2*2+1
+        g = g.at[:, 1].set(jnp.nan)    # 0 finite
+        g = g.at[:4, 2].set(jnp.inf)   # 2 finite < 5
+        out = ops.trimmed_mean(g, 2, interpret=True)
+        assert float(out[0]) == 0.0 and float(out[1]) == 0.0
+        assert float(out[2]) == 0.0
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.trimmed_mean_masked_ref(g, 2)),
+            atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("s,trim", [(8, 1), (64, 4), (33, 2), (256, 4)])
+    def test_all_finite_matches_sort_oracle(self, s, trim):
+        """On finite stacks the masked semantics coincide with the classic
+        sort-based trim exactly — both regimes."""
+        g = jax.random.normal(jax.random.PRNGKey(s), (s, 512), jnp.float32)
+        out = ops.trimmed_mean(g, trim, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.trimmed_mean_ref(g, trim)),
+            atol=1e-5,
+        )
+
+    def test_regime_gate(self):
+        """s * trim <= _CASCADE_MAX runs the cascade kernel; beyond it the
+        rank path — same numerics either side of the gate."""
+        g = jax.random.normal(jax.random.PRNGKey(9), (128, 512), jnp.float32)
+        trim = ops._CASCADE_MAX // 128  # boundary: cascade
+        a = ops.trimmed_mean(g, trim, interpret=True)
+        b = tk.trimmed_mean_rank(g, trim)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestGramKernel:
+    @pytest.mark.parametrize("s,d", [(8, 512), (10, 700), (64, 4096), (5, 300)])
+    def test_pairwise_sq_dists_matches_oracle(self, s, d):
+        g = jax.random.normal(jax.random.PRNGKey(s + d), (s, d), jnp.float32)
+        d2 = ops.pairwise_sq_dists(g, interpret=True)
+        want = ref.pairwise_sq_dists_ref(g)
+        assert d2.shape == (s, s)
+        scale = max(1.0, float(jnp.max(want)))
+        np.testing.assert_allclose(
+            np.asarray(d2) / scale, np.asarray(want) / scale, atol=1e-5
+        )
+
+    def test_krum_family_flat_matches_pytree_scores(self):
+        from repro.core import aggregators as agg
+
+        g = jax.random.normal(jax.random.PRNGKey(11), (12, 800), jnp.float32)
+        for f in (1, 2):
+            np.testing.assert_allclose(
+                np.asarray(agg._krum_scores_flat(g, f)),
+                np.asarray(agg._krum_scores(g, f)),
+                rtol=1e-5, atol=1e-3,
+            )
+            assert int(jnp.argmin(agg._krum_scores_flat(g, f))) == int(
+                jnp.argmin(agg._krum_scores(g, f))
+            )

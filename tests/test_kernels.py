@@ -222,21 +222,38 @@ class TestPadding:
 
 
 class TestKernelCallStructure:
-    """ISSUE 3 acceptance: the fused serving flush is exactly two kernel
-    invocations over G — dot_norms + blend_reduce, no blend (V is never
-    materialised).  The full stream-flush variant (trust + staleness)
-    lives in tests/test_flat.py::TestTwoPassFlush."""
+    """ISSUE acceptance: the fused serving flush is AT MOST two kernel
+    invocations over G — a single ``fused_flush`` when the stack is
+    VMEM-resident, else dot_norms + blend_reduce; never ``blend`` (V is
+    never materialised).  The full stream-flush variant (trust +
+    staleness) lives in tests/test_flat.py::TestTwoPassFlush."""
 
-    def test_drag_calibrate_reduce_is_two_passes(self):
-        from repro.kernels.instrument import TWO_PASS_CALLS, count_kernel_calls
+    def test_drag_calibrate_reduce_is_single_pass_when_resident(self):
+        from repro.kernels.instrument import (
+            SINGLE_PASS_CALLS, count_kernel_calls, expected_flush_calls)
 
         g, r = _gr((16, 512), jnp.float32, seed=30)
+        assert ops.flush_path(16, 512) == "fused"
+        assert expected_flush_calls(16, 512) == SINGLE_PASS_CALLS
         with count_kernel_calls() as calls:
             delta, lam, stats = ops.drag_calibrate_reduce(
                 g, r, 0.3, "drag",
                 discounts=jnp.linspace(1.0, 0.5, 16),
                 weights=jnp.linspace(0.1, 1.0, 16),
             )
+        assert np.isfinite(np.asarray(delta)).all()
+        assert calls == SINGLE_PASS_CALLS
+
+    def test_drag_calibrate_reduce_is_two_passes_beyond_vmem(self):
+        from repro.kernels.instrument import (
+            TWO_PASS_CALLS, count_kernel_calls, expected_flush_calls)
+
+        s, d = 16, 73728  # padded [16, 73728] f32 = 4.5 MiB > FUSED_VMEM_BYTES
+        assert ops.flush_path(s, d) == "two_pass"
+        assert expected_flush_calls(s, d) == TWO_PASS_CALLS
+        g, r = _gr((s, d), jnp.float32, seed=31)
+        with count_kernel_calls() as calls:
+            delta, lam, stats = ops.drag_calibrate_reduce(g, r, 0.3, "drag")
         assert np.isfinite(np.asarray(delta)).all()
         assert calls == TWO_PASS_CALLS
 

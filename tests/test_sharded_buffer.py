@@ -214,8 +214,9 @@ class TestP1BitForBit:
 class TestOnePsum:
     """ISSUE acceptance: exactly one cross-pod reduction per flush —
     counted at the ``psum_bundle`` call site AND as ``psum`` primitives
-    in the lowered jaxpr; per pod the flush stays the two fused HBM
-    passes (``dot_norms`` + ``blend_reduce``, never ``blend``)."""
+    in the lowered jaxpr; per pod the flush stays the minimum fused HBM
+    passes (one ``fused_flush`` at these VMEM-resident sub-buffer sizes,
+    never ``blend``)."""
 
     def test_emulation_flush_is_one_bundle(self):
         key = jax.random.PRNGKey(2)
@@ -225,10 +226,10 @@ class TestOnePsum:
             sharded.hierarchical_flush(slots3, r, mode="drag", c=0.3)
         assert calls == instrument.ONE_PSUM_CALLS, calls
 
-    def test_full_sharded_flush_one_bundle_two_passes_per_pod(self):
+    def test_full_sharded_flush_one_bundle_min_passes_per_pod(self):
         """The whole trust-enabled staleness-aware sharded flush: one
-        psum_bundle, and per pod exactly one dot_norms + one
-        blend_reduce (the PR-3 invariant, now per sub-buffer)."""
+        psum_bundle, and per pod exactly one fused_flush (the minimum-
+        pass invariant, per sub-buffer — these stacks are VMEM-resident)."""
         from repro.kernels.instrument import count_kernel_calls
 
         shards = 2
@@ -236,10 +237,10 @@ class TestOnePsum:
             with count_kernel_calls() as kern:
                 _flush_pair("drag", shards=shards)
         assert coll == instrument.ONE_PSUM_CALLS, coll
-        # _flush_pair also runs the single-buffer oracle flush (1 call
-        # of each kernel) next to the sharded one (1 per pod)
-        assert kern["dot_norms"] == shards + 1
-        assert kern["blend_reduce"] == shards + 1
+        # _flush_pair also runs the single-buffer oracle flush (1 fused
+        # call) next to the sharded one (1 per pod)
+        assert kern["fused_flush"] == shards + 1
+        assert kern["dot_norms"] == 0 and kern["blend_reduce"] == 0
         assert kern["blend"] == 0
 
     def test_mesh_flush_lowers_to_one_psum(self):

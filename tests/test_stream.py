@@ -280,7 +280,13 @@ def _mlp_setup(n_workers=12, mal=0.0, attack="none"):
 
 
 class TestBridgeEquivalence:
-    @pytest.mark.parametrize("alg", ["fedavg", "drag", "br_drag"])
+    # tier-1 keeps one algorithm (drag — the richest path: calibration +
+    # bootstrap + reference EMA); the other two ride the weekly slow tier
+    @pytest.mark.parametrize("alg", [
+        pytest.param("fedavg", marks=pytest.mark.slow),
+        "drag",
+        pytest.param("br_drag", marks=pytest.mark.slow),
+    ])
     def test_bit_for_bit_vs_federated_round(self, alg):
         """ISSUE acceptance: capacity-S, zero-latency, phi=none stream ==
         synchronous federated_round, exactly, over a 3-round trajectory."""
