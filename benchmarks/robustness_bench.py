@@ -41,11 +41,11 @@ import time
 if __package__ in (None, ""):  # `python benchmarks/robustness_bench.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+import numpy as np
+
 from benchmarks.common import emit
 from repro.adversary.scenarios import (
     Scenario,
-    run_cell,
-    run_scenario,
     run_stream_scenario,
     stream_spec,
     sync_spec,
@@ -154,39 +154,76 @@ def matrix_specs(smoke: bool) -> list[tuple[str, object]]:
     return specs
 
 
-def sync_matrix(smoke: bool) -> list[dict]:
+def sync_matrix(smoke: bool) -> "tuple[list[dict], dict]":
+    """The sync cells, executed through the grouped sweep engine.
+
+    Every (heterogeneity x aggregator x attack x seed) trajectory is
+    enumerated up front and handed to
+    :func:`repro.sweep.run_scenarios_grouped`: cells that differ only in
+    seed/heterogeneity share ONE compiled vmapped program, and each
+    cell's record carries its amortised ``compile_s``/``run_s`` share of
+    the group's wall clock.  Returns (cells, sweep provenance)."""
+    from repro.sweep import run_scenarios_grouped
+
     hets = [0.5, 1.5] if smoke else [0.3, 1.0, 3.0]
     seeds = (0, 1) if smoke else (0, 1, 2, 3, 4)
     rounds = 40 if smoke else 80
     aggs = AGGREGATORS_SMOKE if smoke else AGGREGATORS_FULL
-    cells = []
+    scenarios, index = [], {}
     for h in hets:
         for agg in aggs:
             proto = Scenario(aggregator=agg, heterogeneity=h, rounds=rounds)
+            for attack, kw in [("none", ())] + ATTACKS:
+                for seed in seeds:
+                    index[(h, agg, attack, seed)] = len(scenarios)
+                    scenarios.append(dataclasses.replace(
+                        proto, attack=attack, attack_kw=kw, seed=seed
+                    ))
+    results, provenance = run_scenarios_grouped(scenarios)
+
+    cells = []
+    for h in hets:
+        for agg in aggs:
+            res = lambda attack, seed: results[index[(h, agg, attack, seed)]]
             # one attack-free baseline per (aggregator, heterogeneity, seed)
-            baselines = {
-                seed: run_scenario(
-                    dataclasses.replace(proto, attack="none", seed=seed)
-                )["final_loss"]
-                for seed in seeds
-            }
+            baselines = {s: res("none", s)["final_loss"] for s in seeds}
+            base = [res("none", s) for s in seeds]
             cells.append({
                 "aggregator": agg, "attack": "none", "heterogeneity": h,
                 "malicious_fraction": 0.0,
                 "final_loss": sum(baselines.values()) / len(baselines),
                 "final_loss_per_seed": [baselines[s] for s in seeds],
                 "break_rate": 0.0, "seeds": len(seeds),
+                "compile_s": sum(r["compile_s"] for r in base),
+                "run_s": sum(r["run_s"] for r in base),
             })
             for attack, kw in ATTACKS:
-                sc = dataclasses.replace(proto, attack=attack, attack_kw=kw)
-                cell = run_cell(sc, BREAK_FACTOR, seeds, baselines=baselines)
+                per = [res(attack, s) for s in seeds]
+                finals = [r["final_loss"] for r in per]
+                brokes = [
+                    (not np.isfinite(f)) or f > BREAK_FACTOR * max(baselines[s], 1e-6)
+                    for s, f in zip(seeds, finals)
+                ]
+                mf = scenarios[index[(h, agg, attack, seeds[0])]].malicious_fraction
+                cell = {
+                    "aggregator": agg, "attack": attack, "heterogeneity": h,
+                    "malicious_fraction": mf,
+                    "final_loss": float(np.mean(
+                        [f for f in finals if np.isfinite(f)] or [np.inf]
+                    )),
+                    "final_loss_per_seed": [float(f) for f in finals],
+                    "break_rate": float(np.mean(brokes)),
+                    "seeds": len(seeds),
+                    "compile_s": sum(r["compile_s"] for r in per),
+                    "run_s": sum(r["run_s"] for r in per),
+                }
                 cells.append(cell)
                 emit(
                     f"robustness/{attack}/{agg}/h{h}",
                     0.0,
                     f"loss={cell['final_loss']:.4g},break={cell['break_rate']:.2f}",
                 )
-    return cells
+    return cells, provenance
 
 
 def async_matrix(smoke: bool, shards: int = 0) -> list[dict]:
@@ -316,11 +353,31 @@ def check_acceptance(cells: list[dict], *cell_groups: list[dict]) -> dict:
     return {"br_drag_trust_beats_fedavg": not failures, "failures": failures}
 
 
+def validate_grid(smoke: bool) -> dict:
+    """Validates the matrix ONCE up front: specs are hashable, so the
+    grid dedupes to its distinct cell shapes and each shape is checked
+    exactly one time — not re-validated per cell at run time (the run
+    paths below all pass ``check=False`` / pre-validated configs)."""
+    from repro.api import validate
+
+    t0 = time.time()
+    named = matrix_specs(smoke)
+    distinct = {spec for _, spec in named}
+    for spec in distinct:
+        validate(spec)
+    return {
+        "specs": len(named),
+        "distinct_validated": len(distinct),
+        "wall_s": time.time() - t0,
+    }
+
+
 def run_matrix(smoke: bool, out: str) -> dict:
     from repro.obs import MemorySink
     from repro.obs import trace as obs_trace
 
     t0 = time.time()
+    validation = validate_grid(smoke)
     # record where the matrix's wall clock goes: one span per regime
     # group on the OVERALL sink, plus one per-regime sink so each
     # group's span breakdown lands separately in the provenance (the
@@ -331,7 +388,7 @@ def run_matrix(smoke: bool, out: str) -> dict:
     with obs_trace.tracer.attached(sink):
         with obs_trace.tracer.attached(regime_sinks["sync"]):
             with obs_trace.span("sync_matrix"):
-                cells = sync_matrix(smoke)
+                cells, sweep_prov = sync_matrix(smoke)
         with obs_trace.tracer.attached(regime_sinks["async"]):
             with obs_trace.span("async_matrix"):
                 async_cells = async_matrix(smoke)
@@ -361,6 +418,9 @@ def run_matrix(smoke: bool, out: str) -> dict:
         "sharded_cells": sharded_cells,
         "detection": detection_cells,
         "acceptance": acceptance,
+        # sentinel SKIP_SECTION: sweep-engine cache counters + the
+        # once-per-grid validation record (never diffed as timings)
+        "provenance": {"validation": validation, "sweep": sweep_prov},
         "telemetry": {
             "schema_version": obs_trace.SCHEMA_VERSION,
             "spans": obs_trace.aggregate_spans(sink.events),

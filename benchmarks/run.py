@@ -40,6 +40,7 @@ def main() -> None:
         robustness_bench,
         roofline,
         stream_bench,
+        sweep_bench,
         telemetry_smoke,
     )
 
@@ -53,6 +54,7 @@ def main() -> None:
         "stream": stream_bench,
         "robustness": robustness_bench,
         "aggplane": aggplane_bench,
+        "sweep": sweep_bench,
         "telemetry": telemetry_smoke,
     }
     selected = args.only.split(",") if args.only else list(modules)

@@ -40,7 +40,12 @@ import sys
 REPORT_SCHEMA_VERSION = 1
 
 #: the bench records the sentinel knows how to diff
-BENCH_FILES = ("BENCH_stream.json", "BENCH_aggplane.json", "BENCH_robustness.json")
+BENCH_FILES = (
+    "BENCH_stream.json",
+    "BENCH_aggplane.json",
+    "BENCH_robustness.json",
+    "BENCH_sweep.json",
+)
 
 #: key suffixes marking LOWER-is-better timings
 TIME_SUFFIXES = ("_us", "_ms", "wall_s", "_s_per_call")

@@ -40,15 +40,17 @@ def collect() -> list[tuple[str, ExperimentSpec]]:
         fig9_17_byzantine,
         robustness_bench,
         stream_bench,
+        sweep_bench,
         telemetry_smoke,
     )
     from benchmarks.common import fl_spec
     from examples import adversary_lab, async_stream, byzantine_defense
-    from examples import quickstart, telemetry_tour, train_fl_cifar
+    from examples import quickstart, sweep_tour, telemetry_tour, train_fl_cifar
 
     specs: list[tuple[str, ExperimentSpec]] = []
     specs += [(f"robustness/{n}", s) for n, s in robustness_bench.matrix_specs(smoke=False)]
     specs += stream_bench.bench_specs()
+    specs += sweep_bench.bench_specs()
     specs += telemetry_smoke.bench_specs()
     for fig in (fig3_5_drag, fig6_participation, fig7_8_hparams, fig9_17_byzantine):
         specs += [(name, fl_spec(**kw)) for name, kw in fig.grid(fast=False)]
@@ -58,6 +60,7 @@ def collect() -> list[tuple[str, ExperimentSpec]]:
     specs += [(f"examples/{n}", s) for n, s in train_fl_cifar.specs()]
     specs += [(f"examples/{n}", s) for n, s in adversary_lab.specs()]
     specs += [(f"examples/{n}", s) for n, s in telemetry_tour.specs()]
+    specs += [(f"examples/sweep_tour/{n}", s) for n, s in sweep_tour.specs()]
     return specs
 
 

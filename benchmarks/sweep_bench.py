@@ -1,0 +1,200 @@
+"""Sweep-engine benchmark: grouped vmapped grids vs sequential
+``compile(spec).run()`` -> ``BENCH_sweep.json``.
+
+The grid is the sweep engine's home turf: a >=16-cell scalar-knob sweep
+(seeds x Dirichlet betas) whose cells all lower to the SAME jaxpr shape,
+so ``repro.sweep.run_sweep`` runs it as ONE compiled program vmapped
+over the group axis while the sequential path pays a fresh trace +
+compile per cell.  The bench times both, asserts bit-for-bit parity of
+the final accuracies, and reruns the grouped grid against the warm
+:class:`~repro.sweep.cache.ExecutableCache` to measure the zero-compile
+steady state.
+
+Recorded (and sentinel-diffed — the ``provenance`` section with the
+cache counters is a SKIP_SECTION):
+
+  * ``sequential_wall_s`` / ``grouped_wall_s`` / ``speedup_x`` — the
+    headline crossover (the acceptance floor is 5x);
+  * ``grouped_cells_per_wall_s`` — higher-is-better throughput;
+  * ``rerun`` — warm-cache wall clock + hit fraction (must be 1.0).
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py [--assert-cache] [--out F]
+
+``--assert-cache`` runs the grouped grid twice and fails unless the
+second pass is 100% executable-cache hits (the CI ``sweep`` job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/sweep_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+
+#: the scalar-knob grid: every cell shares the statics below and varies
+#: only (seed, beta) — one group, one compiled program
+SEEDS = tuple(range(8))
+BETAS = (0.1, 0.5)
+
+#: acceptance floor: grouped must beat sequential by at least this
+SPEEDUP_FLOOR = 5.0
+
+
+def grid_proto():
+    """The grid's shared statics: a small BR-DRAG cell under attack."""
+    from repro.api import (
+        AggregationSpec,
+        AttackSpec,
+        DataSpec,
+        ExperimentSpec,
+        ModelSpec,
+        SyncRegime,
+    )
+
+    return ExperimentSpec(
+        data=DataSpec(dataset="emnist_small", n_workers=16, beta=0.1,
+                      malicious_fraction=0.25, root_samples=256),
+        model=ModelSpec(name="mlp"),
+        aggregation=AggregationSpec(algorithm="br_drag"),
+        attack=AttackSpec(name="sign_flipping"),
+        regime=SyncRegime(rounds=6, n_selected=8, local_steps=2,
+                          batch_size=8, eval_every=3),
+    )
+
+
+def grid_specs():
+    """The >=16-cell grid: SEEDS x BETAS over the shared proto."""
+    import dataclasses
+
+    proto = grid_proto()
+    return [
+        dataclasses.replace(
+            proto, data=dataclasses.replace(proto.data, beta=beta), seed=seed
+        )
+        for beta in BETAS
+        for seed in SEEDS
+    ]
+
+
+def bench_specs() -> "list[tuple[str, object]]":
+    """Named specs for the spec-matrix CI job: the grid proto plus one
+    cell per population regime (churn / diurnal / drift) so the new
+    RegimeSpec/DataSpec fields validate and JSON round-trip."""
+    import dataclasses
+
+    from repro.api import AsyncRegime, TrustSpec
+
+    proto = grid_proto()
+    pop = AsyncRegime(flushes=20, churn_period=8.0, churn_duty=0.6,
+                      diurnal_amp=0.3, diurnal_period=16.0)
+    specs = [
+        ("sweep/grid_proto", proto),
+        ("sweep/drift", dataclasses.replace(
+            proto,
+            data=dataclasses.replace(proto.data, drift="label_shift",
+                                     drift_rate=0.25),
+        )),
+        ("sweep/churn_diurnal", dataclasses.replace(proto, regime=pop)),
+        ("sweep/trust_gated", dataclasses.replace(
+            proto,
+            trust=TrustSpec(enabled=True),
+            regime=AsyncRegime(flushes=20, trust_gated_dispatch=True),
+        )),
+    ]
+    return specs
+
+
+def run_grid(out: str, assert_cache: bool = False) -> dict:
+    from repro.api import compile_spec
+    from repro.sweep import ExecutableCache, run_sweep
+
+    specs = grid_specs()
+    cache = ExecutableCache()
+
+    # grouped: one validated, vmapped, cached program over the grid
+    t0 = time.time()
+    grouped = run_sweep(specs, cache=cache)
+    grouped_s = time.time() - t0
+    prov = grouped.provenance
+
+    # sequential: the pre-sweep idiom — compile(spec).run() per cell,
+    # each paying its own trace + compile
+    t0 = time.time()
+    sequential = [compile_spec(spec).run() for spec in specs]
+    sequential_s = time.time() - t0
+
+    # parity: same host RNG contract -> bit-for-bit identical evals
+    mismatches = [
+        i for i, (g, s) in enumerate(zip(grouped, sequential))
+        if g["accuracy"] != s["accuracy"]
+    ]
+
+    # warm rerun: every group must be an executable-cache hit
+    t0 = time.time()
+    rerun = run_sweep(specs, cache=cache, check=False)
+    rerun_s = time.time() - t0
+    rp = rerun.provenance
+    hit_fraction = rp["cache_hits"] / max(rp["groups"], 1)
+
+    speedup = sequential_s / max(grouped_s, 1e-9)
+    record = {
+        "meta": {
+            "cells": len(specs),
+            "seeds": len(SEEDS),
+            "betas": list(BETAS),
+            "speedup_floor": SPEEDUP_FLOOR,
+            "wall_s": grouped_s + sequential_s + rerun_s,
+        },
+        "grouped_wall_s": grouped_s,
+        "sequential_wall_s": sequential_s,
+        "speedup_x": speedup,
+        "grouped_cells_per_wall_s": len(specs) / max(grouped_s, 1e-9),
+        "parity_bitwise": not mismatches,
+        "rerun": {
+            "grouped_wall_s": rerun_s,
+            "cache_hit_fraction": hit_fraction,
+        },
+        "provenance": {"first": prov, "rerun": rp},
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("sweep/grid16", grouped_s * 1e6,
+         f"speedup={speedup:.1f}x,seq={sequential_s:.1f}s")
+    print(f"wrote {out}: {len(specs)} cells, grouped={grouped_s:.2f}s "
+          f"sequential={sequential_s:.2f}s speedup={speedup:.1f}x "
+          f"rerun_hits={hit_fraction:.0%}", flush=True)
+    if mismatches:
+        raise SystemExit(f"grouped/sequential parity violated: cells {mismatches}")
+    if speedup < SPEEDUP_FLOOR:
+        raise SystemExit(
+            f"speedup {speedup:.2f}x under the {SPEEDUP_FLOOR}x floor"
+        )
+    if assert_cache and hit_fraction != 1.0:
+        raise SystemExit(
+            f"rerun expected 100% cache hits, got {rp['cache_hits']}/"
+            f"{rp['groups']} (misses={rp['cache_misses']})"
+        )
+    return record
+
+
+def run() -> None:
+    """benchmarks.run entry point."""
+    run_grid("BENCH_sweep.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--assert-cache", action="store_true",
+                    help="fail unless the rerun is 100% executable-cache hits")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args()
+    run_grid(args.out, assert_cache=args.assert_cache)
+
+
+if __name__ == "__main__":
+    main()

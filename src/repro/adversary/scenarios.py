@@ -34,7 +34,6 @@ attack surface.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -116,14 +115,21 @@ def _root_reference(w, root_target, sc: Scenario):
     return shrink * (w - root_target)
 
 
-def run_scenario(sc: Scenario) -> dict:
-    """Runs one cell; returns {losses: [T], final_loss, trajectory_max}.
+def make_trajectory(sc: Scenario):
+    """The cell's whole trajectory as ONE pure function of its world
+    arrays + a traced seed — ``traj(w0, optima, malicious, benign_mean,
+    root_target, seed) -> losses [T]``.
 
-    The full trajectory is one jitted ``lax.scan`` — adversary memory,
-    trust history, and the DRAG reference EMA are all carried as scan
-    state, which is exactly the threading contract of the engine.
+    Only the STATICS of ``sc`` (aggregator, attack, dims, rounds, lr,
+    ...) are baked in; ``seed`` and ``heterogeneity`` enter exclusively
+    through the arguments (the host-built world and the PRNG seed), so
+    the same function vmaps over a group axis of (seed, heterogeneity)
+    cells — the sweep engine's grouped scenario path
+    (``repro.sweep.scenarios``) — and ``run_scenario`` jits it
+    unbatched.  Adversary memory, trust history, and the DRAG reference
+    EMA are all carried as scan state, exactly the threading contract of
+    the engine.
     """
-    optima, malicious, w0, benign_mean, root_target = _make_world(sc)
     adv = adversary_engine.resolve(sc.attack, dict(sc.attack_kw))
     use_trust = sc.aggregator == "br_drag_trust"
     tcfg = trust_mod.TrustConfig(**dict(sc.trust_kw))
@@ -133,47 +139,51 @@ def run_scenario(sc: Scenario) -> dict:
     ) else 0
     client_idx = jnp.arange(sc.n_clients, dtype=jnp.int32)
 
-    def loss_of(w):
-        return 0.5 * jnp.sum((w - benign_mean) ** 2)
+    def trajectory(w0, optima, malicious, benign_mean, root_target, seed):
+        def loss_of(w):
+            return 0.5 * jnp.sum((w - benign_mean) ** 2)
 
-    def round_step(carry, round_key):
-        w, t, adv_state, trust_state, drag_state = carry
-        k_up, k_att = jax.random.split(round_key)
-        honest = {"w": _honest_updates(w, optima, k_up, sc)}
+        def round_step(carry, round_key):
+            w, t, adv_state, trust_state, drag_state = carry
+            k_up, k_att = jax.random.split(round_key)
+            honest = {"w": _honest_updates(w, optima, k_up, sc)}
 
-        ctx = adversary_engine.AttackContext(
-            key=k_att, updates=honest, malicious_mask=malicious, round=t
-        )
-        g, adv_state = adv.craft(adv_state, ctx)
-
-        weights = trust_mod.reputation(trust_state, client_idx, tcfg) if use_trust else None
-
-        if base_agg == "drag":
-            new_w, drag_state, _ = drag.round_step(
-                {"w": w}, drag_state, g, alpha=sc.alpha, c=sc.c, weights=weights
+            ctx = adversary_engine.AttackContext(
+                key=k_att, updates=honest, malicious_mask=malicious, round=t
             )
-            new_w = new_w["w"]
-        elif base_agg == "br_drag":
-            reference = {"w": _root_reference(w, root_target, sc)}
-            new_w, _ = br_drag.round_step(
-                {"w": w}, g, reference, c=sc.c_br, weights=weights
-            )
-            new_w = new_w["w"]
-            if use_trust:
-                div, nr = trust_mod.divergence_signals(g, reference)
-                trust_state = trust_mod.observe(trust_state, client_idx, div, nr, tcfg)
-        else:
-            delta = aggregators.AGGREGATORS[base_agg](
-                g, **aggregators.rule_kwargs(base_agg, n_byzantine=n_byz)
-            )
-            new_w = w + delta["w"]
+            g, adv_state = adv.craft(adv_state, ctx)
 
-        new_carry = (new_w, t + 1, adv_state, trust_state, drag_state)
-        return new_carry, loss_of(new_w)
+            weights = (
+                trust_mod.reputation(trust_state, client_idx, tcfg)
+                if use_trust else None
+            )
 
-    @partial(jax.jit, static_argnums=())
-    def trajectory(w0):
-        keys = jax.random.split(jax.random.PRNGKey(sc.seed + 101), sc.rounds)
+            if base_agg == "drag":
+                new_w, drag_state, _ = drag.round_step(
+                    {"w": w}, drag_state, g, alpha=sc.alpha, c=sc.c, weights=weights
+                )
+                new_w = new_w["w"]
+            elif base_agg == "br_drag":
+                reference = {"w": _root_reference(w, root_target, sc)}
+                new_w, _ = br_drag.round_step(
+                    {"w": w}, g, reference, c=sc.c_br, weights=weights
+                )
+                new_w = new_w["w"]
+                if use_trust:
+                    div, nr = trust_mod.divergence_signals(g, reference)
+                    trust_state = trust_mod.observe(
+                        trust_state, client_idx, div, nr, tcfg
+                    )
+            else:
+                delta = aggregators.AGGREGATORS[base_agg](
+                    g, **aggregators.rule_kwargs(base_agg, n_byzantine=n_byz)
+                )
+                new_w = w + delta["w"]
+
+            new_carry = (new_w, t + 1, adv_state, trust_state, drag_state)
+            return new_carry, loss_of(new_w)
+
+        keys = jax.random.split(jax.random.PRNGKey(seed + 101), sc.rounds)
         carry0 = (
             w0,
             jnp.zeros((), jnp.int32),
@@ -184,7 +194,24 @@ def run_scenario(sc: Scenario) -> dict:
         _, losses = jax.lax.scan(round_step, carry0, keys)
         return losses
 
-    losses = np.asarray(trajectory(w0))
+    return trajectory
+
+
+def run_scenario(sc: Scenario) -> dict:
+    """Runs one cell; returns {losses: [T], final_loss, trajectory_max}.
+
+    The full trajectory is one jitted ``lax.scan`` over
+    :func:`make_trajectory` — the same function the grouped sweep path
+    vmaps, so a group member and a sequential cell share one lowering.
+    """
+    optima, malicious, w0, benign_mean, root_target = _make_world(sc)
+    trajectory = jax.jit(make_trajectory(sc))
+    losses = np.asarray(
+        trajectory(
+            w0, optima, malicious, benign_mean, root_target,
+            jnp.asarray(sc.seed, jnp.int32),
+        )
+    )
     return {
         "losses": losses,
         "final_loss": float(losses[-1]),

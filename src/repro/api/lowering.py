@@ -135,6 +135,26 @@ def stream_config(spec: ExperimentSpec) -> StreamConfig:
     )
 
 
+def population_model(spec: ExperimentSpec):
+    """Population-regime lowering: the AsyncRegime churn/diurnal knobs ->
+    ``repro.stream.events.PopulationModel`` (or None — the default — which
+    keeps the event stream on the exact legacy draw path)."""
+    regime = spec.regime
+    if regime.kind == "sync":
+        return None
+    if regime.churn_period <= 0.0 and regime.diurnal_amp <= 0.0:
+        return None
+    from repro.stream.events import PopulationModel
+
+    return PopulationModel(
+        churn_period=regime.churn_period,
+        churn_duty=regime.churn_duty,
+        diurnal_amp=regime.diurnal_amp,
+        diurnal_period=regime.diurnal_period,
+        seed=spec.seed,
+    )
+
+
 def megastep_params(spec: ExperimentSpec) -> dict:
     """Compiled-serving lowering: the AsyncRegime megastep knobs ->
     ``repro.stream.megastep.CompiledStream`` constructor kwargs.  The

@@ -114,6 +114,8 @@ class DataSpec:
     beta: float = 0.1  # Dirichlet heterogeneity
     malicious_fraction: float = 0.0
     root_samples: int = 3000  # |D_root| for BR-DRAG / FLTrust
+    drift: str = "none"  # non-stationary data: none | label_shift
+    drift_rate: float = 0.0  # label rotation speed (classes per round/flush)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +265,15 @@ class AsyncRegime:
     #   oracle's per-event structure. Must divide buffer_capacity
     compiled_chunk: int = 0  # flushes per megastep host round-trip;
     #   0 = eval_every (evals land exactly on chunk boundaries)
+    churn_period: float = 0.0  # client churn cycle in virtual time;
+    #   0 = static population.  Each client is active on a hash-phased
+    #   duty window of the cycle (repro.stream.events.PopulationModel)
+    churn_duty: float = 1.0  # active fraction of the churn cycle, (0, 1]
+    diurnal_amp: float = 0.0  # arrival-wave amplitude in [0, 1);
+    #   completion latencies stretch by 1 + amp*sin(2*pi*t/period)
+    diurnal_period: float = 0.0  # arrival-wave cycle in virtual time
+    trust_gated_dispatch: bool = False  # skip quarantined clients
+    #   (reputation 0) at dispatch; requires trust.enabled
 
     def __post_init__(self):
         object.__setattr__(

@@ -93,6 +93,12 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
         _err(f"n_workers must be >= 1, got {data.n_workers}")
     if not 0.0 <= data.malicious_fraction <= 1.0:
         _err(f"malicious_fraction must be in [0, 1], got {data.malicious_fraction}")
+    if data.drift not in ("none", "label_shift"):
+        _err(f"unknown drift mode {data.drift!r}; have ['label_shift', 'none']")
+    if data.drift_rate < 0:
+        _err(f"drift_rate must be >= 0, got {data.drift_rate}")
+    if data.drift != "none" and data.drift_rate <= 0:
+        _err(f"drift={data.drift!r} needs drift_rate > 0, got {data.drift_rate}")
 
     # ---- aggregation rule vs regime capability tiers
     alg = agg.algorithm
@@ -170,6 +176,34 @@ def validate(spec: spec_mod.ExperimentSpec, mesh=None) -> spec_mod.ExperimentSpe
             _err(f"compiled_block must be >= 0, got {regime.compiled_block}")
         if regime.compiled_chunk < 0:
             _err(f"compiled_chunk must be >= 0, got {regime.compiled_chunk}")
+        # ---- population regimes (churn / diurnal / trust-gated dispatch)
+        if regime.churn_period < 0:
+            _err(f"churn_period must be >= 0, got {regime.churn_period}")
+        if not 0.0 < regime.churn_duty <= 1.0:
+            _err(f"churn_duty must be in (0, 1], got {regime.churn_duty}")
+        if not 0.0 <= regime.diurnal_amp < 1.0:
+            _err(f"diurnal_amp must be in [0, 1), got {regime.diurnal_amp}")
+        if regime.diurnal_amp > 0 and regime.diurnal_period <= 0:
+            _err(
+                f"diurnal_amp={regime.diurnal_amp} needs diurnal_period > 0, "
+                f"got {regime.diurnal_period}"
+            )
+        if regime.trust_gated_dispatch and not trust.enabled:
+            _err(
+                "trust_gated_dispatch requires TrustSpec(enabled=True): "
+                "quarantine state comes from the trust reputation layer"
+            )
+        if regime.compiled and (
+            regime.churn_period > 0
+            or regime.diurnal_amp > 0
+            or regime.trust_gated_dispatch
+            or data.drift != "none"
+        ):
+            _err(
+                "compiled=True (megastep) does not support population "
+                "regimes yet — churn/diurnal/trust_gated_dispatch/drift "
+                "need the host event loop; set compiled=False"
+            )
         if regime.compiled:
             from repro.stream.events import LatencyModel, make_latency
 

@@ -63,6 +63,21 @@ class FederatedData:
         return {"x": x[:n], "y": y[:n].astype(np.int32)}
 
 
+def drift_labels(y: np.ndarray, n_classes: int, t: int, mode: str, rate: float):
+    """Non-stationary label drift: the class identified by label ``l`` at
+    time 0 is labelled ``(l + floor(rate * t)) mod C`` at time ``t`` — a
+    slow rotation of the label space (concept drift), applied identically
+    to train, root, and eval batches so the task stays self-consistent at
+    every instant while the decision boundary a fixed model learned goes
+    stale.  ``mode="none"`` or ``rate<=0`` is the identity."""
+    if mode == "none" or rate <= 0.0:
+        return y
+    shift = int(rate * t) % n_classes
+    if shift == 0:
+        return y
+    return ((y.astype(np.int64) + shift) % n_classes).astype(y.dtype)
+
+
 def build_federated_data(
     dataset: str,
     n_workers: int,

@@ -33,8 +33,14 @@ class ImageDatasetSpec:
 EMNIST_SPEC = ImageDatasetSpec("emnist", (28, 28, 1), 47, 20000, 4000)
 CIFAR10_SPEC = ImageDatasetSpec("cifar10", (32, 32, 3), 10, 20000, 4000)
 CIFAR100_SPEC = ImageDatasetSpec("cifar100", (32, 32, 3), 100, 20000, 4000)
+#: 10x-reduced emnist for sweep grids / CI smoke cells, where the host
+#: data build must stay small next to a cell's compile cost
+EMNIST_SMALL_SPEC = ImageDatasetSpec("emnist_small", (28, 28, 1), 47, 2000, 400)
 
-SPECS = {s.name: s for s in (EMNIST_SPEC, CIFAR10_SPEC, CIFAR100_SPEC)}
+SPECS = {
+    s.name: s
+    for s in (EMNIST_SPEC, CIFAR10_SPEC, CIFAR100_SPEC, EMNIST_SMALL_SPEC)
+}
 
 
 def class_prototypes(spec: ImageDatasetSpec, seed: int = 0) -> np.ndarray:

@@ -119,7 +119,15 @@ def run_experiment(
 
     state = init_server_state(params, d.n_workers, cfg)
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
-    test_batch = {"x": jnp.asarray(data.test_batch()["x"]), "y": jnp.asarray(data.test_batch()["y"])}
+    tb = data.test_batch()
+    test_x = jnp.asarray(tb["x"])
+    test_batch = {"x": test_x, "y": jnp.asarray(tb["y"])}
+
+    # non-stationary drift (DataSpec.drift): labels rotate with the round
+    # index; train, root, and eval batches all see the time-t labels
+    from repro.data.pipeline import drift_labels
+
+    drift_on = d.drift != "none" and d.drift_rate > 0.0
 
     session = obs_session.session_from_spec(getattr(spec, "telemetry", None))
 
@@ -130,13 +138,19 @@ def run_experiment(
             with obs_trace.span("sample_round"):
                 selected = rng.choice(d.n_workers, size=regime.n_selected, replace=False)
                 batch_np = data.sample_round(rng, selected, regime.local_steps, regime.batch_size)
-                batches = {"x": jnp.asarray(batch_np["x"]), "y": jnp.asarray(batch_np["y"])}
+                y_np = batch_np["y"]
+                if drift_on:
+                    y_np = drift_labels(y_np, data.n_classes, t, d.drift, d.drift_rate)
+                batches = {"x": jnp.asarray(batch_np["x"]), "y": jnp.asarray(y_np)}
                 malicious_mask = jnp.asarray(data.malicious[selected])
             key, k_round = jax.random.split(key)
             args = [state, batches, jnp.asarray(selected, jnp.int32), malicious_mask, k_round]
             if with_root:
                 root_np = data.root_batches(rng, regime.local_steps, regime.batch_size, d.root_samples)
-                args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])})
+                root_y = root_np["y"]
+                if drift_on:
+                    root_y = drift_labels(root_y, data.n_classes, t, d.drift, d.drift_rate)
+                args.append({"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_y)})
             with obs_trace.span("round", t=t):
                 state, metrics = round_fn(*args)
             session.record_alerts(metrics.pop("obs_alerts", None), state.monitor)
@@ -144,7 +158,16 @@ def run_experiment(
 
             if (t + 1) % regime.eval_every == 0 or t == regime.rounds - 1:
                 with obs_trace.span("eval"):
-                    acc = float(eval_jit(state.params, test_batch))
+                    tbatch = test_batch
+                    if drift_on:
+                        tbatch = {
+                            "x": test_x,
+                            "y": jnp.asarray(drift_labels(
+                                tb["y"].astype(np.int32), data.n_classes, t,
+                                d.drift, d.drift_rate,
+                            )),
+                        }
+                    acc = float(eval_jit(state.params, tbatch))
                 history["round"].append(t + 1)
                 history["accuracy"].append(acc)
                 history["update_norm"].append(float(metrics["update_norm_mean"]))

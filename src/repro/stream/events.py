@@ -71,6 +71,7 @@ SALT_MALICIOUS = 0xBAD  # Byzantine control (counter = client id)
 SALT_STRAGGLER = 0xD1  # device-speed class (counter = client id)
 SALT_BATCH = 0xB47C  # local-batch sample indices (counter = seq * UB + j)
 SALT_FLIP = 0xF11F  # label-flip coin per sample (counter = seq * UB + j)
+SALT_CHURN = 0xC4  # churn phase offset (counter = client id)
 
 
 def hash_u32(seed, salt: int, ctr) -> jax.Array:
@@ -211,6 +212,56 @@ def make_latency(name: str, **kw) -> LatencyModel:
     return LATENCIES[name](**kw)
 
 
+# ------------------------------------------------------------- population
+@dataclasses.dataclass(frozen=True)
+class PopulationModel:
+    """Deterministic population dynamics over virtual time — zero per-client
+    storage, in the spirit of the rest of the lazy event plane.
+
+    *Churn*: each client is online for a ``churn_duty`` fraction of every
+    ``churn_period`` of virtual time, with a hash-derived phase offset
+    (:func:`client_unit32` over :data:`SALT_CHURN`), so at any instant a
+    ~``churn_duty`` share of the population is reachable and clients
+    join/leave mid-stream on their own schedules.  ``churn_period=0`` or
+    ``churn_duty=1`` means a static, always-on population.
+
+    *Diurnal waves*: completion latencies stretch by ``1 +
+    diurnal_amp * sin(2*pi*t / diurnal_period)`` at dispatch time, so
+    arrivals thin out and bunch up on a day/night cycle.  ``amp=0`` is
+    flat.
+    """
+
+    churn_period: float = 0.0
+    churn_duty: float = 1.0
+    diurnal_amp: float = 0.0
+    diurnal_period: float = 0.0
+    seed: int = 0
+
+    @property
+    def has_churn(self) -> bool:
+        return self.churn_period > 0.0 and self.churn_duty < 1.0
+
+    @property
+    def has_diurnal(self) -> bool:
+        return self.diurnal_amp > 0.0 and self.diurnal_period > 0.0
+
+    def active(self, client_id: int, t: float) -> bool:
+        """Is ``client_id`` online at virtual time ``t``?"""
+        if not self.has_churn:
+            return True
+        phase = float(client_unit32(self.seed, int(client_id), SALT_CHURN))
+        frac = math.fmod(t / self.churn_period + phase, 1.0)
+        return frac < self.churn_duty
+
+    def wave(self, t: float) -> float:
+        """Latency stretch factor at dispatch time ``t`` (>= 1 - amp > 0)."""
+        if not self.has_diurnal:
+            return 1.0
+        return 1.0 + self.diurnal_amp * math.sin(
+            2.0 * math.pi * t / self.diurnal_period
+        )
+
+
 # ------------------------------------------------------------ event stream
 @dataclasses.dataclass(frozen=True)
 class ClientEvent:
@@ -241,6 +292,8 @@ class EventStream:
         malicious_fraction: float = 0.0,
         malicious_lookup=None,  # optional callable client_id -> bool
         sampler: str = "mt",  # "mt" (sequential RandomState) | "hash"
+        population: "PopulationModel | None" = None,
+        blocked_lookup=None,  # optional callable client_id -> bool
     ):
         if sampler not in ("mt", "hash"):
             raise ValueError(f"unknown sampler {sampler!r}; use 'mt' or 'hash'")
@@ -250,6 +303,10 @@ class EventStream:
         self.malicious_fraction = float(malicious_fraction)
         self._malicious_lookup = malicious_lookup
         self.sampler = sampler
+        # population dynamics + dispatch gating (None/None = the exact
+        # legacy draw sequence — pinned bit-for-bit by tests/test_sweep.py)
+        self.population = population
+        self.blocked_lookup = blocked_lookup
         self._rng = np.random.RandomState(seed)
         self._arrivals = (
             HashArrivals(seed, self.latency, self.n_clients)
@@ -275,16 +332,65 @@ class EventStream:
             )
         return client_uniform(self.seed, client_id, salt=0xBAD) < self.malicious_fraction
 
+    # ---- dispatch gating (population churn + trust quarantine)
+    def _eligible(self, client_id: int) -> bool:
+        if self.population is not None and not self.population.active(
+            client_id, self.now
+        ):
+            return False
+        if self.blocked_lookup is not None and self.blocked_lookup(client_id):
+            return False
+        return True
+
+    def _probe(self, client_id: int) -> int:
+        """Bounded linear probe to the next eligible client (wraps mod M).
+
+        Deterministic — no extra RNG draws, so the underlying sampling
+        stream is untouched and a later draw is unaffected by how far
+        the probe walked."""
+        for step in range(self.n_clients):
+            cand = (client_id + step) % self.n_clients
+            if self._eligible(cand):
+                return cand
+        raise RuntimeError(
+            f"no eligible client at t={self.now:.3f}: all {self.n_clients} "
+            "are churned out or quarantined — raise churn_duty or relax "
+            "the quarantine gate"
+        )
+
     # ---- scheduling
     def dispatch(self, server_round: int, client_id: int | None = None) -> ClientEvent:
-        """Schedule one job; samples a client UAR unless one is given."""
+        """Schedule one job; samples a client UAR unless one is given.
+
+        With a :class:`PopulationModel` (churn) or a ``blocked_lookup``
+        (trust-gated dispatch) attached, the UAR draw linear-probes to
+        the nearest eligible client; explicitly-targeted dispatches
+        bypass the gate (the bridge oracle addresses clients directly).
+        """
+        gated = self.population is not None or self.blocked_lookup is not None
         if self.sampler == "hash":
             if client_id is None:
                 client_id = int(hash_client_ids(self.seed, self._seq, self.n_clients))
-                # the block-materialised arrivals table — the same f32
-                # values the device sampler gathers, so replay is
-                # bit-for-bit
-                dt = self._arrivals.dt(self._seq)
+                if gated:
+                    probed = self._probe(client_id)
+                    if probed != client_id:
+                        # the arrivals table is keyed on the hash-drawn
+                        # client — a probed replacement recomputes its
+                        # dt through the same quantile draw
+                        client_id = probed
+                        dt = float(
+                            self.latency.icdf(
+                                hash_unit(self.seed, SALT_LATENCY, self._seq),
+                                int(client_id),
+                            )
+                        )
+                    else:
+                        dt = self._arrivals.dt(self._seq)
+                else:
+                    # the block-materialised arrivals table — the same f32
+                    # values the device sampler gathers, so replay is
+                    # bit-for-bit
+                    dt = self._arrivals.dt(self._seq)
             else:
                 # explicitly-targeted dispatch (bridge oracle): the table
                 # is keyed on the hash-drawn client, so draw directly
@@ -297,7 +403,11 @@ class EventStream:
         else:
             if client_id is None:
                 client_id = int(self._rng.randint(0, self.n_clients))
+                if gated:
+                    client_id = self._probe(client_id)
             dt = self.latency.sample(self._rng, client_id)
+        if self.population is not None and self.population.has_diurnal:
+            dt = dt * self.population.wave(self.now)
         if not (math.isfinite(dt) and dt >= 0.0):
             raise ValueError(f"latency model produced invalid delay {dt!r}")
         # hash mode accumulates virtual time in f32 (the device sampler's

@@ -827,9 +827,16 @@ def run_stream_experiment(
     malicious_lookup = lambda m: bool(data.malicious[m])  # noqa: E731
     latency = make_latency(regime.latency, **dict(regime.latency_kw))
 
+    # non-stationary drift (DataSpec.drift): labels rotate with the model
+    # version; train, root, and eval batches all see time-t labels
+    from repro.data.pipeline import drift_labels
+
+    drift_on = d.drift != "none" and d.drift_rate > 0.0
+
     eval_jit = jax.jit(lambda p, b: cnn.accuracy(apply_fn, p, b))
     tb = data.test_batch()
-    test_batch = {"x": jnp.asarray(tb["x"]), "y": jnp.asarray(tb["y"])}
+    test_x = jnp.asarray(tb["x"])
+    test_batch = {"x": test_x, "y": jnp.asarray(tb["y"])}
 
     history = {
         "flush": [], "accuracy": [], "staleness_mean": [],
@@ -839,7 +846,16 @@ def run_stream_experiment(
 
     def record_eval(staleness_mean, virtual_time, update_norm, extra):
         with obs_trace.span("eval"):
-            acc = float(eval_jit(server.params, test_batch))
+            tbatch = test_batch
+            if drift_on:
+                tbatch = {
+                    "x": test_x,
+                    "y": jnp.asarray(drift_labels(
+                        tb["y"].astype(np.int32), data.n_classes, server.t,
+                        d.drift, d.drift_rate,
+                    )),
+                }
+            acc = float(eval_jit(server.params, tbatch))
         history["flush"].append(server.t)
         history["accuracy"].append(acc)
         history["staleness_mean"].append(float(staleness_mean))
@@ -895,7 +911,17 @@ def run_stream_experiment(
             latency,
             seed=spec.seed,
             malicious_lookup=malicious_lookup,
+            # churn/diurnal population dynamics (None = the exact legacy
+            # draw path — the flag-off parity tests pin this)
+            population=lowering.population_model(spec),
         )
+        if regime.trust_gated_dispatch:
+            # trust-aware sampling: skip quarantined clients (reputation 0)
+            # at dispatch.  The gate reads a HOST mirror of the quarantine
+            # mask, refreshed after every flush — dispatch never syncs the
+            # device
+            quarantine_mask = {"m": np.zeros(d.n_workers, bool)}
+            stream.blocked_lookup = lambda m: bool(quarantine_mask["m"][m])
 
         # prime the pipeline: W concurrent jobs against the initial model
         inflight: dict[int, pt.Pytree] = {}
@@ -908,9 +934,14 @@ def run_stream_experiment(
                 ev = stream.next_completion()
                 snapshot = inflight.pop(ev.seq)
                 batch_np = data.sample_round(rng, [ev.client_id], regime.local_steps, regime.batch_size)
+                y_np = batch_np["y"][0]
+                if drift_on:
+                    y_np = drift_labels(
+                        y_np, data.n_classes, server.t, d.drift, d.drift_rate
+                    )
                 batches = {
                     "x": jnp.asarray(batch_np["x"][0]),
-                    "y": jnp.asarray(batch_np["y"][0]),
+                    "y": jnp.asarray(y_np),
                 }
                 with obs_trace.span("client_update"):
                     g = server.client_update(snapshot, batches)
@@ -928,8 +959,18 @@ def run_stream_experiment(
                         root_np = data.root_batches(
                             rng, regime.local_steps, regime.batch_size, d.root_samples
                         )
-                        root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_np["y"])}
+                        root_y = root_np["y"]
+                        if drift_on:
+                            root_y = drift_labels(
+                                root_y, data.n_classes, server.t, d.drift,
+                                d.drift_rate,
+                            )
+                        root = {"x": jnp.asarray(root_np["x"]), "y": jnp.asarray(root_y)}
                     metrics = server.flush_if_ready(k_flush, root)
+                    if metrics is not None and regime.trust_gated_dispatch:
+                        quarantine_mask["m"] = np.asarray(
+                            server.state.trust.quarantined
+                        )
 
                 if metrics is not None and (
                     server.t % regime.eval_every == 0 or server.t == regime.flushes

@@ -1,0 +1,32 @@
+"""The vectorized sweep engine (ROADMAP Open item 4).
+
+Batched execution for spec grids: specs that lower to the same jaxpr
+shape run as ONE compiled program vmapped over their scalar knobs, with
+compiled executables cached across sweeps.
+
+  * :func:`run_sweep` / :class:`SweepResult` — the engine entry point
+    (:mod:`repro.sweep.engine`)
+  * :func:`group_specs` / :func:`group_key` — the grouping boundary
+    rules (:mod:`repro.sweep.grouping`)
+  * :class:`ExecutableCache` / :func:`default_cache` — the group-keyed
+    executable store (:mod:`repro.sweep.cache`)
+  * :func:`run_scenarios_grouped` — the scenario lab's grouped path
+    (:mod:`repro.sweep.scenarios`), used by the robustness matrix
+"""
+from repro.sweep.cache import ExecutableCache, default_cache
+from repro.sweep.engine import SweepResult, SyncGroupExecutable, run_sweep
+from repro.sweep.grouping import SpecGroup, batchable, group_key, group_specs
+from repro.sweep.scenarios import run_scenarios_grouped
+
+__all__ = [
+    "ExecutableCache",
+    "SpecGroup",
+    "SweepResult",
+    "SyncGroupExecutable",
+    "batchable",
+    "default_cache",
+    "group_key",
+    "group_specs",
+    "run_scenarios_grouped",
+    "run_sweep",
+]

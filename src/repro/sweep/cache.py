@@ -1,0 +1,59 @@
+"""The executable cache: compiled sweep programs keyed by group key.
+
+Mirrors the :class:`~repro.stream.server.RootReferenceCache` idiom —
+hit/miss counters, a plain dict, explicit ``clear()`` — but keys on the
+GROUP's lowered static shape (:func:`repro.sweep.grouping.group_key`,
+itself built from hashable spec fragments, so the cache key IS the spec
+hash of the statics).  A hit returns the same
+:class:`~repro.sweep.engine.SyncGroupExecutable` object, whose jitted
+round/eval callables keep their warm XLA caches: a repeated grid (CI
+rerun, sentinel, figure benchmarks) skips compilation entirely.
+
+The module-level :func:`default_cache` is what ``run_sweep`` uses when
+no cache is passed, so repeated sweeps in one process share executables
+by default; the counters surface in every sweep's provenance record.
+"""
+from __future__ import annotations
+
+
+class ExecutableCache:
+    """Group-keyed store of compiled sweep executables."""
+
+    def __init__(self):
+        self.hits = 0
+        self.misses = 0
+        self._entries: dict = {}
+
+    def get_or_build(self, key, build):
+        """The cached executable for ``key``, building (and counting a
+        miss) on first sight."""
+        if key in self._entries:
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        exe = build()
+        self._entries[key] = exe
+        return exe
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def counters(self) -> dict:
+        return {
+            "executable_cache_hits": self.hits,
+            "executable_cache_misses": self.misses,
+            "executable_cache_size": len(self._entries),
+        }
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+#: the process-wide default (run_sweep's cache=None)
+_DEFAULT = ExecutableCache()
+
+
+def default_cache() -> ExecutableCache:
+    return _DEFAULT

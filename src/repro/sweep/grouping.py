@@ -1,0 +1,88 @@
+"""Grouping: which specs share one compiled program.
+
+The boundary rule (see ROADMAP "Sweep engine"): the GROUP KEY is the
+lowered static shape — everything that enters the jitted round as a
+static argument or sizes a traced array.  For the sync engine that is
+the dataset/model names, the population size M, the whole RegimeSpec
+(rounds, S, U, B, lr, eval cadence), the drift config (a host-side
+label transform applied at the same ``t`` for every member), the
+telemetry spec, and the lowered :class:`~repro.fl.round.RoundConfig` —
+which already folds in the algorithm, every aggregation hyper-parameter,
+the attack name + kwargs, the trust layer, and the resolved
+``n_byzantine_hint`` (so two specs whose malicious fractions would
+derive DIFFERENT trim levels never share a program).
+
+Everything else — ``seed``, ``data.beta``, ``data.malicious_fraction`` —
+is data-plane: it only changes array VALUES (which clients are
+malicious, how batches are drawn, the PRNG stream), so those specs can
+run as one program vmapped over the group axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api import lowering
+from repro.api.validation import SCENARIO_DATASET, SCENARIO_MODEL
+
+
+def batchable(spec) -> bool:
+    """Can this spec join a vmapped group?  Sync engine cells only: the
+    async/sharded regimes are event-driven host loops (each cell runs
+    sequentially, as its own group), the scenario lab has no engine
+    behind it, and telemetry sessions are host-side singletons."""
+    return (
+        spec.regime.kind == "sync"
+        and spec.data.dataset != SCENARIO_DATASET
+        and spec.model.name != SCENARIO_MODEL
+        and not spec.telemetry.enabled
+    )
+
+
+def group_key(spec) -> tuple:
+    """The lowered static shape — the executable-cache key's group part."""
+    d = spec.data
+    return (
+        d.dataset,
+        d.n_workers,
+        d.root_samples,
+        d.drift,
+        d.drift_rate,
+        spec.model,
+        spec.regime,
+        spec.telemetry,
+        lowering.round_config(spec),
+    )
+
+
+@dataclasses.dataclass
+class SpecGroup:
+    """One unit of execution: a batched vmap group or a sequential cell."""
+
+    key: tuple  # group_key(...) for batched; ("seq", input index) otherwise
+    specs: list  # member specs, input order preserved
+    indices: list  # positions in run_sweep's input list
+    batched: bool
+
+
+def group_specs(specs) -> "list[SpecGroup]":
+    """Partition ``specs`` into execution groups (first-appearance order).
+
+    Batchable specs with equal :func:`group_key` share one group;
+    everything else becomes a singleton sequential group.
+    """
+    groups: "dict[tuple, SpecGroup]" = {}
+    order: "list[SpecGroup]" = []
+    for i, spec in enumerate(specs):
+        if not batchable(spec):
+            g = SpecGroup(key=("seq", i), specs=[spec], indices=[i], batched=False)
+            order.append(g)
+            continue
+        key = group_key(spec)
+        if key in groups:
+            groups[key].specs.append(spec)
+            groups[key].indices.append(i)
+        else:
+            g = SpecGroup(key=key, specs=[spec], indices=[i], batched=True)
+            groups[key] = g
+            order.append(g)
+    return order

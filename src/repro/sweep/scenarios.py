@@ -1,0 +1,134 @@
+"""Grouped execution for the synthetic scenario lab.
+
+The robustness matrix's sync cells are :class:`~repro.adversary.
+scenarios.Scenario` objects — hundreds of (aggregator x attack x
+heterogeneity x seed) cells whose trajectories differ ONLY in the
+host-built world arrays and the PRNG seed.  The grouping rule mirrors
+:mod:`repro.sweep.grouping`: the group key is the scenario with its
+data-plane knobs (``seed``, ``heterogeneity``) normalised away — every
+remaining field is a static of :func:`~repro.adversary.scenarios.
+make_trajectory` — and each group runs as one
+``jit(vmap(trajectory))`` over the stacked worlds.
+
+Executables go through the same :class:`~repro.sweep.cache.
+ExecutableCache` (key = the normalised scenario), so a rerun of the
+matrix (sentinel, CI) compiles nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adversary.scenarios import Scenario, _make_world, make_trajectory
+from repro.sweep import cache as cache_mod
+
+
+def scenario_group_key(sc: Scenario) -> Scenario:
+    """The statics: ``sc`` with the batched knobs normalised away."""
+    return dataclasses.replace(sc, seed=0, heterogeneity=0.0)
+
+
+def group_scenarios(cells) -> "list[tuple[Scenario, list[int]]]":
+    """Partition cells into (representative, member input indices) groups,
+    first-appearance order."""
+    groups: "dict[Scenario, list[int]]" = {}
+    order: "list[Scenario]" = []
+    for i, sc in enumerate(cells):
+        key = scenario_group_key(sc)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(i)
+    return [(key, groups[key]) for key in order]
+
+
+class ScenarioGroupExecutable:
+    """jit(vmap(make_trajectory(statics))) for one scenario group.
+
+    Compilation is explicit (``jit.lower(...).compile()``, keyed by the
+    group size G) so callers get an honest compile-vs-run wall-clock
+    split; ``last_compile_s``/``last_run_s`` hold the most recent run's
+    split."""
+
+    def __init__(self, key_sc: Scenario):
+        self.rounds = key_sc.rounds
+        self.traj = jax.jit(jax.vmap(make_trajectory(key_sc)))
+        self._compiled: dict = {}  # G -> AOT-compiled executable
+        self.last_compile_s = 0.0
+        self.last_run_s = 0.0
+
+    def run(self, cells, worlds=None) -> np.ndarray:
+        """Stacked per-member losses [G, T] for the member cells."""
+        if worlds is None:
+            worlds = [_make_world(sc) for sc in cells]
+        # world tuples are (optima, malicious, w0, benign_mean,
+        # root_target); trajectory() takes w0 first
+        stacked = [jnp.stack([w[j] for w in worlds]) for j in (2, 0, 1, 3, 4)]
+        seeds = jnp.asarray([sc.seed for sc in cells], jnp.int32)
+        g_n = len(cells)
+        self.last_compile_s = 0.0
+        if g_n not in self._compiled:
+            t0 = time.time()
+            self._compiled[g_n] = self.traj.lower(*stacked, seeds).compile()
+            self.last_compile_s = time.time() - t0
+        t0 = time.time()
+        out = np.asarray(jax.block_until_ready(self._compiled[g_n](*stacked, seeds)))
+        self.last_run_s = time.time() - t0
+        return out
+
+
+def run_scenarios_grouped(cells, *, cache=None) -> "tuple[list[dict], dict]":
+    """Runs every cell through its group's one compiled program.
+
+    Returns (results, provenance): per-cell dicts shaped exactly like
+    :func:`~repro.adversary.scenarios.run_scenario` (input order), plus
+    a provenance record with group sizes and executable-cache counters.
+    """
+    cells = list(cells)
+    cache = cache_mod.default_cache() if cache is None else cache
+    results: list = [None] * len(cells)
+    hits0, misses0 = cache.hits, cache.misses
+    group_records = []
+    t0 = time.time()
+    for key_sc, indices in group_scenarios(cells):
+        had = cache.hits
+        exe = cache.get_or_build(
+            ("scenario", key_sc), lambda: ScenarioGroupExecutable(key_sc)
+        )
+        members = [cells[i] for i in indices]
+        worlds = [_make_world(sc) for sc in members]
+        losses = exe.run(members, worlds)
+        group_records.append({
+            "size": len(indices),
+            "cache": "hit" if cache.hits > had else "miss",
+            "compile_s": exe.last_compile_s,
+            "run_s": exe.last_run_s,
+        })
+        for row, (_, _, w0, benign_mean, _), i in zip(losses, worlds, indices):
+            results[i] = {
+                "losses": row,
+                "final_loss": float(row[-1]),
+                "trajectory_max": float(np.max(row)),
+                "initial_loss": float(
+                    0.5 * np.sum((np.asarray(w0) - np.asarray(benign_mean)) ** 2)
+                ),
+                # the GROUP's compile/run split, amortised per member —
+                # every member shares the one vmapped program
+                "compile_s": exe.last_compile_s / len(indices),
+                "run_s": exe.last_run_s / len(indices),
+            }
+    provenance = {
+        "cells": len(cells),
+        "groups": len(group_records),
+        "group_sizes": [r["size"] for r in group_records],
+        "group_records": group_records,
+        "cache_hits": cache.hits - hits0,
+        "cache_misses": cache.misses - misses0,
+        "wall_s": time.time() - t0,
+        **cache.counters(),
+    }
+    return results, provenance

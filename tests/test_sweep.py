@@ -1,0 +1,381 @@
+"""Sweep-engine tests: grouping boundary rules, batched-vs-sequential
+parity (bit-for-bit on the engine path, <=1e-5 on the scenario path),
+executable-cache reuse, and the churn/drift/diurnal population regimes
+(including the trust-gated dispatch flag's flag-off bit-for-bit parity).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AggregationSpec,
+    AsyncRegime,
+    AttackSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    SpecError,
+    SyncRegime,
+    TrustSpec,
+    validate,
+)
+from repro.sweep import (
+    ExecutableCache,
+    batchable,
+    group_key,
+    group_specs,
+    run_scenarios_grouped,
+    run_sweep,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis ships with the image
+    HAVE_HYPOTHESIS = False
+
+
+def small_spec(seed=0, beta=0.1, mf=0.25, algorithm="drag", rounds=2,
+               attack="sign_flipping", hint=1):
+    """A tiny engine cell: emnist_small keeps the host data build cheap."""
+    return ExperimentSpec(
+        data=DataSpec(dataset="emnist_small", n_workers=8, beta=beta,
+                      malicious_fraction=mf, root_samples=128),
+        model=ModelSpec("mlp"),
+        aggregation=AggregationSpec(algorithm, n_byzantine_hint=hint),
+        attack=AttackSpec(attack),
+        regime=SyncRegime(rounds=rounds, n_selected=4, local_steps=1,
+                          batch_size=4, eval_every=1),
+        seed=seed,
+    )
+
+
+# -------------------------------------------------------------- grouping
+class TestGrouping:
+    def test_scalar_knobs_share_a_group(self):
+        specs = [small_spec(seed=s, beta=b) for s in (0, 1) for b in (0.1, 0.5)]
+        groups = group_specs(specs)
+        assert len(groups) == 1
+        assert groups[0].batched
+        assert sorted(groups[0].indices) == [0, 1, 2, 3]
+
+    def test_statics_split_groups(self):
+        a = small_spec()
+        for changed in (
+            small_spec(algorithm="median"),
+            small_spec(rounds=3),
+            small_spec(attack="noise_injection"),
+            dataclasses.replace(a, data=dataclasses.replace(a.data, n_workers=6)),
+        ):
+            assert group_key(a) != group_key(changed)
+            assert len(group_specs([a, changed])) == 2
+
+    def test_byzantine_and_attack_free_can_share(self):
+        # an explicit n_byzantine_hint keeps the lowered RoundConfig
+        # identical, so the malicious fraction is a pure scalar knob
+        specs = [small_spec(mf=0.25, hint=2), small_spec(mf=0.0, hint=2)]
+        assert len(group_specs(specs)) == 1
+
+    def test_non_sync_is_sequential(self):
+        async_spec = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            regime=AsyncRegime(flushes=2),
+        )
+        assert not batchable(async_spec)
+        groups = group_specs([small_spec(), async_spec])
+        assert [g.batched for g in groups] == [True, False]
+
+
+# ------------------------------------------------------- executable cache
+class TestExecutableCache:
+    def test_counters_and_identity(self):
+        cache = ExecutableCache()
+        a = cache.get_or_build("k", lambda: object())
+        b = cache.get_or_build("k", lambda: object())
+        assert a is b
+        assert (cache.hits, cache.misses, len(cache)) == (1, 1, 1)
+        assert cache.counters()["executable_cache_hits"] == 1
+        cache.clear()
+        assert (cache.hits, cache.misses, len(cache)) == (0, 0, 0)
+
+
+# ----------------------------------------------------------------- parity
+class TestBatchedParity:
+    def test_engine_group_bit_for_bit(self):
+        from repro.fl.server import run_experiment
+
+        specs = [small_spec(seed=s, beta=b) for s in (0, 1) for b in (0.1, 0.5)]
+        cache = ExecutableCache()
+        result = run_sweep(specs, cache=cache)
+        assert result.provenance["groups"] == 1
+        assert result.provenance["batched_cells"] == 4
+        for spec, hist in zip(specs, result):
+            seq = run_experiment(spec, check=False)
+            assert hist["accuracy"] == seq["accuracy"]
+            assert hist["update_norm"] == seq["update_norm"]
+            assert hist["final_accuracy"] == seq["final_accuracy"]
+
+    def test_mixed_byzantine_group_bit_for_bit(self):
+        from repro.fl.server import run_experiment
+
+        specs = [small_spec(mf=0.25, hint=2), small_spec(mf=0.0, hint=2)]
+        result = run_sweep(specs, cache=ExecutableCache())
+        assert result.provenance["groups"] == 1
+        for spec, hist in zip(specs, result):
+            seq = run_experiment(spec, check=False)
+            assert hist["accuracy"] == seq["accuracy"]
+            assert hist["update_norm"] == seq["update_norm"]
+
+    def test_scenario_group_close(self):
+        from repro.adversary.scenarios import Scenario, run_scenario
+
+        cells = [
+            Scenario(aggregator="br_drag", attack="alie", heterogeneity=h,
+                     rounds=8, seed=s)
+            for h in (0.5, 1.5) for s in (0, 1)
+        ]
+        results, prov = run_scenarios_grouped(cells, cache=ExecutableCache())
+        assert prov["groups"] == 1
+        for sc, got in zip(cells, results):
+            want = run_scenario(sc)
+            assert abs(got["final_loss"] - want["final_loss"]) <= 1e-5
+            np.testing.assert_allclose(got["losses"], want["losses"], atol=1e-5)
+
+    def test_rerun_is_all_cache_hits(self):
+        specs = [small_spec(seed=s) for s in (0, 1)]
+        cache = ExecutableCache()
+        first = run_sweep(specs, cache=cache)
+        again = run_sweep(specs, cache=cache, check=False)
+        assert first.provenance["cache_misses"] == 1
+        assert again.provenance["cache_hits"] == 1
+        assert again.provenance["cache_misses"] == 0
+        for a, b in zip(first, again):
+            assert a["accuracy"] == b["accuracy"]
+
+
+# ------------------------------------------------------ population regimes
+class TestPopulationModel:
+    def test_defaults_always_active_unit_wave(self):
+        from repro.stream.events import PopulationModel
+
+        pop = PopulationModel()
+        assert not pop.has_churn and not pop.has_diurnal
+        assert all(pop.active(m, t) for m in range(8) for t in (0.0, 3.7, 99.0))
+        assert pop.wave(12.3) == 1.0
+
+    def test_churn_duty_fraction_and_periodicity(self):
+        from repro.stream.events import PopulationModel
+
+        pop = PopulationModel(churn_period=10.0, churn_duty=0.5, seed=3)
+        active = [pop.active(m, 2.0) for m in range(400)]
+        assert 0.35 < np.mean(active) < 0.65  # hash-phased ~duty fraction
+        for m in range(20):
+            assert pop.active(m, 1.0) == pop.active(m, 11.0)  # periodic
+
+    def test_wave_bounds(self):
+        from repro.stream.events import PopulationModel
+
+        pop = PopulationModel(diurnal_amp=0.4, diurnal_period=24.0)
+        waves = [pop.wave(t) for t in np.linspace(0, 48, 97)]
+        assert min(waves) >= 0.6 - 1e-9 and max(waves) <= 1.4 + 1e-9
+
+    if HAVE_HYPOTHESIS:
+        @given(st.integers(0, 2**31 - 1), st.integers(0, 10_000),
+               st.floats(0.05, 1.0))
+        @settings(max_examples=50, deadline=None)
+        def test_active_deterministic(self, seed, client, duty):
+            from repro.stream.events import PopulationModel
+
+            pop = PopulationModel(churn_period=7.0, churn_duty=duty, seed=seed)
+            assert pop.active(client, 3.0) == pop.active(client, 3.0)
+            if duty == 1.0:
+                assert pop.active(client, 3.0)
+
+
+class TestDriftLabels:
+    def test_none_is_identity(self):
+        from repro.data.pipeline import drift_labels
+
+        y = np.arange(10, dtype=np.int32) % 4
+        assert drift_labels(y, 4, 50, "none", 1.0) is y
+        assert drift_labels(y, 4, 0, "label_shift", 0.1) is y  # shift == 0
+
+    def test_label_shift_rotates_mod_classes(self):
+        from repro.data.pipeline import drift_labels
+
+        y = np.array([0, 1, 2, 3], dtype=np.int32)
+        got = drift_labels(y, 4, 6, "label_shift", 0.5)  # shift = 3
+        np.testing.assert_array_equal(got, [3, 0, 1, 2])
+        assert got.dtype == y.dtype
+
+    if HAVE_HYPOTHESIS:
+        @given(st.integers(2, 20), st.integers(0, 200), st.floats(0.0, 3.0))
+        @settings(max_examples=50, deadline=None)
+        def test_rotation_stays_in_range(self, n_classes, t, rate):
+            from repro.data.pipeline import drift_labels
+
+            y = np.arange(2 * n_classes, dtype=np.int32) % n_classes
+            got = drift_labels(y, n_classes, t, "label_shift", rate)
+            assert got.min() >= 0 and got.max() < n_classes
+            # rotation is a bijection on labels: class counts preserved
+            np.testing.assert_array_equal(
+                np.sort(np.bincount(got, minlength=n_classes)),
+                np.sort(np.bincount(y, minlength=n_classes)),
+            )
+
+
+# -------------------------------------------------- trust-gated dispatch
+def _drain(es, n):
+    out = []
+    for i in range(n):
+        ev = es.dispatch(0, client_id=None)
+        out.append((ev.client_id, ev.completion_time))
+    return out
+
+
+class TestTrustGatedDispatch:
+    def test_noop_gate_is_bit_for_bit(self):
+        # a gate that never blocks must replay the EXACT legacy draw
+        # sequence (the flag-off contract, exercised via the gated path)
+        from repro.stream.events import EventStream
+
+        plain = EventStream(16, "exponential", seed=7)
+        gated = EventStream(16, "exponential", seed=7,
+                            blocked_lookup=lambda m: False)
+        assert _drain(plain, 40) == _drain(gated, 40)
+
+    def test_blocked_client_never_dispatched(self):
+        from repro.stream.events import EventStream
+
+        es = EventStream(8, "exponential", seed=5,
+                         blocked_lookup=lambda m: m == 3)
+        ids = [es.dispatch(0).client_id for _ in range(64)]
+        assert 3 not in ids
+        assert len(set(ids)) > 1
+
+    def test_all_blocked_raises(self):
+        from repro.stream.events import EventStream
+
+        es = EventStream(4, "exponential", seed=5,
+                         blocked_lookup=lambda m: True)
+        with pytest.raises(RuntimeError, match="no eligible client"):
+            es.dispatch(0)
+
+    def test_flag_requires_trust(self):
+        spec = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            regime=AsyncRegime(flushes=2, trust_gated_dispatch=True),
+        )
+        with pytest.raises(SpecError, match="trust"):
+            validate(spec)
+
+    def test_flag_off_spec_run_unchanged_by_gate_plumbing(self):
+        # trust enabled but gate OFF vs gate ON with nothing quarantined:
+        # the quarantine mask stays all-False, so both runs are identical
+        from repro.stream.server import run_stream_experiment
+
+        base = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            model=ModelSpec("mlp"),
+            aggregation=AggregationSpec("br_drag"),
+            trust=TrustSpec(enabled=True),
+            regime=AsyncRegime(flushes=3, concurrency=4, buffer_capacity=3,
+                               local_steps=1, batch_size=4, eval_every=1),
+            seed=11,
+        )
+        gated = dataclasses.replace(
+            base, regime=dataclasses.replace(base.regime,
+                                             trust_gated_dispatch=True)
+        )
+        h_off = run_stream_experiment(base)
+        h_on = run_stream_experiment(gated)
+        assert h_off["accuracy"] == h_on["accuracy"]
+        assert h_off["staleness_mean"] == h_on["staleness_mean"]
+
+
+# --------------------------------------------------- churn / drift e2e
+class TestPopulationRegimesEndToEnd:
+    def test_churn_diurnal_spec_runs_and_shifts_the_schedule(self):
+        from repro.api import compile as api_compile
+
+        base = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            model=ModelSpec("mlp"),
+            aggregation=AggregationSpec("drag"),
+            regime=AsyncRegime(flushes=3, concurrency=4, buffer_capacity=3,
+                               local_steps=1, batch_size=4, eval_every=1),
+            seed=4,
+        )
+        churned = dataclasses.replace(
+            base,
+            regime=dataclasses.replace(base.regime, churn_period=6.0,
+                                       churn_duty=0.5, diurnal_amp=0.3,
+                                       diurnal_period=12.0),
+        )
+        h_base = api_compile(base).run()
+        h_churn = api_compile(churned).run()
+        assert len(h_churn["accuracy"]) == len(h_base["accuracy"])
+        assert all(np.isfinite(a) for a in h_churn["accuracy"])
+        # churn + diurnal stretch reshape the event schedule
+        assert h_churn["staleness_mean"] != h_base["staleness_mean"]
+
+    def test_drift_spec_runs_sync_and_async(self):
+        from repro.api import compile as api_compile
+
+        drifted_data = DataSpec(dataset="emnist_small", n_workers=8,
+                                drift="label_shift", drift_rate=0.5)
+        for regime in (
+            SyncRegime(rounds=2, n_selected=4, local_steps=1, batch_size=4,
+                       eval_every=1),
+            AsyncRegime(flushes=2, concurrency=4, buffer_capacity=3,
+                        local_steps=1, batch_size=4, eval_every=1),
+        ):
+            h = api_compile(ExperimentSpec(
+                data=drifted_data, model=ModelSpec("mlp"),
+                aggregation=AggregationSpec("fedavg"), regime=regime,
+            )).run()
+            assert all(np.isfinite(a) for a in h["accuracy"])
+
+    def test_compiled_megastep_rejects_population_regimes(self):
+        spec = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            regime=AsyncRegime(flushes=2, compiled=True, churn_period=6.0,
+                               churn_duty=0.5),
+        )
+        with pytest.raises(SpecError, match="compiled"):
+            validate(spec)
+
+    def test_validation_bounds(self):
+        base = DataSpec(dataset="emnist_small", n_workers=8)
+        with pytest.raises(SpecError):
+            validate(ExperimentSpec(
+                data=base, regime=AsyncRegime(flushes=2, churn_period=5.0,
+                                              churn_duty=1.5)))
+        with pytest.raises(SpecError):
+            validate(ExperimentSpec(
+                data=base, regime=AsyncRegime(flushes=2, diurnal_amp=0.5)))
+        with pytest.raises(SpecError):
+            validate(ExperimentSpec(
+                data=dataclasses.replace(base, drift="label_shift"),
+                regime=SyncRegime(rounds=2)))
+
+
+# ------------------------------------------------------------ mixed grid
+class TestMixedGrid:
+    def test_sync_group_plus_async_singleton(self):
+        async_spec = ExperimentSpec(
+            data=DataSpec(dataset="emnist_small", n_workers=8),
+            model=ModelSpec("mlp"),
+            aggregation=AggregationSpec("fedavg"),
+            regime=AsyncRegime(flushes=2, concurrency=4, buffer_capacity=3,
+                               local_steps=1, batch_size=4, eval_every=1),
+        )
+        specs = [small_spec(seed=0), small_spec(seed=1), async_spec]
+        result = run_sweep(specs, cache=ExecutableCache())
+        assert result.provenance["batched_cells"] == 2
+        assert result.provenance["sequential_cells"] == 1
+        assert all(h is not None for h in result)
+        assert len(result[2]["accuracy"]) > 0
